@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing.
+
+Every benchmark module exposes ``run() -> list[Row]``; benchmarks/run.py
+aggregates and prints the ``name,us_per_call,derived`` CSV. Scale with
+REPRO_BENCH_SCALE=quick|default|full (clients/rounds grow accordingly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "default")
+
+PRESETS = {
+    "quick": dict(clients=16, rounds=8, seeds=1, topk=8),
+    "default": dict(clients=32, rounds=20, seeds=2, topk=12),
+    "full": dict(clients=64, rounds=50, seeds=5, topk=24),
+}
+
+
+def preset() -> dict:
+    return dict(PRESETS[SCALE])
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed_rounds(sim, rounds: int):
+    """Run a simulator, returning (history, us_per_round)."""
+    t0 = time.time()
+    h = sim.run(rounds)
+    dt = time.time() - t0
+    return h, dt / rounds * 1e6
+
+
+def fmt(**kv) -> str:
+    parts = []
+    for k, v in kv.items():
+        if isinstance(v, float):
+            parts.append(f"{k}={v:.4g}")
+        else:
+            parts.append(f"{k}={v}")
+    return ";".join(parts)

@@ -1,0 +1,56 @@
+"""Paper Table IV: convergence & drift impact.
+
+Drift injected every ``drift_period`` rounds; report initial/peak/post-drift
+trough/recovery accuracies and rounds-to-recovery. Paper claim: ≥95% of
+peak accuracy recovered within 10 rounds post-drift.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, fmt, preset, timed_rounds
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+
+
+def run() -> list[Row]:
+    p = preset()
+    rounds = max(p["rounds"], 24)
+    drift_at = rounds // 2
+    sim = FedFogSimulator(
+        SimulatorConfig(
+            task="emnist",
+            num_clients=p["clients"],
+            rounds=rounds,
+            top_k=p["topk"],
+            drift_period=drift_at,
+            seed=0,
+        )
+    )
+    h, uspc = timed_rounds(sim, rounds)
+    acc = np.asarray(h["accuracy"])
+    peak_pre = float(acc[:drift_at].max())
+    # trough within 10 rounds of the shift; recovery measured FROM the trough
+    window_end = min(drift_at + 10, rounds)
+    trough_idx = drift_at + int(np.argmin(acc[drift_at:window_end]))
+    trough_post = float(acc[trough_idx])
+    recovery_target = 0.95 * peak_pre
+    rec_rounds = next(
+        (i for i in range(trough_idx, rounds) if acc[i] >= recovery_target),
+        None,
+    )
+    rec_in = (rec_rounds - trough_idx) if rec_rounds is not None else -1
+    return [
+        Row(
+            "tableIV/drift_impact",
+            uspc,
+            fmt(
+                initial=float(acc[0]),
+                peak_pre_drift=peak_pre,
+                trough_post_drift=trough_post,
+                final=float(acc[-1]),
+                rounds_to_95pct_recovery=rec_in,
+                paper_claim="recovery<=10",
+                claim_met=int(0 <= rec_in <= 10),
+            ),
+        )
+    ]

@@ -1,0 +1,54 @@
+"""Paper Fig. 10: batch-size and learning-rate sensitivity.
+
+Paper claims: best trade-off near batch 32; lr 0.01-ish best, with 0.001
+too slow and 0.1 unstable.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, fmt, preset, timed_rounds
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+
+
+def run() -> list[Row]:
+    p = preset()
+    rows = []
+    accs_b, accs_lr = {}, {}
+    for bs in (16, 32, 64, 128):
+        sim = FedFogSimulator(
+            SimulatorConfig(
+                task="emnist", num_clients=p["clients"], rounds=p["rounds"],
+                top_k=p["topk"], local_batch=bs, seed=0,
+            )
+        )
+        h, uspc = timed_rounds(sim, p["rounds"])
+        accs_b[bs] = h["final_accuracy"]
+        rows.append(
+            Row(
+                f"fig10/batch{bs}", uspc,
+                fmt(acc=h["final_accuracy"], latency_ms=h["mean_latency_ms"]),
+            )
+        )
+    for lr in (0.005, 0.05, 0.5):
+        sim = FedFogSimulator(
+            SimulatorConfig(
+                task="emnist", num_clients=p["clients"], rounds=p["rounds"],
+                top_k=p["topk"], lr=lr, seed=0,
+            )
+        )
+        h, uspc = timed_rounds(sim, p["rounds"])
+        accs_lr[lr] = h["final_accuracy"]
+        rows.append(Row(f"fig10/lr{lr}", uspc, fmt(acc=h["final_accuracy"])))
+    rows.append(
+        Row(
+            "fig10/summary",
+            0.0,
+            fmt(
+                best_batch=max(accs_b, key=accs_b.get),
+                best_lr=max(accs_lr, key=accs_lr.get),
+                mid_lr_best=int(
+                    accs_lr[0.05] >= max(accs_lr[0.005], accs_lr[0.5])
+                ),
+            ),
+        )
+    )
+    return rows

@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks: Pallas (interpret) correctness-path timings and
+the XLA-path (jnp oracle) timings that actually execute on this CPU host.
+
+On-TPU wall-times cannot be measured here; us_per_call is the CPU oracle
+timing (the kernels' interpret mode is a correctness tool, not a perf
+path). Roofline-relevant figures come from benchmarks/roofline.py instead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, fmt
+from repro.kernels.fedavg import fedavg_apply, fedavg_apply_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.models.layers import attention_xla_chunked
+
+
+def _time(fn, *args, iters=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> list[Row]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # attention: oracle vs chunked-xla (the dry-run path)
+    b, h, s, hd = 1, 4, 1024, 64
+    q = jax.random.normal(key, (b, h, s, hd))
+    k = jax.random.normal(key, (b, h, s, hd))
+    v = jax.random.normal(key, (b, h, s, hd))
+    t_ref = _time(jax.jit(lambda q, k, v: flash_attention_ref(q, k, v)), q, k, v)
+    qs, ks, vs = (z.swapaxes(1, 2) for z in (q, k, v))
+    pos = jnp.arange(s, dtype=jnp.int32)
+    t_chunk = _time(
+        jax.jit(
+            lambda q, k, v: attention_xla_chunked(q, k, v, pos, pos, -1)
+        ),
+        qs, ks, vs,
+    )
+    rows.append(
+        Row(
+            "kernels/attention_1k",
+            t_chunk,
+            fmt(ref_us=t_ref, chunked_us=t_chunk),
+        )
+    )
+
+    # wkv6 oracle
+    r = jax.random.normal(key, (1, 256, 4, 64, ))
+    kk = jax.random.normal(key, (1, 256, 4, 64)) * 0.5
+    vv = jax.random.normal(key, (1, 256, 4, 64))
+    w = jnp.exp(-jnp.exp(jax.random.uniform(key, (1, 256, 4, 64), minval=-3, maxval=0)))
+    u = jax.random.normal(key, (4, 64)) * 0.3
+    t_wkv = _time(jax.jit(lambda *a: wkv6_ref(*a)[0]), r, kk, vv, w, u)
+    rows.append(Row("kernels/wkv6_256", t_wkv, fmt(ref_us=t_wkv)))
+
+    # fedavg fused kernel (interpret) vs jnp oracle
+    upd = jax.random.normal(key, (32, 1 << 16))
+    base = jax.random.normal(key, (1 << 16,))
+    mask = jnp.ones((32,), bool)
+    wts = jnp.ones((32,))
+    t_ref = _time(
+        jax.jit(lambda *a: fedavg_apply_ref(*a)), upd, base, mask, wts
+    )
+    rows.append(Row("kernels/fedavg_32x64k", t_ref, fmt(oracle_us=t_ref)))
+    return rows

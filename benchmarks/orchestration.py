@@ -1,0 +1,83 @@
+"""Paper Table IX / Fig. 12: orchestration complexity.
+
+Measures the REAL wall-time of FedFog's jitted scheduling decision
+(Eqs. 1/2/3/7 + priority ranking) across client-pool sizes, against the
+modeled FogFaaS redeploy/poll loop. Fits scaling exponents: FedFog should
+be ~O(N log N) (near-linear), FogFaaS ~O(N²).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, SCALE, fmt
+from repro.core.scheduler import SchedulerConfig, schedule_round
+from repro.core.types import ClientTelemetry, init_scheduler_state
+from repro.sim.faas import FaasSimConfig, round_times_ms
+from repro.data.telemetry import TelemetryConfig, make_profiles
+
+SIZES = {"quick": (64, 256, 1024), "default": (64, 256, 1024, 4096),
+         "full": (64, 256, 1024, 4096, 16384)}
+
+
+def _time_scheduler(n: int, iters: int = 20) -> float:
+    cfg = SchedulerConfig(top_k=max(8, n // 4))
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    tel = ClientTelemetry(
+        cpu=jax.random.uniform(ks[0], (n,)),
+        mem=jax.random.uniform(ks[1], (n,)),
+        batt=jax.random.uniform(ks[2], (n,)),
+        energy=jax.random.uniform(ks[3], (n,)),
+    )
+    hist = jnp.abs(jax.random.normal(ks[4], (n, 32))) + 0.5
+    state = init_scheduler_state(n, 32)
+    fn = jax.jit(lambda s, t, h: schedule_round(s, t, h, cfg))
+    out = fn(state, tel, hist)  # compile
+    jax.block_until_ready(out.selection.mask)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(state, tel, hist)
+    jax.block_until_ready(out.selection.mask)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run() -> list[Row]:
+    sizes = SIZES[SCALE]
+    rows, fed_us, fog_ms = [], [], []
+    faas = FaasSimConfig()
+    for n in sizes:
+        us = _time_scheduler(n)
+        fed_us.append(us)
+        prof = make_profiles(TelemetryConfig(num_clients=n))
+        _, _, orch = round_times_ms(
+            faas, prof, jnp.ones(n, bool), jnp.zeros(n, bool), 1e9, 1e6, 1e6,
+            policy="fogfaas",
+        )
+        fog_ms.append(float(orch))
+        rows.append(
+            Row(
+                f"tableIX/N{n}",
+                us,
+                fmt(fedfog_sched_us=us, fogfaas_orch_ms=float(orch)),
+            )
+        )
+    ns = np.asarray(sizes, float)
+    fed_alpha = float(np.polyfit(np.log(ns), np.log(np.asarray(fed_us)), 1)[0])
+    fog_alpha = float(np.polyfit(np.log(ns), np.log(np.asarray(fog_ms)), 1)[0])
+    rows.append(
+        Row(
+            "tableIX/summary",
+            0.0,
+            fmt(
+                fedfog_alpha=fed_alpha,
+                fogfaas_alpha=fog_alpha,
+                paper_claim="fedfog~NlogN(fogfaas~N^2)",
+                claim_met=int(fed_alpha < 1.5 and fog_alpha > 1.7),
+            ),
+        )
+    )
+    return rows

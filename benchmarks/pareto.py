@@ -1,0 +1,52 @@
+"""Paper Fig. 2: accuracy-latency Pareto frontier.
+
+Sweeps the participation budget for FedFog / FogFaaS / RCS; each point is
+(mean latency, final accuracy). Paper claim: FedFog dominates (higher
+accuracy at lower latency).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, fmt, preset, timed_rounds
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+
+
+def run() -> list[Row]:
+    p = preset()
+    budgets = [max(4, p["clients"] // 6), p["clients"] // 3, p["clients"] // 2]
+    rows = []
+    points = {}
+    for policy in ("fedfog", "rcs", "fogfaas"):
+        for k in budgets:
+            sim = FedFogSimulator(
+                SimulatorConfig(
+                    task="emnist", num_clients=p["clients"],
+                    rounds=p["rounds"], top_k=k, policy=policy, seed=0,
+                )
+            )
+            h, uspc = timed_rounds(sim, p["rounds"])
+            points.setdefault(policy, []).append(
+                (h["mean_latency_ms"], h["final_accuracy"])
+            )
+            rows.append(
+                Row(
+                    f"fig2/{policy}/k{k}",
+                    uspc,
+                    fmt(latency_ms=h["mean_latency_ms"], acc=h["final_accuracy"]),
+                )
+            )
+    # dominance check: for each fedfog point, does any other policy point
+    # have BOTH lower latency and higher accuracy?
+    dominated = 0
+    for lat, acc in points["fedfog"]:
+        for pol in ("rcs", "fogfaas"):
+            if any(l < lat and a > acc for l, a in points[pol]):
+                dominated += 1
+                break
+    rows.append(
+        Row(
+            "fig2/summary",
+            0.0,
+            fmt(fedfog_points_dominated=dominated, of=len(points["fedfog"])),
+        )
+    )
+    return rows

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV per the repo contract. Scale with
+REPRO_BENCH_SCALE=quick|default|full. Select suites with
+``python -m benchmarks.run [suite ...]``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SUITES = [
+    "threshold_sensitivity",  # Table II
+    "drift_recovery",  # Table IV
+    "robustness",  # Table V
+    "ablation",  # Table VI
+    "framework_comparison",  # Fig 5/6
+    "scalability",  # Fig 8/9
+    "orchestration",  # Table IX / Fig 12
+    "pareto",  # Fig 2
+    "privacy_tradeoff",  # Fig 3
+    "hyperparam_sensitivity",  # Fig 10
+    "sim_vs_real",  # Tables VII/VIII
+    "kernels_bench",
+    "roofline",  # §Roofline (reads results/dryrun)
+]
+
+
+def main() -> None:
+    import importlib
+
+    wanted = sys.argv[1:] or SUITES
+    print("name,us_per_call,derived")
+    failures = 0
+    for suite in wanted:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{suite}")
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception as e:  # keep the harness going
+            failures += 1
+            print(f"{suite}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(
+            f"# {suite} done in {time.time() - t0:.1f}s", file=sys.stderr, flush=True
+        )
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

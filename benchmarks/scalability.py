@@ -1,0 +1,67 @@
+"""Paper Fig. 8/9: energy, cold starts, latency and accuracy vs client
+count for FedFog vs FogFaaS. Paper claims FedFog's energy grows ~O(N log N)
+vs FogFaaS ~O(N²), and cold-start overhead ~O(N) vs super-linear.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, SCALE, fmt, preset, timed_rounds
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+
+SIZES = {"quick": (8, 16, 32), "default": (16, 32, 64), "full": (16, 32, 64, 128)}
+
+
+def _fit_power(ns, ys):
+    """Least-squares exponent of y ~ n^alpha."""
+    ln_n, ln_y = np.log(ns), np.log(np.maximum(ys, 1e-9))
+    a, _ = np.polyfit(ln_n, ln_y, 1)
+    return float(a)
+
+
+def run() -> list[Row]:
+    p = preset()
+    sizes = SIZES[SCALE]
+    rows = []
+    series = {("fedfog", "energy"): [], ("fogfaas", "energy"): [],
+              ("fedfog", "cold"): [], ("fogfaas", "cold"): [],
+              ("fedfog", "latency"): [], ("fogfaas", "latency"): []}
+    for n in sizes:
+        for policy in ("fedfog", "fogfaas"):
+            sim = FedFogSimulator(
+                SimulatorConfig(
+                    task="emnist", num_clients=n, rounds=p["rounds"],
+                    top_k=max(4, n // 3) if policy == "fedfog" else None,
+                    policy=policy, seed=0,
+                )
+            )
+            h, uspc = timed_rounds(sim, p["rounds"])
+            series[(policy, "energy")].append(h["total_energy_j"])
+            series[(policy, "cold")].append(h["total_cold_starts"] + 1)
+            series[(policy, "latency")].append(h["mean_latency_ms"])
+            rows.append(
+                Row(
+                    f"fig8/{policy}/N{n}",
+                    uspc,
+                    fmt(
+                        energy_j=h["total_energy_j"],
+                        cold=h["total_cold_starts"],
+                        latency_ms=h["mean_latency_ms"],
+                        acc=h["final_accuracy"],
+                    ),
+                )
+            )
+    ns = np.asarray(sizes, float)
+    rows.append(
+        Row(
+            "fig8/scaling_exponents",
+            0.0,
+            fmt(
+                fedfog_energy_alpha=_fit_power(ns, series[("fedfog", "energy")]),
+                fogfaas_energy_alpha=_fit_power(ns, series[("fogfaas", "energy")]),
+                fedfog_cold_alpha=_fit_power(ns, series[("fedfog", "cold")]),
+                fogfaas_cold_alpha=_fit_power(ns, series[("fogfaas", "cold")]),
+            ),
+        )
+    )
+    return rows

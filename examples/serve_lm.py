@@ -1,0 +1,13 @@
+"""Serving example: batched prefill + decode with any assigned --arch.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b --gen 32
+
+Runs the reduced (smoke-scale) config on CPU; the same driver serves full
+configs on a TPU pod via launch/serve.py --scale full (sequence-sharded KV
+for long-context cells, see DESIGN.md §4).
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline markdown tables from
+results/dryrun/*.json (and the §Perf comparison rows from results/perf/).
+
+    PYTHONPATH=src python scripts/make_tables.py > results/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import analyze_cell, model_flops_total  # noqa: E402
+from repro.configs import ARCH_IDS  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+
+DRY = os.path.join(os.path.dirname(__file__), "../results/dryrun")
+PERF = os.path.join(os.path.dirname(__file__), "../results/perf")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b:.0f}"
+
+
+def dryrun_table(mesh):
+    title = {"single": "single pod (16×16, 256 chips)", "multi": "multi-pod (2×16×16, 512 chips)"}[mesh]
+    print(f"\n### Dry-run matrix — {title}\n")
+    print("| arch | shape | status | compile_s | temp GB/dev | dot-FLOPs/dev |"
+          " coll bytes/dev | plan (C×zero×model) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = os.path.join(DRY, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(p):
+                print(f"| {arch} | {shape} | MISSING | | | | | |")
+                continue
+            r = load(p)
+            if r["status"] == "SKIP":
+                print(f"| {arch} | {shape} | SKIP — {r['skip_reason'][:45]} |"
+                      " | | | | |")
+                continue
+            plan = r.get("plan", {})
+            plan_s = (f"{plan.get('slots','?')}×{plan.get('zero','?')}×"
+                      f"{'·'.join(map(str, plan.get('model_split', [])))}"
+                      f"{'F' if plan.get('fsdp') else ''}")
+            print(
+                f"| {arch} | {shape} | {r['status']} | {r.get('compile_s','')} |"
+                f" {r.get('memory',{}).get('temp_size_in_bytes',0)/1e9:.1f} |"
+                f" {fmt_bytes(r.get('dot_flops',0))} |"
+                f" {fmt_bytes(r.get('collective_total',0))} | {plan_s} |"
+            )
+
+
+def roofline_table():
+    print("\n### Roofline — single pod (16×16, 256 chips, v5e constants)\n")
+    print("| arch | shape | compute s | memory s (out-only) | collective s |"
+          " dominant | MODEL_FLOPS | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = os.path.join(DRY, f"{arch}__{shape}__single.json")
+            if not os.path.exists(p):
+                continue
+            r = load(p)
+            if r["status"] != "OK":
+                print(f"| {arch} | {shape} | SKIP | | | | | | |")
+                continue
+            # prefer the outputs-only memory metric when present
+            if "hbm_bytes_out" in r:
+                r = dict(r)
+                r["hbm_bytes"] = r["hbm_bytes_out"]
+            a = analyze_cell(r)
+            print(
+                f"| {arch} | {shape} | {a['t_compute']:.3g} |"
+                f" {a['t_memory']:.3g} | {a['t_collective']:.3g} |"
+                f" {a['dominant']} | {a['model_flops']:.2e} |"
+                f" {a['useful_ratio']:.3f} | {a['roofline_fraction']:.4f} |"
+            )
+
+
+def perf_rows():
+    if not os.path.isdir(PERF):
+        return
+    print("\n### §Perf variant measurements (hillclimb runs)\n")
+    print("| variant | status | temp GB/dev | dot-FLOPs/dev | coll bytes/dev |"
+          " all-to-all | all-reduce | all-gather |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in sorted(glob.glob(os.path.join(PERF, "*"))):
+        for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+            r = load(p)
+            cb = r.get("collective_bytes", {})
+            print(
+                f"| {os.path.basename(d)} | {r['status']} |"
+                f" {r.get('memory',{}).get('temp_size_in_bytes',0)/1e9:.1f} |"
+                f" {fmt_bytes(r.get('dot_flops',0))} |"
+                f" {fmt_bytes(r.get('collective_total',0))} |"
+                f" {fmt_bytes(cb.get('all-to-all',0))} |"
+                f" {fmt_bytes(cb.get('all-reduce',0))} |"
+                f" {fmt_bytes(cb.get('all-gather',0))} |"
+            )
+
+
+if __name__ == "__main__":
+    dryrun_table("single")
+    dryrun_table("multi")
+    roofline_table()
+    perf_rows()

@@ -1,0 +1,43 @@
+"""Architecture registry: the 10 assigned archs + the paper's own FL tasks.
+
+``get_config(arch_id)`` returns the exact assigned ModelConfig;
+``get_skips(arch_id)`` the documented shape skips; ``ARCH_IDS`` the roster.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "yi-9b": "repro.configs.yi_9b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).config()
+
+
+def get_skips(arch_id: str) -> dict[str, str]:
+    return dict(getattr(_module(arch_id), "SKIP_SHAPES", {}))
+
+
+def get_reduced(arch_id: str, **overrides) -> ModelConfig:
+    return get_config(arch_id).reduced(**overrides)

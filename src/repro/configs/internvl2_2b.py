@@ -1,0 +1,28 @@
+"""internvl2-2b — InternViT frontend + InternLM2 backbone.
+[arXiv:2404.16821; hf]
+
+24L d_model=2048 16H (GQA kv=8, head_dim 128) d_ff=8192 vocab=92553.
+The ViT frontend is a STUB per the brief: input_specs supplies precomputed
+patch embeddings occupying 1/8 of each sequence. Full attention ->
+long_500k skipped.
+"""
+from repro.models.config import Family, ModelConfig
+
+ARCH_ID = "internvl2-2b"
+SKIP_SHAPES = {"long_500k": "pure full-attention arch (DESIGN.md §5)"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family=Family.VLM,
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=92553,
+        embed_frontend_fraction=0.125,
+        rope_theta_global=1_000_000.0,
+    )

@@ -1,0 +1,25 @@
+"""llama3.2-1b — small llama3. [hf:meta-llama/Llama-3.2-1B; unverified]
+
+16L d_model=2048 32H (GQA kv=8, head_dim 64) d_ff=8192 vocab=128256.
+Tied embeddings (as released). Full attention -> long_500k skipped.
+"""
+from repro.models.config import Family, ModelConfig
+
+ARCH_ID = "llama3.2-1b"
+SKIP_SHAPES = {"long_500k": "pure full-attention arch (DESIGN.md §5)"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family=Family.DENSE,
+        num_layers=16,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=128256,
+        tie_embeddings=True,
+        rope_theta_global=500_000.0,
+    )

@@ -1,0 +1,25 @@
+"""qwen2.5-14b — dense GQA with QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]
+
+48L d_model=5120 40H (GQA kv=8, head_dim 128) d_ff=13824 vocab=152064.
+Full causal attention (no windowing) -> long_500k cell is skipped.
+"""
+from repro.models.config import Family, ModelConfig
+
+ARCH_ID = "qwen2.5-14b"
+SKIP_SHAPES = {"long_500k": "pure full-attention arch (DESIGN.md §5)"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family=Family.DENSE,
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=13824,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_theta_global=1_000_000.0,
+    )

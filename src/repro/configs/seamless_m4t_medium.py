@@ -1,0 +1,28 @@
+"""seamless-m4t-medium — encoder-decoder multimodal backbone.
+[arXiv:2308.11596; hf]
+
+12L encoder + 12L decoder, d_model=1024 16H (kv=16, head_dim 64)
+d_ff=4096 vocab=256206. The speech/text frontend is a STUB per the brief:
+input_specs supplies precomputed frame embeddings (B, S_src, d_model).
+long_500k skipped (enc-dec translation family; see DESIGN.md §5).
+"""
+from repro.models.config import Family, ModelConfig
+
+ARCH_ID = "seamless-m4t-medium"
+SKIP_SHAPES = {"long_500k": "enc-dec translation family (DESIGN.md §5)"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family=Family.ENCDEC,
+        num_layers=12,
+        num_encoder_layers=12,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=256206,
+        embed_frontend_fraction=1.0,
+    )

@@ -1,0 +1,108 @@
+"""Assigned input-shape set + abstract input-spec builders.
+
+Every LM arch is paired with four cells:
+
+    train_4k     seq_len=4096,   global_batch=256   (train_step)
+    prefill_32k  seq_len=32768,  global_batch=32    (serve: prefill)
+    decode_32k   seq_len=32768,  global_batch=128   (serve: 1 new token,
+                                                     KV cache of seq_len)
+    long_500k    seq_len=524288, global_batch=1     (long-context decode;
+                                                     sub-quadratic archs only)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins only — weak-type
+correct, shardable, zero allocation — exactly what ``jit(...).lower``
+consumes in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.models.config import Family, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# Source length for encoder-decoder decode cells (cross-attention KV).
+ENCDEC_DECODE_SRC_LEN = 4_096
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def vlm_split(cfg: ModelConfig, seq_len: int) -> tuple[int, int]:
+    """(img_len, text_len) for VLM cells — frontend stub supplies img_len
+    precomputed patch embeddings."""
+    frac = cfg.embed_frontend_fraction or 0.125
+    img = max(int(seq_len * frac) // 8 * 8, 8)
+    return img, seq_len - img
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract train/prefill batch for one (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    extra = 1 if shape.kind == "train" else 0  # +1 token for target shift
+    if cfg.family is Family.ENCDEC:
+        src = s // 2 if shape.kind == "train" else s
+        tgt = s // 2 if shape.kind == "train" else s
+        if shape.kind == "prefill":
+            # prefill cell: encoder consumes the full 32k source; a short
+            # target prefix is teacher-forced into the self-cache.
+            tgt = 128
+        return {
+            "frames": _sds((b, src, cfg.d_model), cfg.compute_dtype),
+            "tokens": _sds((b, tgt + extra), jnp.int32),
+        }
+    if cfg.family is Family.VLM:
+        img, text = vlm_split(cfg, s)
+        return {
+            "tokens": _sds((b, text + extra), jnp.int32),
+            "patch_embeds": _sds((b, img, cfg.d_model), cfg.compute_dtype),
+        }
+    return {"tokens": _sds((b, s + extra), jnp.int32)}
+
+
+def cache_specs(model: Model, shape: ShapeSpec) -> dict:
+    """Abstract KV/SSM cache for decode cells (via eval_shape: no alloc)."""
+    cfg = model.cfg
+    kw = {}
+    if cfg.family is Family.ENCDEC:
+        kw["src_len"] = ENCDEC_DECODE_SRC_LEN
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, **kw)
+    )
+
+
+def decode_token_specs(shape: ShapeSpec) -> jax.ShapeDtypeStruct:
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeSpec, key) -> dict:
+    """Materialize a real batch with the given spec (smoke tests/examples)."""
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            key, sub = jax.random.split(key)
+            out[k] = jax.random.randint(sub, v.shape, 0, cfg.vocab_size)
+        else:
+            key, sub = jax.random.split(key)
+            out[k] = jax.random.normal(sub, v.shape, jnp.float32).astype(v.dtype)
+    return out

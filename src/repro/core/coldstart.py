@@ -1,0 +1,82 @@
+"""Cold-start delay model — paper Eq. 4 + FogFaaS-style container cache.
+
+``δ_i = δ_cold`` on first-time (or evicted-container) invocation,
+``δ_i = δ_warm`` otherwise.
+
+The paper keeps containers warm between rounds and credits FedFog's
+scheduler with reducing cold-start frequency through "intelligent container
+caching and predictive scheduling" (§IV.F). We model that concretely:
+
+  * every selected client's container becomes warm after it runs;
+  * a warm container survives at most ``keep_alive_rounds`` rounds without
+    being invoked (the serverless platform's keep-alive), after which it is
+    evicted and the next invocation pays ``δ_cold`` again;
+  * an optional LRU capacity caps how many containers the platform keeps
+    warm simultaneously (capacity pressure at the fog tier).
+
+On the TPU-pod mapping (DESIGN.md §2, adaptation #2) a "cold start" is a
+client group re-entering after preemption: recompile + checkpoint restore.
+The two-level δ model is unchanged; only the constants differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.types import Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ColdStartConfig:
+    delta_cold_ms: float = 2000.0  # paper §III.G worked example
+    delta_warm_ms: float = 200.0
+    keep_alive_rounds: int = 3
+    warm_capacity: int | None = None  # max simultaneously-warm containers
+
+
+def invocation_delay(warm: Array, config: ColdStartConfig) -> Array:
+    """Eq. 4: per-client delay in ms given current container state."""
+    return jnp.where(warm, config.delta_warm_ms, config.delta_cold_ms).astype(
+        jnp.float32
+    )
+
+
+def count_cold_starts(mask: Array, warm: Array) -> Array:
+    """Number of selected clients paying δ_cold this round."""
+    return jnp.sum((mask & ~warm).astype(jnp.int32))
+
+
+def update_container_cache(
+    warm: Array,
+    last_used: Array,
+    mask: Array,
+    round_index: Array,
+    config: ColdStartConfig,
+) -> tuple[Array, Array]:
+    """Advance the container cache one round.
+
+    Args:
+      warm: (N,) bool container state entering the round.
+      last_used: (N,) int32 last round each client was invoked (-1 = never).
+      mask: (N,) bool — clients invoked this round.
+      round_index: () int32 current round.
+
+    Returns:
+      (new_warm, new_last_used).
+    """
+    new_last_used = jnp.where(mask, round_index, last_used).astype(jnp.int32)
+    # Invoked clients end the round warm; others stay warm only within the
+    # keep-alive window.
+    age = round_index - new_last_used
+    within_keep_alive = (new_last_used >= 0) & (age < config.keep_alive_rounds)
+    new_warm = mask | (warm & within_keep_alive)
+
+    if config.warm_capacity is not None:
+        # LRU eviction: keep the `warm_capacity` most-recently-used warm
+        # containers. Rank by recency (higher last_used = more recent).
+        recency = jnp.where(new_warm, new_last_used, jnp.int32(-2**30))
+        order = jnp.argsort(-recency, stable=True)
+        rank = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+        new_warm = new_warm & (rank < config.warm_capacity)
+    return new_warm, new_last_used

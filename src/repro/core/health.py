@@ -1,0 +1,27 @@
+"""Health scoring — paper Eq. 1.
+
+``H(c_i) = a1 * CPU_i + a2 * MEM_i + a3 * BATT_i`` with ``a1+a2+a3 = 1``.
+
+Inputs are already-normalized resource availabilities in [0, 1]; the output
+is a scalar health score per client, also in [0, 1]. Vectorized over the
+whole client registry — shape (N,).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import Array, ClientTelemetry
+
+
+def health_score(telemetry: ClientTelemetry, alpha: Array) -> Array:
+    """Eq. 1: convex combination of CPU / MEM / BATT availability.
+
+    Args:
+      telemetry: per-client readings, each field shape (N,).
+      alpha: (3,) weights ``(a1, a2, a3)``, summing to 1.
+
+    Returns:
+      (N,) float32 health scores in [0, 1].
+    """
+    stacked = jnp.stack([telemetry.cpu, telemetry.mem, telemetry.batt], axis=-1)
+    return jnp.asarray(stacked @ alpha.astype(stacked.dtype), jnp.float32)

@@ -1,0 +1,91 @@
+"""Client selection — paper Eq. 3 (+ top-K utility gating, §V.A).
+
+``C_t = { c_i in C  |  H(c_i) > θ_h  ∧  E(c_i) > θ_e  ∧  D(c_i) < θ_d }``
+
+The threshold gate is the paper's Eq. 3 verbatim (strict inequalities, as in
+the worked example where H=0.65 > θ_h=0.6 selects). On top of it FedFog's
+scheduler keeps only the top-K clients by utility (Eq. 7) when the round has
+a participation budget — the priority-queue behaviour of §V.A.
+
+Everything is shape-static: the output is a boolean mask over the fixed
+client registry, never a dynamic-length set — which is exactly what the
+masked weighted-FedAvg collective (core/aggregation.py) consumes, and what
+keeps the whole scheduler inside one jitted program.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import Array, SelectionResult, Thresholds
+from repro.core.utility import utility_ranking, utility_score
+
+
+def threshold_mask(
+    health: Array, energy: Array, drift: Array, thresholds: Thresholds
+) -> Array:
+    """Eq. 3: strict-threshold eligibility gate. Returns (N,) bool."""
+    return (
+        (health > thresholds.health)
+        & (energy > thresholds.energy)
+        & (drift < thresholds.drift)
+    )
+
+
+def topk_mask(utility: Array, eligible: Array, k: int | None) -> Array:
+    """Keep at most ``k`` eligible clients, preferring higher utility.
+
+    ``k=None`` (or k >= N) keeps every eligible client. Implemented with a
+    rank-compare rather than a scatter so it stays O(N log N) and
+    shard-friendly.
+    """
+    if k is None or k >= utility.shape[0]:
+        return eligible
+    # Push ineligible clients to -inf so they never crowd out eligible ones.
+    masked_u = jnp.where(eligible, utility, -jnp.inf)
+    order = jnp.argsort(-masked_u, stable=True)
+    rank = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    return eligible & (rank < k)
+
+
+def select_clients(
+    health: Array,
+    energy: Array,
+    drift: Array,
+    thresholds: Thresholds,
+    beta: Array,
+    k: int | None = None,
+) -> SelectionResult:
+    """Full FedFog selection: Eq. 3 gate, Eq. 7 utility, top-K budget.
+
+    Args:
+      health/energy/drift: (N,) per-client scores.
+      thresholds: θ_h, θ_e, θ_d (θ_e may be per-client — Eq. 10 adaptivity).
+      beta: (3,) utility weights.
+      k: optional participation budget (top-K by utility).
+
+    Returns:
+      SelectionResult with a static-shape (N,) participation mask.
+    """
+    eligible = threshold_mask(health, energy, drift, thresholds)
+    utility = utility_score(health, energy, drift, beta)
+    mask = topk_mask(utility, eligible, k)
+    order = utility_ranking(utility)
+    return SelectionResult(
+        mask=mask,
+        utility=utility,
+        health=health,
+        drift=drift,
+        order=order,
+        num_selected=jnp.sum(mask.astype(jnp.int32)),
+    )
+
+
+def random_selection_mask(key, num_clients: int, k: int) -> Array:
+    """The RCS baseline (§IV.B): sample k clients uniformly, no telemetry."""
+    import jax
+
+    perm = jax.random.permutation(key, num_clients)
+    rank = jnp.zeros((num_clients,), jnp.int32).at[perm].set(
+        jnp.arange(num_clients, dtype=jnp.int32)
+    )
+    return rank < k

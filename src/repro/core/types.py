@@ -1,0 +1,136 @@
+"""Core value types for the FedFog orchestration layer.
+
+Everything is vectorized over a static client population of size ``N``
+(``num_clients``). Fields are plain ``jnp`` arrays so the whole scheduler is
+jit/pjit-safe and can live on-device next to the training step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _pytree_dataclass(cls):
+    """Register a frozen dataclass as a JAX pytree node."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+
+    def flatten(obj):
+        return [getattr(obj, name) for name in fields], None
+
+    def unflatten(_, children):
+        return cls(**dict(zip(fields, children)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@_pytree_dataclass
+class ClientTelemetry:
+    """Raw per-client resource readings, each shape ``(N,)`` in [0, 1].
+
+    Mirrors the paper's Eq. 1 inputs: CPU availability, memory availability,
+    battery level — plus the normalized energy level E(c_i) used by Eq. 3/7.
+    """
+
+    cpu: Array
+    mem: Array
+    batt: Array
+    energy: Array
+
+    @property
+    def num_clients(self) -> int:
+        return self.cpu.shape[0]
+
+
+@_pytree_dataclass
+class SchedulerWeights:
+    """The (alpha, beta) weight vectors of Eq. 1 and Eq. 7."""
+
+    alpha: Array  # (3,) health weights: cpu, mem, batt. Sum to 1.
+    beta: Array  # (3,) utility weights: health, energy, drift. Sum to 1.
+
+
+@_pytree_dataclass
+class Thresholds:
+    """Selection thresholds of Eq. 3. theta_e may be scalar or per-client (N,)."""
+
+    health: Array  # theta_h
+    energy: Array  # theta_e  (adaptive per-client under Eq. 10)
+    drift: Array  # theta_d
+
+
+@_pytree_dataclass
+class SchedulerState:
+    """Carried across rounds by the scheduler.
+
+    prev_hist:    (N, V) previous-round empirical distributions (Eq. 2 input).
+    theta_e:      (N,) adaptive per-client energy thresholds (Eq. 10).
+    warm:         (N,) bool — container warm/cold state (Eq. 4).
+    last_used:    (N,) int32 — round index of last invocation (LRU eviction).
+    energy_spent: (N,) cumulative Joules (sim units) per client.
+    round_index:  () int32.
+    """
+
+    prev_hist: Array
+    theta_e: Array
+    warm: Array
+    last_used: Array
+    energy_spent: Array
+    round_index: Array
+
+
+@_pytree_dataclass
+class SelectionResult:
+    """Output of one scheduling decision.
+
+    mask:     (N,) bool — Eq. 3 threshold gate ∧ top-K utility gate.
+    utility:  (N,) float — Eq. 7 scores.
+    health:   (N,) float — Eq. 1 scores.
+    drift:    (N,) float — Eq. 2 scores.
+    order:    (N,) int32 — client indices sorted by descending utility
+              (the paper's priority queue, §V.A).
+    num_selected: () int32.
+    """
+
+    mask: Array
+    utility: Array
+    health: Array
+    drift: Array
+    order: Array
+    num_selected: Array
+
+
+def validate_weights(alpha: Any, beta: Any, atol: float = 1e-5) -> None:
+    """Host-side sanity check that weight vectors are convex combinations."""
+    import numpy as np
+
+    a = np.asarray(alpha, dtype=np.float64)
+    b = np.asarray(beta, dtype=np.float64)
+    if a.shape != (3,) or b.shape != (3,):
+        raise ValueError(f"alpha/beta must be shape (3,), got {a.shape}/{b.shape}")
+    if abs(float(a.sum()) - 1.0) > atol:
+        raise ValueError(f"alpha must sum to 1, got {a.sum()}")
+    if abs(float(b.sum()) - 1.0) > atol:
+        raise ValueError(f"beta must sum to 1, got {b.sum()}")
+    if (a < 0).any() or (b < 0).any():
+        raise ValueError("alpha/beta must be non-negative")
+
+
+def init_scheduler_state(
+    num_clients: int, hist_bins: int, theta_e0: float = 0.5
+) -> SchedulerState:
+    """Fresh scheduler state: uniform histograms, cold containers."""
+    return SchedulerState(
+        prev_hist=jnp.full((num_clients, hist_bins), 1.0 / hist_bins, jnp.float32),
+        theta_e=jnp.full((num_clients,), theta_e0, jnp.float32),
+        warm=jnp.zeros((num_clients,), bool),
+        last_used=jnp.full((num_clients,), -1, jnp.int32),
+        energy_spent=jnp.zeros((num_clients,), jnp.float32),
+        round_index=jnp.zeros((), jnp.int32),
+    )

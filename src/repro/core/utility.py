@@ -1,0 +1,44 @@
+"""Scheduler utility function — paper Eq. 7.
+
+``U(c_i) = b1 * H(c_i) + b2 * E(c_i) - b3 * D(c_i)``  with  ``b1+b2+b3 = 1``.
+
+Higher health/energy raise the utility; drift lowers it. FedFog ranks
+clients by utility (a priority queue in the paper, §V.A — here a sort on
+device, O(N log N) worst case exactly as the paper analyzes, amortized
+near-linear because utilities are stable across rounds and XLA's sort on
+nearly-sorted input is cheap).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import Array
+
+
+def utility_score(health: Array, energy: Array, drift: Array, beta: Array) -> Array:
+    """Eq. 7 — vectorized over clients.
+
+    Args:
+      health: (N,) Eq. 1 scores.
+      energy: (N,) normalized energy levels.
+      drift:  (N,) Eq. 2 scores.
+      beta:   (3,) weights (b1, b2, b3) summing to 1.
+
+    Returns:
+      (N,) float32 utility scores.
+    """
+    beta = beta.astype(jnp.float32)
+    return (
+        beta[0] * health.astype(jnp.float32)
+        + beta[1] * energy.astype(jnp.float32)
+        - beta[2] * drift.astype(jnp.float32)
+    )
+
+
+def utility_ranking(utility: Array) -> Array:
+    """Descending-utility client ordering (the paper's priority queue).
+
+    Returns (N,) int32 indices; ``ranking[0]`` is the highest-priority client.
+    Ties broken by client index (stable sort) for determinism.
+    """
+    return jnp.argsort(-utility, stable=True).astype(jnp.int32)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import FedDataConfig
+from repro.data.telemetry import TelemetryConfig, init_telemetry, make_profiles
+
+__all__ = ["FedDataConfig", "TelemetryConfig", "init_telemetry", "make_profiles"]

@@ -1,0 +1,123 @@
+"""Deterministic synthetic federated data — fully PRNG-derived, no disk.
+
+Non-IID structure follows the standard Dirichlet-partition protocol: each
+logical client owns a mixture over K latent *domains*; each domain is a
+distinct unigram token distribution (LM tasks) or class prior (vision
+tasks). Data drift (paper §IV.A "drift engine") re-draws a client's mixture
+at configured rounds, which moves its token/label histogram and therefore
+its Eq. 2 KL score — exactly the signal FedFog's scheduler gates on.
+
+Everything is a pure function of (seed, client_id, round) so any client's
+round batch can be regenerated anywhere — which is what makes the federated
+pipeline trivially elastic and restart-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FedDataConfig:
+    vocab_size: int = 256
+    num_domains: int = 8
+    dirichlet_alpha: float = 0.5  # lower = more non-IID
+    drift_period: int = 0  # re-draw mixtures every k rounds (0 = never)
+    drift_fraction: float = 0.3  # fraction of clients that drift
+    seed: int = 0
+
+
+def _domain_logits(cfg: FedDataConfig) -> Array:
+    """(K, V) unigram logits per latent domain (deterministic)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    return jax.random.normal(key, (cfg.num_domains, cfg.vocab_size)) * 2.0
+
+
+def client_mixture(cfg: FedDataConfig, client_id: Array, round_idx: Array) -> Array:
+    """(K,) Dirichlet mixture for a client, re-drawn on drift epochs."""
+    if cfg.drift_period:
+        epoch = round_idx // cfg.drift_period
+        # only a fraction of clients drift at each epoch boundary
+        drift_key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 1), epoch)
+        drifts = jax.random.bernoulli(
+            jax.random.fold_in(drift_key, client_id), cfg.drift_fraction
+        )
+        eff_epoch = jnp.where(drifts, epoch, 0)
+    else:
+        eff_epoch = jnp.zeros((), jnp.int32)
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 2), client_id), eff_epoch
+    )
+    return jax.random.dirichlet(key, jnp.full((cfg.num_domains,), cfg.dirichlet_alpha))
+
+
+def client_token_logits(cfg: FedDataConfig, client_id: Array, round_idx: Array) -> Array:
+    """(V,) unigram logits of one client at one round."""
+    mix = client_mixture(cfg, client_id, round_idx)
+    probs = jax.nn.softmax(_domain_logits(cfg), axis=-1)  # (K, V)
+    return jnp.log(mix @ probs + 1e-9)
+
+
+def client_tokens(
+    cfg: FedDataConfig, client_id: Array, round_idx: Array, key: Array,
+    batch: int, seq_len: int,
+) -> Array:
+    """(batch, seq_len+1) int32 token sequences for a client's round batch.
+
+    A first-order structure is added on top of the unigram prior (tokens
+    repeat-shift within a window) so language-model training has signal.
+    """
+    logits = client_token_logits(cfg, client_id, round_idx)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, client_id))
+    toks = jax.random.categorical(k1, logits, shape=(batch, seq_len + 1))
+    # structured component: with prob 0.5, copy the token 2 positions back
+    copy_mask = jax.random.bernoulli(k2, 0.5, toks.shape)
+    shifted = jnp.roll(toks, 2, axis=1)
+    toks = jnp.where(copy_mask, shifted, toks)
+    return toks.astype(jnp.int32)
+
+
+def client_histogram(
+    cfg: FedDataConfig, client_id: Array, round_idx: Array, bins: int
+) -> Array:
+    """(bins,) expected token histogram — the scheduler's Eq. 2 input.
+
+    Uses the exact mixture distribution (not a sample), folded into bins.
+    """
+    probs = jnp.exp(client_token_logits(cfg, client_id, round_idx))
+    pad = (-cfg.vocab_size) % bins
+    if pad:
+        probs = jnp.concatenate([probs, jnp.zeros((pad,))])
+    return probs.reshape(bins, -1).sum(-1)
+
+
+def all_client_histograms(cfg: FedDataConfig, num_clients: int,
+                          round_idx: Array, bins: int) -> Array:
+    return jax.vmap(
+        lambda c: client_histogram(cfg, c, round_idx, bins)
+    )(jnp.arange(num_clients))
+
+
+def round_batch(
+    cfg: FedDataConfig, slot_client_ids: Array, round_idx: Array, key: Array,
+    per_slot_batch: int, seq_len: int,
+) -> Array:
+    """(num_slots × per_slot_batch, seq_len+1) — slot-major global batch."""
+    toks = jax.vmap(
+        lambda cid, k: client_tokens(
+            cfg, cid, round_idx, k, per_slot_batch, seq_len
+        )
+    )(slot_client_ids, jax.random.split(key, slot_client_ids.shape[0]))
+    return toks.reshape(-1, seq_len + 1)
+
+
+def client_data_sizes(cfg: FedDataConfig, num_clients: int) -> Array:
+    """Static per-client dataset sizes |D_i| (log-normal, deterministic)."""
+    key = jax.random.PRNGKey(cfg.seed + 3)
+    return jnp.exp(
+        jax.random.normal(key, (num_clients,)) * 0.5 + jnp.log(300.0)
+    ).astype(jnp.float32)

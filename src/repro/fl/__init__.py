@@ -1,0 +1,12 @@
+"""Federated runtime: round function, state, attacks, compression."""
+from repro.fl.round import AttackConfig, make_round_fn
+from repro.fl.state import FLConfig, FLState, abstract_fl_state, init_fl_state
+
+__all__ = [
+    "AttackConfig",
+    "FLConfig",
+    "FLState",
+    "abstract_fl_state",
+    "init_fl_state",
+    "make_round_fn",
+]

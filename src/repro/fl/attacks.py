@@ -1,0 +1,71 @@
+"""Adversarial client behaviours (paper §IV.D).
+
+Four attacks, matching Table V:
+  * label_flip       — class k -> (K-1)-k on the malicious clients' labels
+                       (for LM tasks: token t -> vocab-1-t on targets).
+  * noise            — Gaussian perturbation of the client's delta.
+  * dropout          — client unpredictably drops (delta zeroed + excluded).
+  * model_replacement— the client returns an arbitrary large update.
+
+All operate on slot-stacked trees with a (C,) malicious mask so they can be
+applied inside the jitted round.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flip_labels(tokens: Array, malicious: Array, vocab_size: int) -> Array:
+    """tokens: (C, ...) int; malicious: (C,) bool. k -> (V-1)-k."""
+    flipped = (vocab_size - 1) - tokens
+    m = malicious.reshape((-1,) + (1,) * (tokens.ndim - 1))
+    return jnp.where(m, flipped, tokens)
+
+
+def corrupt_deltas(
+    deltas, malicious: Array, kind: str, key: Array, *, noise_scale: float = 0.5,
+    replacement_scale: float = 10.0,
+):
+    """Apply a delta-space attack for malicious slots. deltas: (C, ...) tree."""
+    if kind == "none" or kind == "label_flip":
+        return deltas  # label_flip acts on data, not deltas
+    flat, treedef = jax.tree.flatten(deltas)
+    keys = jax.random.split(key, len(flat))
+
+    def mal(l):
+        return malicious.reshape((-1,) + (1,) * (l.ndim - 1))
+
+    if kind == "noise":
+        out = [
+            jnp.where(
+                mal(l),
+                l + noise_scale * jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype),
+                l,
+            )
+            for l, k in zip(flat, keys)
+        ]
+    elif kind == "model_replacement":
+        out = [
+            jnp.where(
+                mal(l),
+                replacement_scale
+                * jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype),
+                l,
+            )
+            for l, k in zip(flat, keys)
+        ]
+    elif kind == "dropout":
+        out = [jnp.where(mal(l), jnp.zeros_like(l), l) for l in flat]
+    else:
+        raise ValueError(f"unknown attack {kind!r}")
+    return jax.tree.unflatten(treedef, out)
+
+
+def dropout_mask(mask: Array, malicious: Array, kind: str) -> Array:
+    """Dropout also removes the slot from aggregation weights."""
+    if kind == "dropout":
+        return mask & ~malicious
+    return mask

@@ -1,0 +1,61 @@
+"""Client-delta compression (uplink reduction — beyond-paper extension the
+paper's energy model rewards: TX bytes enter Eq. E_i = Σ C_cpu·CPU + C_tx·TX).
+
+  * int8:  per-leaf symmetric quantization (scale = max|x| / 127).
+  * topk:  keep the largest-|x| fraction per leaf, zero the rest.
+
+Both are simulate-and-dequantize: the aggregation math stays fp32, while
+``wire_bytes_per_param`` feeds the DES energy/latency model and the
+collective-bytes accounting in the roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(deltas):
+    """Quantize -> dequantize each leaf (slot dim preserved)."""
+    def one(l):
+        x = l.astype(jnp.float32)
+        red = tuple(range(1, x.ndim))
+        scale = jnp.max(jnp.abs(x), axis=red, keepdims=True) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return (q.astype(jnp.float32) * scale).astype(l.dtype)
+
+    return jax.tree.map(one, deltas)
+
+
+def compress_topk(deltas, fraction: float):
+    """Keep the top-|fraction| magnitude entries per (slot, leaf)."""
+    def one(l):
+        x = l.astype(jnp.float32)
+        c = x.shape[0]
+        flat = x.reshape(c, -1)
+        k = max(1, int(flat.shape[1] * fraction))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][:, -1:]  # kth largest
+        keep = jnp.abs(flat) >= thresh
+        return (flat * keep).reshape(x.shape).astype(l.dtype)
+
+    return jax.tree.map(one, deltas)
+
+
+def apply_compression(deltas, kind: str, topk_fraction: float = 0.05):
+    if kind == "none":
+        return deltas
+    if kind == "int8":
+        return compress_int8(deltas)
+    if kind == "topk":
+        return compress_topk(deltas, topk_fraction)
+    raise ValueError(f"unknown compression {kind!r}")
+
+
+def wire_bytes_per_param(kind: str, topk_fraction: float = 0.05) -> float:
+    """Uplink bytes per parameter under each scheme (bf16 baseline)."""
+    if kind == "none":
+        return 2.0
+    if kind == "int8":
+        return 1.0
+    if kind == "topk":
+        return topk_fraction * 6.0  # value (2B) + index (4B) per kept entry
+    raise ValueError(kind)

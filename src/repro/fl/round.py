@@ -1,0 +1,378 @@
+"""The FedFog round — the paper's Fig. 1 dataflow as ONE jittable step.
+
+    schedule (Eqs. 1/2/3/7/10, over the N-client registry)
+      └─ slot occupancy: top-C eligible clients by utility
+    local training (Eq. 5): C slots × E local steps, fresh inner optimizer
+      (serverless/stateless semantics), vmap over the slot axis — NO
+      cross-client collectives during local steps (the paper's
+      communication-reduction payoff)
+    deltas: clip (DP sensitivity) → attacks (eval) → compression
+    aggregate (Eq. 6): masked weighted reduction over the slot axis — the
+      ONE inter-client collective per round (all-reduce over pod×client)
+    server update: FedAvg / FedAvgM / FedAdam on the aggregated delta
+    bookkeeping: cold starts (Eq. 4), energy (Eq. 10 + §IV.F), drift state
+
+`make_round_fn` returns `round_fn(state, batch) -> (state, metrics)` ready
+for jax.jit with the shardings from dist/sharding.py. Shape-static
+throughout: masks, not dynamic sets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg_mod
+from repro.core import privacy as privacy_mod
+from repro.core.scheduler import account_energy, schedule_round
+from repro.core.selection import random_selection_mask
+from repro.fl import attacks as attacks_mod
+from repro.fl.compression import apply_compression, wire_bytes_per_param
+from repro.fl.state import FLConfig, FLState
+from repro.models.transformer import Runtime
+from repro.optim import adamw, apply_updates, clip_by_global_norm, sgdm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    kind: str = "none"  # none|label_flip|noise|dropout|model_replacement
+    fraction: float = 0.0  # fraction of malicious slots
+    noise_scale: float = 0.5
+    replacement_scale: float = 10.0
+
+
+def _inner_optimizer(fl_cfg: FLConfig):
+    if fl_cfg.inner_optimizer == "adamw":
+        return adamw(fl_cfg.inner_lr)
+    return sgdm(fl_cfg.inner_lr, fl_cfg.inner_momentum)
+
+
+def _slot_assignment(decision, fl_cfg: FLConfig, rng: Array):
+    """Top-C eligible clients by utility -> (slot_client_ids, slot_mask).
+
+    Policies (§IV.B): fedfog = utility-ranked eligible; rcs = uniform random;
+    fogfaas/vanilla = fixed round-robin over all clients (no gating).
+    """
+    n, c = fl_cfg.num_clients, fl_cfg.slots
+    sel = decision.selection
+    if fl_cfg.policy == "fedfog":
+        # Sort by (eligible desc, utility desc): eligible clients first.
+        key_val = sel.utility - 1e6 * (~sel.mask)
+        order = jnp.argsort(-key_val, stable=True)
+        slot_ids = order[:c].astype(jnp.int32)
+        slot_mask = sel.mask[slot_ids]
+    elif fl_cfg.policy == "rcs":
+        rmask = random_selection_mask(rng, n, c)
+        order = jnp.argsort(-rmask.astype(jnp.int32), stable=True)
+        slot_ids = order[:c].astype(jnp.int32)
+        slot_mask = rmask[slot_ids]
+    else:  # fogfaas / vanilla: first C clients, no FL-aware gating
+        slot_ids = jnp.arange(c, dtype=jnp.int32)
+        slot_mask = jnp.ones((c,), bool)
+    return slot_ids, slot_mask
+
+
+def make_round_fn(
+    model,
+    fl_cfg: FLConfig,
+    runtime: Runtime = Runtime(),
+    attack: AttackConfig = AttackConfig(),
+    *,
+    flops_per_client_round: float | None = None,
+    rules=None,
+):
+    """Build the jittable FedFog round.
+
+    batch dict (leading dims slot-major):
+      tokens:          (global_batch, S+1) int32  [reshaped to (C, B_c, S+1)]
+      patch_embeds / frames: optional modality inputs, (global_batch, ...)
+      slot_data_sizes: (C,) f32 — |D_i| of each slot occupant
+      telemetry_cpu/mem/batt/energy: (N,) f32
+      hist:            (N, hist_bins) f32
+    """
+    c = fl_cfg.slots
+    init_inner, update_inner = _inner_optimizer(fl_cfg)
+    flops_round = flops_per_client_round or 0.0
+
+    # Pod-scale sharding constraints: pin the slot-stacked replicas to the
+    # client axis (and moments to the ZeRO axis) instead of trusting GSPMD
+    # propagation through the broadcast.
+    if rules is not None:
+        shapes, laxes = model.param_shapes(), model.param_axes()
+        _stacked = rules.shardings(
+            rules.param_specs(shapes, laxes, stacked=True)
+        )
+        _stacked_opt = rules.shardings(
+            rules.opt_spec_tree(shapes, laxes, stacked=True)
+        )
+
+        def constrain_stacked(t):
+            return jax.lax.with_sharding_constraint(t, _stacked)
+
+        def constrain_opt_tree(t):
+            return jax.lax.with_sharding_constraint(t, _stacked_opt)
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        _client_ent = rules._as_spec_entry(rules.plan.client_axes)
+        _zero_ent = "zero" if "zero" in rules.mesh.shape else None
+
+        def constrain_batch(tree):
+            """Pin slot-major batches to (client, zero, ...) so activations
+            keep the intra-slot data sharding through the reshape."""
+            def one(x):
+                spec = P(_client_ent, _zero_ent, *([None] * (x.ndim - 2)))
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(rules.mesh, spec)
+                )
+
+            return jax.tree.map(one, tree)
+    else:
+        constrain_stacked = constrain_opt_tree = lambda t: t
+        constrain_batch = lambda t: t
+
+    def per_slot_loss(params_c, batch_c):
+        return model.loss(params_c, batch_c, runtime)
+
+    def round_fn(state: FLState, batch) -> tuple[FLState, dict]:
+        from repro.core.types import ClientTelemetry
+
+        rng, k_sched, k_attack, k_dp, k_mal = jax.random.split(state.rng, 5)
+
+        # ---- 1. schedule over the N-client registry (Eqs. 1/2/3/7) ----- #
+        telemetry = ClientTelemetry(
+            cpu=batch["telemetry_cpu"],
+            mem=batch["telemetry_mem"],
+            batt=batch["telemetry_batt"],
+            energy=batch["telemetry_energy"],
+        )
+        decision = schedule_round(
+            state.sched, telemetry, batch["hist"], fl_cfg.scheduler
+        )
+        slot_ids, slot_mask = _slot_assignment(decision, fl_cfg, k_sched)
+        slot_sizes = batch["slot_data_sizes"]
+
+        # ---- 2. local training: C slots × E local steps --------------- #
+        def to_slots(x):
+            return x.reshape((c, x.shape[0] // c) + x.shape[1:])
+
+        model_batch = constrain_batch(
+            {
+                k: to_slots(v)
+                for k, v in batch.items()
+                if k in ("tokens", "patch_embeds", "frames")
+            }
+        )
+        if attack.kind == "label_flip":
+            n_mal = int(round(attack.fraction * c))
+            malicious = jnp.arange(c) < n_mal
+            malicious = jax.random.permutation(k_mal, malicious)
+            model_batch["tokens"] = attacks_mod.flip_labels(
+                model_batch["tokens"], malicious, model.cfg.vocab_size
+            )
+        elif attack.kind != "none":
+            n_mal = int(round(attack.fraction * c))
+            malicious = jax.random.permutation(
+                k_mal, jnp.arange(c) < n_mal
+            )
+        else:
+            malicious = jnp.zeros((c,), bool)
+
+        params0 = state.params
+        params_stacked = constrain_stacked(
+            jax.tree.map(
+                lambda p: jnp.broadcast_to(p[None], (c,) + p.shape), params0
+            )
+        )
+        inner_state = init_inner(params_stacked)
+        inner_state = inner_state._replace(
+            mu=constrain_opt_tree(inner_state.mu),
+            nu=None if inner_state.nu is None else constrain_opt_tree(inner_state.nu),
+        )
+
+        grad_fn = jax.vmap(jax.value_and_grad(per_slot_loss))
+
+        if fl_cfg.microbatch > 1:
+            # Gradient accumulation: scan over micro-splits of each slot's
+            # batch, accumulating fp32 grads. Bounds live activations to one
+            # microbatch's worth — the decisive train-memory knob at 14B+.
+            mb = fl_cfg.microbatch
+
+            def grad_fn(params_s, batch_s):  # noqa: F811
+                micro = {
+                    k: jnp.moveaxis(
+                        v.reshape((v.shape[0], mb, v.shape[1] // mb) + v.shape[2:]),
+                        1, 0,
+                    )
+                    for k, v in batch_s.items()
+                }
+
+                def acc_step(carry, mbatch):
+                    g_acc, l_acc = carry
+                    loss, g = jax.vmap(jax.value_and_grad(per_slot_loss))(
+                        params_s, mbatch
+                    )
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                    )
+                    return (g_acc, l_acc + jnp.mean(loss)), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params_s
+                )
+                (g, l), _ = jax.lax.scan(acc_step, (g0, jnp.zeros(())), micro)
+                g = jax.tree.map(lambda a: (a / mb), g)
+                return l / mb, g
+
+        if fl_cfg.local_steps == 1:
+            loss, grads = grad_fn(params_stacked, model_batch)
+            updates, inner_state2 = update_inner(grads, inner_state, params_stacked)
+            params_stacked = apply_updates(params_stacked, updates)
+            mean_loss = jnp.mean(loss)
+        else:
+            # Split each slot's batch into E microbatches along the batch dim.
+            e = fl_cfg.local_steps
+
+            def split_steps(x):  # (C, B_c, ...) -> (E, C, B_c/E, ...)
+                b_c = x.shape[1]
+                return jnp.moveaxis(
+                    x.reshape((c, e, b_c // e) + x.shape[2:]), 1, 0
+                )
+
+            micro = {k: split_steps(v) for k, v in model_batch.items()}
+
+            def one_step(carry, mb):
+                params_s, inner, _ = carry
+                loss, grads = grad_fn(params_s, mb)
+                updates, inner = update_inner(grads, inner, params_s)
+                params_s = apply_updates(params_s, updates)
+                return (params_s, inner, jnp.mean(loss)), None
+
+            (params_stacked, inner_state2, mean_loss), _ = jax.lax.scan(
+                one_step, (params_stacked, inner_state, jnp.zeros(())), micro
+            )
+        del inner_state2
+
+        # ---- 3. deltas: clip → attack → compress ----------------------- #
+        deltas = jax.tree.map(
+            lambda p, p0: (
+                p.astype(jnp.float32) - p0.astype(jnp.float32)[None]
+            ).astype(p.dtype),
+            params_stacked,
+            params0,
+        )
+        if fl_cfg.clip_norm > 0:
+            deltas = jax.vmap(
+                lambda d: clip_by_global_norm(d, fl_cfg.clip_norm)[0]
+            )(deltas)
+        if attack.kind not in ("none", "label_flip"):
+            deltas = attacks_mod.corrupt_deltas(
+                deltas, malicious, attack.kind, k_attack,
+                noise_scale=attack.noise_scale,
+                replacement_scale=attack.replacement_scale,
+            )
+            slot_mask = attacks_mod.dropout_mask(slot_mask, malicious, attack.kind)
+        deltas = apply_compression(
+            deltas, fl_cfg.compression, fl_cfg.topk_fraction
+        )
+
+        # ---- 4. aggregate (Eq. 6) — the inter-client collective -------- #
+        if fl_cfg.aggregator == "median":
+            agg = agg_mod.median_aggregate(deltas, slot_mask)
+        elif fl_cfg.aggregator == "trimmed":
+            agg = agg_mod.trimmed_mean_aggregate(deltas, slot_mask)
+        else:
+            agg = agg_mod.fedavg_stacked(deltas, slot_mask, slot_sizes)
+        if fl_cfg.dp_sigma > 0:
+            dp = privacy_mod.DPConfig(
+                sigma=fl_cfg.dp_sigma,
+                sensitivity=fl_cfg.clip_norm or 1.0,
+            )
+            agg = privacy_mod.gaussian_mechanism(agg, k_dp, dp)
+
+        # ---- 5. server update ------------------------------------------ #
+        new_params, new_mu, new_count = _server_update(
+            fl_cfg, params0, agg, state.server_mu, state.server_count
+        )
+
+        # ---- 6. energy / cold-start / drift bookkeeping ---------------- #
+        sel_n = decision.selection.mask.astype(jnp.float32)
+        # Per-LOGICAL-client energy: compute ∝ FLOPs for selected clients,
+        # uplink ∝ compressed delta bytes (§IV.F).
+        em = fl_cfg.scheduler.energy_model
+        tx_bytes = wire_bytes_per_param(
+            fl_cfg.compression, fl_cfg.topk_fraction
+        ) * float(model.param_count())
+        cpu_cycles = flops_round  # 1 cycle ≈ 1 flop in sim units
+        round_energy_j = sel_n * (
+            em.c_cpu * cpu_cycles + em.c_tx * tx_bytes
+        ) + (decision.selection.mask & ~state.sched.warm) * em.cold_start_energy_j
+        new_sched = account_energy(
+            decision.new_state, round_energy_j, fl_cfg.scheduler
+        )
+
+        new_state = FLState(
+            params=new_params,
+            server_mu=new_mu,
+            server_count=new_count,
+            sched=new_sched,
+            rng=rng,
+            step=state.step + 1,
+        )
+        metrics = {
+            "loss": mean_loss,
+            "num_selected": decision.selection.num_selected,
+            "slot_participation": jnp.sum(slot_mask.astype(jnp.int32)),
+            "cold_starts": decision.cold_starts,
+            # Synchronous round latency = slowest selected client (§III.H).
+            "round_latency_ms": jnp.max(
+                jnp.where(slot_mask, decision.delays_ms[slot_ids], 0.0)
+            ),
+            "energy_j": jnp.sum(round_energy_j),
+            "mean_utility": jnp.mean(decision.selection.utility),
+            "mean_drift": jnp.mean(decision.selection.drift),
+        }
+        return new_state, metrics
+
+    return round_fn
+
+
+def _server_update(fl_cfg: FLConfig, params0, agg, mu, count):
+    lr = fl_cfg.server_lr
+    count = count + 1
+    if fl_cfg.server_optimizer == "fedavg" or mu is None:
+        new_params = jax.tree.map(
+            lambda p, a: (p.astype(jnp.float32) + lr * a.astype(jnp.float32)).astype(
+                p.dtype
+            ),
+            params0,
+            agg,
+        )
+        return new_params, mu, count
+    m = fl_cfg.server_momentum
+    new_mu = jax.tree.map(
+        lambda mu_l, a: m * mu_l + a.astype(jnp.float32), mu, agg
+    )
+    if fl_cfg.server_optimizer == "fedadam":
+        # Adam-style with a fixed epsilon on the aggregated delta magnitude.
+        new_params = jax.tree.map(
+            lambda p, mu_l, a: (
+                p.astype(jnp.float32)
+                + lr * mu_l / (jnp.sqrt(jnp.square(a.astype(jnp.float32))) + 1e-3)
+            ).astype(p.dtype),
+            params0,
+            new_mu,
+            agg,
+        )
+    else:  # fedavgm
+        new_params = jax.tree.map(
+            lambda p, mu_l: (p.astype(jnp.float32) + lr * mu_l).astype(p.dtype),
+            params0,
+            new_mu,
+        )
+    return new_params, new_mu, count

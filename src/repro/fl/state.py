@@ -1,0 +1,101 @@
+"""Federated training state + round configuration.
+
+Key design decision (DESIGN.md §2): client slots are *stateless between
+rounds*, mirroring the paper's serverless execution model — a training
+"function invocation" receives the global model, runs E local steps with a
+fresh inner optimizer, and returns a delta. Only the global model, the
+server optimizer state and the (tiny, N-client) scheduler state persist.
+This is also the memory win that lets 14B+ archs fit: no per-slot Adam
+moments live across rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scheduler import SchedulerConfig
+from repro.core.types import SchedulerState, _pytree_dataclass
+
+
+@_pytree_dataclass
+class FLState:
+    params: Any  # global model pytree (unstacked)
+    server_mu: Any  # fp32 server momentum tree or None
+    server_count: jax.Array  # () int32
+    sched: SchedulerState  # N-client scheduler state
+    rng: jax.Array
+    step: jax.Array  # () int32 round index
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    """One place for every FedFog-round knob."""
+
+    num_clients: int = 64  # N: logical client population (scheduler domain)
+    slots: int = 16  # C: concurrent hardware cohort slots
+    local_steps: int = 1  # E: local epochs/steps per round (Eq. 5)
+    microbatch: int = 1  # gradient-accumulation splits per local step
+    hist_bins: int = 64  # drift histogram buckets
+
+    # Inner (client) optimizer — fresh every round (serverless).
+    inner_optimizer: str = "sgdm"  # "sgdm" | "adamw"
+    inner_lr: float = 0.02
+    inner_momentum: float = 0.9
+
+    # Server (outer) optimizer on aggregated deltas.
+    server_optimizer: str = "fedavgm"  # "fedavg" | "fedavgm" | "fedadam"
+    server_lr: float = 1.0
+    server_momentum: float = 0.9
+
+    # Aggregation & robustness.
+    aggregator: str = "fedavg"  # "fedavg" | "median" | "trimmed"
+    clip_norm: float = 0.0  # per-client delta clip (0 = off); DP sensitivity S
+    dp_sigma: float = 0.0  # central DP noise scale (0 = off)
+    compression: str = "none"  # "none" | "int8" | "topk"
+    topk_fraction: float = 0.05
+
+    scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+
+    # Baseline switches (§IV.B): "fedfog" | "rcs" | "fogfaas" | "vanilla"
+    policy: str = "fedfog"
+
+    def __post_init__(self):
+        assert self.slots >= 1 and self.num_clients >= self.slots
+
+
+def init_fl_state(model, fl_cfg: FLConfig, key: jax.Array,
+                  server_mu: bool | None = None) -> FLState:
+    from repro.core.types import init_scheduler_state
+
+    k_params, k_rng = jax.random.split(key)
+    params = model.init(k_params)
+    use_mu = (
+        fl_cfg.server_optimizer in ("fedavgm", "fedadam")
+        if server_mu is None
+        else server_mu
+    )
+    mu = (
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if use_mu
+        else None
+    )
+    return FLState(
+        params=params,
+        server_mu=mu,
+        server_count=jnp.zeros((), jnp.int32),
+        sched=init_scheduler_state(
+            fl_cfg.num_clients, fl_cfg.hist_bins, fl_cfg.scheduler.theta_e
+        ),
+        rng=k_rng,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_fl_state(model, fl_cfg: FLConfig) -> FLState:
+    """ShapeDtypeStruct version for the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_fl_state(model, fl_cfg, k), jax.random.PRNGKey(0)
+    )

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (TPU-target; validated via interpret mode on CPU).
+
+Each kernel ships three files: the pl.pallas_call implementation with
+explicit BlockSpec VMEM tiling, ops.py (jit'd public wrapper with CPU
+interpret fallback) and ref.py (pure-jnp oracle used by the allclose
+sweeps in tests/test_kernels.py).
+"""

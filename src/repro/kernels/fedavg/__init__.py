@@ -1,0 +1,4 @@
+from repro.kernels.fedavg.ops import fedavg_apply, fedavg_apply_tree
+from repro.kernels.fedavg.ref import fedavg_apply_ref
+
+__all__ = ["fedavg_apply", "fedavg_apply_tree", "fedavg_apply_ref"]

@@ -1,0 +1,4 @@
+"""Public wrappers for the fused FedAvg aggregation kernel."""
+from repro.kernels.fedavg.fedavg import fedavg_apply, fedavg_apply_tree
+
+__all__ = ["fedavg_apply", "fedavg_apply_tree"]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused FedAvg aggregation kernel.
+
+    out = base + lr · Σ_i  m_i·ω_i·Δ_i / Σ_j m_j·ω_j
+
+updates: (N, D) client deltas; base: (D,); mask: (N,) bool; weights: (N,)
+(|D_i| dataset sizes). Matches core/aggregation.fedavg_stacked + server
+apply in one expression.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_apply_ref(updates, base, mask, weights, lr: float = 1.0):
+    w = mask.astype(jnp.float32) * weights.astype(jnp.float32)
+    w = w / (jnp.sum(w) + 1e-12)
+    agg = jnp.einsum("n,nd->d", w, updates.astype(jnp.float32))
+    return (base.astype(jnp.float32) + lr * agg).astype(base.dtype)

@@ -1,0 +1,51 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Accepts the model-layer layout (B, S, H, hd) and window semantics used by
+``models/layers.select_attention`` (window == -1 means global) and handles
+CPU fallback to interpret mode so the same call-site runs everywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    DEFAULT_BLOCK_KV,
+    DEFAULT_BLOCK_Q,
+    flash_attention_fwd,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, Hkv, hd)
+    v: jax.Array,
+    q_positions=None,
+    k_positions=None,
+    window=-1,
+    *,
+    bidirectional: bool = False,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+) -> jax.Array:
+    del q_positions, k_positions  # contiguous tail-aligned layout assumed
+    win = int(window) if window is not None else -1
+    win = 0 if win < 0 else win  # kernel convention: 0 = global
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention_fwd(
+        qt,
+        kt,
+        vt,
+        window=win,
+        bidirectional=bidirectional,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=not _on_tpu(),
+    )
+    return out.swapaxes(1, 2)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout convention for the kernel (heads-major, seq blocked):
+    q: (B, H, Sq, hd)   k/v: (B, Hkv, Sk, hd)
+Mask: causal + optional sliding window (window <= 0 means global), with
+q tokens occupying the LAST Sq positions of the Sk-long key sequence
+(so prefill with Sq == Sk is the usual causal case).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    bidirectional: bool = False,
+) -> jax.Array:
+    b, h, sq, hd = q.shape
+    _, hkv, sk, _ = k.shape
+    groups = h // hkv
+    k = jnp.repeat(k, groups, axis=1)
+    v = jnp.repeat(v, groups, axis=1)
+    scale = hd**-0.5
+    scores = (
+        jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    if not bidirectional:
+        q_pos = jnp.arange(sq) + (sk - sq)
+        k_pos = jnp.arange(sk)
+        visible = k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            visible &= (q_pos[:, None] - k_pos[None, :]) < window
+        scores = jnp.where(visible[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the wkv6 kernel.
+
+Stability note: the chunked-parallel form divides by in-chunk cumulative
+decay products P. With the Finch parameterization w = exp(-exp(ww)) the
+per-step decay can be tiny, so P can underflow across a long chunk; the
+default chunk of 32 with fp32 math keeps log(P) > -38·32 only for
+pathological ww > 2.9 — we clamp w to exp(-20) per step (an exact no-op for
+any state that could still matter numerically: 20 nats of decay ≈ 1e-9).
+
+Falls back to interpret mode off-TPU; model code uses ssm.wkv6 (jnp) by
+default and switches here when cfg routes through the kernel path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.wkv6 import DEFAULT_CHUNK, wkv6_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK):
+    """r/k/w: (B,T,H,K), v: (B,T,H,V), u: (H,K) -> (y, final_state)."""
+    t = r.shape[1]
+    pad = (-t) % chunk
+    if pad:
+        zp = lambda z: jnp.pad(z, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    w = jnp.maximum(w, jnp.asarray(jnp.exp(-20.0), w.dtype))
+    y, s = wkv6_fwd(r, k, v, w, u, chunk=chunk, interpret=not _on_tpu())
+    return y[:, :t], s

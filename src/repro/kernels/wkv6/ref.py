@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the wkv6 kernel: sequential RWKV6 recurrence.
+
+    y_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t)
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+r/k/v/w: (B, T, H, K|V); u: (H, K); state: (B, H, K, V) fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, initial_state=None):
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+    s0 = (
+        jnp.zeros((b, h, dk, dv), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    u32 = u.astype(jnp.float32)
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = (z.astype(jnp.float32) for z in xs)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u32[None, :, :, None] * kv)
+        return w_t[..., None] * s + kv, y
+
+    s_final, ys = jax.lax.scan(
+        step, s0, (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1), w.swapaxes(0, 1))
+    )
+    return ys.swapaxes(0, 1).astype(r.dtype), s_final

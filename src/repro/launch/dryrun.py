@@ -1,0 +1,394 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set the fake-device flag before ANY other import (jax locks the
+device count on first init).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_skips
+from repro.configs.shapes import (
+    SHAPES,
+    ShapeSpec,
+    batch_specs,
+    cache_specs,
+    decode_token_specs,
+)
+from repro.dist.hlo_analysis import analyze_hlo
+from repro.dist.sharding import ShardingRules, make_rules
+from repro.fl import FLConfig, abstract_fl_state, make_round_fn
+from repro.launch import mesh as mesh_mod
+from repro.models import Runtime, build_model
+from repro.models.config import Family
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+# --------------------------------------------------------------------- #
+# Per-cell builders
+# --------------------------------------------------------------------- #
+def _scan_block(num_layers: int) -> int:
+    for b in (8, 6, 4):
+        if num_layers % b == 0:
+            return b
+    return 0
+
+
+TRAIN_MICROBATCH = int(os.environ.get("REPRO_MICROBATCH", "4"))
+
+
+def shape_tuned_config(cfg, shape: ShapeSpec):
+    """Runtime knobs per shape (architecture untouched)."""
+    knobs = dict(loss_chunk=512,
+                 remat=os.environ.get("REPRO_REMAT", "1") == "1",
+                 remat_policy="nothing",
+                 scan_layers=os.environ.get("REPRO_SCAN", "1") == "1")
+    if shape.kind == "train":
+        knobs.update(attn_impl="xla_chunked", attn_chunk_q=512,
+                     attn_chunk_kv=1024,
+                     scan_block=int(os.environ.get(
+                         "REPRO_SCAN_BLOCK", _scan_block(cfg.num_layers))))
+    elif shape.kind == "prefill":
+        knobs.update(attn_impl="xla_chunked", attn_chunk_q=512, attn_chunk_kv=2048)
+    return dataclasses.replace(cfg, **knobs)
+
+
+def make_runtime(cfg, rules: ShardingRules, *, serving: bool = False) -> Runtime:
+    if cfg.num_experts:
+        tp = "tp" if rules.mesh.shape.get("tp", 1) > 1 else None
+        # Under the train path the model runs inside the client-vmap, so the
+        # MoE group dim only sees the intra-slot ("zero") axes; serving has
+        # no client stacking and uses the full data axes.
+        group_axes = rules.serve_batch_axes if serving else tuple(
+            a for a in ("zero",) if a in rules.mesh.shape
+        )
+        return Runtime(
+            mesh=rules.mesh,
+            batch_axes=rules.batch_axes,
+            expert_axis="expert",
+            tp_axis=tp,
+            # gshard: pure-einsum GSPMD expert parallelism. The shard_map
+            # "ep" variant trips an XLA SPMD-partitioner CHECK on these
+            # meshes (b/433785288-adjacent); see DESIGN.md §4.
+            moe_impl=os.environ.get("REPRO_MOE_IMPL", "gshard"),
+            moe_group_axes=group_axes,
+        )
+    return Runtime(mesh=rules.mesh, batch_axes=rules.batch_axes)
+
+
+def fl_batch_specs(cfg, rules: ShardingRules, shape: ShapeSpec, fl_cfg: FLConfig):
+    """Train-cell inputs: model batch + FL scheduler inputs."""
+    n = fl_cfg.num_clients
+    specs = dict(batch_specs(cfg, shape))
+    specs.update(
+        slot_data_sizes=jax.ShapeDtypeStruct((fl_cfg.slots,), jnp.float32),
+        telemetry_cpu=jax.ShapeDtypeStruct((n,), jnp.float32),
+        telemetry_mem=jax.ShapeDtypeStruct((n,), jnp.float32),
+        telemetry_batt=jax.ShapeDtypeStruct((n,), jnp.float32),
+        telemetry_energy=jax.ShapeDtypeStruct((n,), jnp.float32),
+        hist=jax.ShapeDtypeStruct((n, fl_cfg.hist_bins), jnp.float32),
+    )
+    shardings = rules.train_batch_specs(
+        {k: specs[k] for k in ("tokens", "patch_embeds", "frames") if k in specs}
+    )
+    full = {k: jax.sharding.NamedSharding(rules.mesh, v)
+            for k, v in shardings.items()}
+    rep = rules.replicated()
+    for k in specs:
+        if k not in full:
+            full[k] = rep
+    return specs, full
+
+
+def build_train(arch: str, shape: ShapeSpec, multi_pod: bool):
+    cfg = shape_tuned_config(get_config(arch), shape)
+    pm = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    zero_env = os.environ.get("REPRO_ZERO")
+    rules = make_rules(
+        pm, cfg, multi_pod=multi_pod,
+        zero=int(zero_env) if zero_env else None,
+    )
+    if os.environ.get("REPRO_FSDP") == "0":  # perf knob: ZeRO w/o param FSDP
+        rules = dataclasses.replace(
+            rules, plan=dataclasses.replace(rules.plan, fsdp_params=False)
+        )
+    if os.environ.get("REPRO_UNROLL_LAYERS") == "1":  # static-window knob
+        cfg = dataclasses.replace(cfg, scan_layers=False, scan_block=0)
+    model = build_model(cfg)
+    per_slot = shape.global_batch // rules.plan.num_clients
+    fl_cfg = FLConfig(
+        num_clients=64,
+        slots=rules.plan.num_clients,
+        local_steps=int(os.environ.get("REPRO_LOCAL_STEPS", "1")),
+        microbatch=min(TRAIN_MICROBATCH, per_slot),
+        inner_optimizer="sgdm",
+        server_optimizer="fedavgm",
+    )
+    runtime = make_runtime(cfg, rules)
+    tokens_per_client = shape.seq_len * shape.global_batch / fl_cfg.slots
+    round_fn = make_round_fn(
+        model,
+        fl_cfg,
+        runtime,
+        flops_per_client_round=model.flops_per_token() * tokens_per_client,
+        rules=rules,
+    )
+
+    state_abs = abstract_fl_state(model, fl_cfg)
+    shapes, laxes = model.param_shapes(), model.param_axes()
+    p_spec = rules.param_specs(shapes, laxes, stacked=False)
+    mu_spec = rules.opt_spec_tree(shapes, laxes, stacked=False)
+    from jax.sharding import PartitionSpec as P
+
+    from repro.fl.state import FLState
+
+    rep = P()
+    state_specs = FLState(
+        params=p_spec,
+        server_mu=mu_spec if state_abs.server_mu is not None else None,
+        server_count=rep,
+        sched=jax.tree.map(lambda _: rep, state_abs.sched),
+        rng=rep,
+        step=rep,
+    )
+    state_shardings = rules.shardings(state_specs)
+    batch_abs, batch_shardings = fl_batch_specs(cfg, rules, shape, fl_cfg)
+
+    jitted = jax.jit(
+        round_fn,
+        in_shardings=(state_shardings, batch_shardings),
+        donate_argnums=(0,),
+    )
+    return jitted, (state_abs, batch_abs), rules, pm, cfg
+
+
+def build_prefill(arch: str, shape: ShapeSpec, multi_pod: bool):
+    cfg = shape_tuned_config(get_config(arch), shape)
+    if os.environ.get("REPRO_UNROLL_LAYERS") == "1":  # static-window knob
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    pm = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(pm, cfg, multi_pod=multi_pod)
+    model = build_model(cfg)
+    runtime = make_runtime(cfg, rules, serving=True)
+
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, cache_len=shape.seq_len, runtime=runtime)
+
+    shapes, laxes = model.param_shapes(), model.param_axes()
+    p_shardings = rules.shardings(
+        rules.param_specs(shapes, laxes, stacked=False, fsdp=False)
+    )
+    batch_abs = batch_specs(cfg, shape)
+    b_shardings = {
+        k: jax.sharding.NamedSharding(rules.mesh, v)
+        for k, v in rules.serve_batch_specs(batch_abs).items()
+    }
+    jitted = jax.jit(prefill_fn, in_shardings=(p_shardings, b_shardings))
+    return jitted, (shapes, batch_abs), rules, pm, cfg
+
+
+def build_decode(arch: str, shape: ShapeSpec, multi_pod: bool):
+    cfg = shape_tuned_config(get_config(arch), shape)
+    if os.environ.get("REPRO_DECODE_F32") == "1":  # legalization probe
+        cfg = dataclasses.replace(
+            cfg, compute_dtype="float32", param_dtype="float32"
+        )
+    pm = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(pm, cfg, multi_pod=multi_pod)
+    model = build_model(cfg)
+    runtime = make_runtime(cfg, rules, serving=True)
+
+    def decode_fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, runtime)
+
+    shapes, laxes = model.param_shapes(), model.param_axes()
+    p_shardings = rules.shardings(
+        rules.param_specs(shapes, laxes, stacked=False, fsdp=False)
+    )
+    cache_abs = cache_specs(model, shape)
+    c_shardings = rules.shardings(rules.cache_specs(cache_abs))
+    tok_abs = decode_token_specs(shape)
+    t_sharding = jax.sharding.NamedSharding(
+        rules.mesh, rules.serve_batch_specs({"t": tok_abs})["t"]
+    )
+    jitted = jax.jit(
+        decode_fn,
+        in_shardings=(p_shardings, c_shardings, t_sharding),
+        donate_argnums=(1,),
+    )
+    return jitted, (shapes, cache_abs, tok_abs), rules, pm, cfg
+
+
+# --------------------------------------------------------------------- #
+# Cell runner
+# --------------------------------------------------------------------- #
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
+    shape = SHAPES[shape_name]
+    skips = get_skips(arch)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": shape.kind,
+    }
+    if shape_name in skips:
+        result["status"] = "SKIP"
+        result["skip_reason"] = skips[shape_name]
+        return result
+
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            jitted, args, rules, pm, cfg = build_train(arch, shape, multi_pod)
+        elif shape.kind == "prefill":
+            jitted, args, rules, pm, cfg = build_prefill(arch, shape, multi_pod)
+        else:
+            jitted, args, rules, pm, cfg = build_decode(arch, shape, multi_pod)
+
+        with pm:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = analyze_hlo(compiled.as_text())
+        stats = hlo.collectives
+
+        mem_dict = {}
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            if hasattr(mem, attr):
+                mem_dict[attr] = int(getattr(mem, attr))
+        if verbose:
+            print(f"  memory_analysis: {mem_dict}")
+            print(
+                "  cost_analysis: flops=%.3e bytes=%.3e"
+                % (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0))
+            )
+            print(
+                f"  collectives: total={stats.total_bytes:.3e} B "
+                f"{ {k: f'{v:.2e}' for k, v in stats.bytes_by_kind.items()} }"
+            )
+
+        result.update(
+            status="OK",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=mem_dict,
+            flops=cost.get("flops", 0.0),
+            bytes_accessed=cost.get("bytes accessed", 0.0),
+            transcendentals=cost.get("transcendentals", 0.0),
+            dot_flops=hlo.dot_flops,
+            hbm_bytes=hlo.hbm_bytes,
+            hbm_bytes_out=hlo.hbm_bytes_out,
+            collective_bytes=stats.bytes_by_kind,
+            collective_total=stats.total_bytes,
+            collective_counts=stats.count_by_kind,
+            trip_warnings=stats.trip_count_warnings[:5],
+            plan={
+                "zero": rules.plan.zero,
+                "slots": rules.plan.num_clients,
+                "model_axes": list(rules.plan.model_axes),
+                "model_split": list(rules.plan.model_split),
+                "fsdp": rules.plan.fsdp_params,
+            },
+        )
+        if shape.kind == "decode" and os.environ.get("REPRO_DECODE_F32") != "1":
+            # The CPU backend's bf16->f32 legalization wraps every KV-cache
+            # dynamic-update-slice in convert round-trips that defeat buffer
+            # aliasing (~50x temp inflation vs TPU's native-bf16 in-place
+            # updates). Record a native-f32 companion compile whose temp is
+            # the TPU-faithful memory proxy (EXPERIMENTS.md §Dry-run notes).
+            try:
+                os.environ["REPRO_DECODE_F32"] = "1"
+                jax.clear_caches()
+                jitted2, args2, *_ = build_decode(arch, shape, multi_pod)
+                with pm:
+                    compiled2 = jitted2.lower(*args2).compile()
+                mem2 = compiled2.memory_analysis()
+                result["memory_f32_native"] = {
+                    a: int(getattr(mem2, a))
+                    for a in (
+                        "argument_size_in_bytes",
+                        "temp_size_in_bytes",
+                    )
+                    if hasattr(mem2, a)
+                }
+                if verbose:
+                    print(f"  f32-native probe: {result['memory_f32_native']}")
+            finally:
+                os.environ.pop("REPRO_DECODE_F32", None)
+    except Exception as e:  # record the failure, keep sweeping
+        result.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+    finally:
+        jax.clear_caches()  # keep host RSS bounded across the 80-cell sweep
+    result["elapsed_s"] = round(time.time() - t0, 1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=RESULT_DIR)
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    arches = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_fail = 0
+    for arch in arches:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        cached = json.load(f)
+                    print(f"[cached] {tag}: {cached['status']}")
+                    n_fail += cached["status"] == "FAIL"
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                res = run_cell(arch, shape_name, multi_pod)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(
+                    f"[dryrun] {tag}: {res['status']} "
+                    f"({res.get('elapsed_s', 0)}s)"
+                    + (f" ERROR: {res.get('error', '')[:200]}" if res["status"] == "FAIL" else ""),
+                    flush=True,
+                )
+                n_fail += res["status"] == "FAIL"
+    print(f"done; failures: {n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

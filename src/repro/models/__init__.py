@@ -1,0 +1,6 @@
+"""Model zoo: unified config + per-family implementations."""
+from repro.models.api import Model, build_model
+from repro.models.config import GLOBAL, Family, ModelConfig
+from repro.models.transformer import Runtime
+
+__all__ = ["GLOBAL", "Family", "Model", "ModelConfig", "Runtime", "build_model"]

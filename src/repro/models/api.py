@@ -1,0 +1,154 @@
+"""Uniform model interface over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` whose methods close over the config:
+
+    model.init(key)                      -> params
+    model.param_shapes()                 -> ShapeDtypeStruct pytree (dry-run)
+    model.param_axes()                   -> logical-axes pytree (sharding)
+    model.loss(params, batch, runtime)   -> scalar CE loss
+    model.prefill(params, batch, cache_len, runtime) -> (logits, cache)
+    model.decode_step(params, cache, tokens, runtime) -> (logits, cache)
+    model.init_cache(batch, max_len)     -> cache pytree
+    model.param_count() / active_param_count()  -> exact ints (from decls)
+
+``batch`` dict keys by family:
+    dense/moe/hybrid/ssm: tokens (B,S+1) — inputs/targets derived here
+    vlm:    tokens (B,S_text+1), patch_embeds (B,S_img,d)
+    encdec: frames (B,S_src,d), tokens (B,S_tgt+1)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, rwkv6, transformer
+from repro.models.config import Family, ModelConfig
+from repro.models.params import ParamDecl
+from repro.models.transformer import Runtime
+
+Array = jax.Array
+
+
+def _decls(cfg: ModelConfig):
+    if cfg.family is Family.SSM:
+        return rwkv6.param_decls(cfg)
+    if cfg.family is Family.ENCDEC:
+        return encdec.param_decls(cfg)
+    return transformer.param_decls(cfg)
+
+
+def _count(decls, active_expert_fraction: float | None = None) -> int:
+    total = 0
+    flat, _ = jax.tree.flatten(decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+    for d in flat:
+        n = math.prod(d.shape)
+        if active_expert_fraction is not None and "experts" in d.axes:
+            n = int(n * active_expert_fraction)
+        total += n
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ #
+    def init(self, key: Array):
+        mod = self._mod()
+        return mod.init_params(self.cfg, key)
+
+    def param_shapes(self):
+        return self._mod().param_shapes(self.cfg)
+
+    def param_axes(self):
+        return self._mod().param_axes(self.cfg)
+
+    def param_count(self) -> int:
+        return _count(_decls(self.cfg))
+
+    def active_param_count(self) -> int:
+        if not self.cfg.num_experts:
+            return self.param_count()
+        frac = self.cfg.experts_per_token / self.cfg.num_experts
+        return _count(_decls(self.cfg), active_expert_fraction=frac)
+
+    def flops_per_token(self, train: bool = True) -> float:
+        """MODEL_FLOPS basis: 6·N_active (train) / 2·N_active (fwd),
+        embeddings excluded."""
+        emb = self.cfg.vocab_size * self.cfg.d_model
+        if not self.cfg.tie_embeddings:
+            emb *= 2
+        n = self.active_param_count() - emb
+        return (6.0 if train else 2.0) * n
+
+    # ------------------------------------------------------------------ #
+    def _mod(self):
+        if self.cfg.family is Family.SSM:
+            return rwkv6
+        if self.cfg.family is Family.ENCDEC:
+            return encdec
+        return transformer
+
+    def _split_train_batch(self, batch):
+        cfg = self.cfg
+        if cfg.family is Family.ENCDEC:
+            toks = batch["tokens"]
+            return dict(
+                frames=batch["frames"],
+                tokens=toks[:, :-1],
+                targets=toks[:, 1:],
+                loss_mask=batch.get("loss_mask"),
+            )
+        if cfg.family is Family.VLM:
+            toks = batch["tokens"]
+            return dict(
+                embeds=batch["patch_embeds"],
+                tokens=toks[:, :-1],
+                targets=toks[:, 1:],  # loss over text positions only
+                loss_mask=batch.get("loss_mask"),
+            )
+        toks = batch["tokens"]
+        return dict(
+            tokens=toks[:, :-1],
+            targets=toks[:, 1:],
+            loss_mask=batch.get("loss_mask"),
+        )
+
+    def loss(self, params, batch, runtime: Runtime = Runtime()):
+        kw = self._split_train_batch(batch)
+        return self._mod().lm_loss(params, self.cfg, runtime=runtime, **kw)
+
+    # ------------------------------------------------------------------ #
+    def init_cache(self, batch_size: int, max_len: int, src_len: int = 0):
+        if self.cfg.family is Family.ENCDEC:
+            return encdec.init_cache(self.cfg, batch_size, max_len, src_len)
+        return self._mod().init_cache(self.cfg, batch_size, max_len)
+
+    def prefill(self, params, batch, cache_len: int, runtime: Runtime = Runtime()):
+        cfg = self.cfg
+        if cfg.family is Family.ENCDEC:
+            return encdec.prefill(
+                params, cfg, frames=batch["frames"], tokens=batch["tokens"],
+                cache_len=cache_len, runtime=runtime,
+            )
+        if cfg.family is Family.VLM:
+            return transformer.prefill(
+                params, cfg, tokens=batch["tokens"],
+                embeds=batch["patch_embeds"], cache_len=cache_len,
+                runtime=runtime,
+            )
+        return self._mod().prefill(
+            params, cfg, tokens=batch["tokens"], cache_len=cache_len,
+            runtime=runtime,
+        )
+
+    def decode_step(self, params, cache, tokens, runtime: Runtime = Runtime()):
+        return self._mod().decode_step(params, self.cfg, cache, tokens, runtime)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

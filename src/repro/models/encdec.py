@@ -1,0 +1,276 @@
+"""Encoder–decoder backbone (seamless-m4t-medium). The speech/text modality
+frontend is a STUB per the assignment brief: ``input_specs()`` supplies
+precomputed frame embeddings (B, S_src, d) directly to the encoder.
+
+Encoder: bidirectional self-attention blocks. Decoder: causal self-attention
++ cross-attention to encoder output + gated FFN. Same scan-over-layers and
+chunked-CE machinery as the decoder-only trunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import GLOBAL, ModelConfig
+from repro.models.layers import apply_rope, gated_mlp, rms_norm, select_attention, attention_decode
+from repro.models.params import ParamDecl, axes_tree, init_tree, shape_tree
+from repro.models.transformer import Runtime, _chunked_ce, _replicate_small
+
+Array = jax.Array
+
+
+def _attn_decls(L, d, H, Hkv, hd, pd, prefix=""):
+    return {
+        prefix + "wq": ParamDecl((L, d, H, hd), ("layers", "embed", "heads", "head_dim"), "normal", pd),
+        prefix + "wk": ParamDecl((L, d, Hkv, hd), ("layers", "embed", "kv", "head_dim"), "normal", pd),
+        prefix + "wv": ParamDecl((L, d, Hkv, hd), ("layers", "embed", "kv", "head_dim"), "normal", pd),
+        prefix + "wo": ParamDecl((L, H, hd, d), ("layers", "heads", "head_dim", "embed"), "normal_out", pd),
+    }
+
+
+def _ffn_decls(L, d, ff, pd):
+    return {
+        "w_gate": ParamDecl((L, d, ff), ("layers", "embed", "mlp"), "normal", pd),
+        "w_up": ParamDecl((L, d, ff), ("layers", "embed", "mlp"), "normal", pd),
+        "w_down": ParamDecl((L, ff, d), ("layers", "mlp", "embed"), "normal_out", pd),
+    }
+
+
+def param_decls(cfg: ModelConfig):
+    d, H, Hkv, hd, ff, V = (
+        cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+        cfg.d_ff, cfg.padded_vocab,
+    )
+    Le, Ld = cfg.num_encoder_layers, cfg.num_layers
+    pd = cfg.param_dtype
+    enc = {
+        "attn_norm": ParamDecl((Le, d), ("layers", "embed"), "zeros", pd),
+        "mlp_norm": ParamDecl((Le, d), ("layers", "embed"), "zeros", pd),
+        **_attn_decls(Le, d, H, Hkv, hd, pd),
+        **_ffn_decls(Le, d, ff, pd),
+    }
+    dec = {
+        "attn_norm": ParamDecl((Ld, d), ("layers", "embed"), "zeros", pd),
+        "cross_norm": ParamDecl((Ld, d), ("layers", "embed"), "zeros", pd),
+        "mlp_norm": ParamDecl((Ld, d), ("layers", "embed"), "zeros", pd),
+        **_attn_decls(Ld, d, H, Hkv, hd, pd),
+        **_attn_decls(Ld, d, H, Hkv, hd, pd, prefix="x_"),
+        **_ffn_decls(Ld, d, ff, pd),
+    }
+    return {
+        "embed": ParamDecl((V, d), ("vocab", "embed"), "normal", pd),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_final_norm": ParamDecl((d,), ("embed",), "zeros", pd),
+        "final_norm": ParamDecl((d,), ("embed",), "zeros", pd),
+        "lm_head": ParamDecl((d, V), ("embed", "vocab"), "normal_out", pd),
+    }
+
+
+init_params = lambda cfg, key: init_tree(param_decls(cfg), key)  # noqa: E731
+param_shapes = lambda cfg: shape_tree(param_decls(cfg))  # noqa: E731
+param_axes = lambda cfg: axes_tree(param_decls(cfg))  # noqa: E731
+
+
+def _self_attn(lp, cfg, x, positions, *, bidirectional, prefix=""):
+    q = jnp.einsum("bsd,dhk->bshk", x, lp[prefix + "wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, lp[prefix + "wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, lp[prefix + "wv"])
+    q = apply_rope(q, positions, cfg.rope_theta_global)
+    k = apply_rope(k, positions, cfg.rope_theta_global)
+    out = select_attention(
+        cfg.attn_impl, q, k, v, positions, positions, GLOBAL,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        bidirectional=bidirectional,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, lp[prefix + "wo"]), (k, v)
+
+
+def _cross_attn(lp, cfg, x, enc_kv):
+    """Cross-attention: q from decoder, k/v precomputed from encoder."""
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["x_wq"])
+    sq, sk = x.shape[1], k.shape[1]
+    out = select_attention(
+        cfg.attn_impl, q, k, v,
+        jnp.arange(sq, dtype=jnp.int32), jnp.arange(sk, dtype=jnp.int32),
+        GLOBAL, bidirectional=True,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, lp["x_wo"])
+
+
+def encode(params, cfg: ModelConfig, frames: Array) -> Array:
+    """frames: (B, S_src, d) precomputed frontend embeddings."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def layer(lp, x):
+        h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+        a, _ = _self_attn(lp, cfg, h, positions, bidirectional=True)
+        x = x + a
+        h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+        return x + gated_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(
+            lambda c, lp: (layer(lp, c), None), x, params["enc_layers"]
+        )
+    else:
+        for i in range(cfg.num_encoder_layers):
+            lp = jax.tree.map(lambda p: p[i], params["enc_layers"])
+            x = layer(lp, x)
+    return rms_norm(x, params["enc_final_norm"], cfg.rms_eps)
+
+
+def _enc_cross_kv(params, cfg, enc_h):
+    """Precompute per-decoder-layer cross K/V stacks: (L, B, S_src, Hkv, hd)."""
+    def one(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_h, lp["x_wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_h, lp["x_wv"])
+        return k, v
+
+    if cfg.scan_layers:
+        _, (ks, vs) = jax.lax.scan(
+            lambda c, lp: (c, one(lp)), jnp.zeros(()), params["dec_layers"]
+        )
+        return ks, vs
+    ks, vs = [], []
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda p: p[i], params["dec_layers"])
+        k, v = one(lp)
+        ks.append(k)
+        vs.append(v)
+    return jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_train(params, cfg: ModelConfig, tokens: Array, enc_h: Array) -> Array:
+    """Teacher-forced decoder pass. tokens: (B, S_tgt). Returns hidden."""
+    x = params["embed"][tokens]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    xks, xvs = _enc_cross_kv(params, cfg, enc_h)
+
+    def layer(lp, x, xk, xv):
+        h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+        a, _ = _self_attn(lp, cfg, h, positions, bidirectional=False)
+        x = x + a
+        h = rms_norm(x, lp["cross_norm"], cfg.rms_eps)
+        x = x + _cross_attn(lp, cfg, h, (xk, xv))
+        h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+        return x + gated_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(
+            lambda c, xs: (layer(xs[0], c, xs[1], xs[2]), None),
+            x,
+            (params["dec_layers"], xks, xvs),
+        )
+    else:
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda p: p[i], params["dec_layers"])
+            x = layer(lp, x, xks[i], xvs[i])
+    return rms_norm(x, params["final_norm"], cfg.rms_eps)
+
+
+def lm_loss(params, cfg: ModelConfig, *, frames, tokens, targets,
+            loss_mask=None, runtime=None):
+    del runtime
+    enc_h = encode(params, cfg, frames)
+    h = decode_train(params, cfg, tokens, enc_h)
+    return _chunked_ce(params, cfg, h, targets, loss_mask)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int,
+               dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, Hkv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, Hkv, hd), dtype),
+        "xk": jnp.zeros((L, batch, src_len, Hkv, hd), dtype),
+        "xv": jnp.zeros((L, batch, src_len, Hkv, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, *, frames, tokens, cache_len: int,
+            runtime=None):
+    """Encode source + teacher-force the target prefix into the self-cache."""
+    del runtime
+    enc_h = encode(params, cfg, frames)
+    xk, xv = _enc_cross_kv(params, cfg, enc_h)
+    x = params["embed"][tokens]
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    ks, vs = [], []
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda p: p[i], params["dec_layers"])
+        h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+        a, (k, v) = _self_attn(lp, cfg, h, positions, bidirectional=False)
+        x = x + a
+        h = rms_norm(x, lp["cross_norm"], cfg.rms_eps)
+        x = x + _cross_attn(lp, cfg, h, (xk[i], xv[i]))
+        h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+        x = x + gated_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+        ks.append(k)
+        vs.append(v)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    k = jnp.stack(ks)
+    v = jnp.stack(vs)
+    pad = cache_len - s
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    from repro.models.transformer import _head_logits
+
+    logits = _head_logits(params, cfg, x[:, -1:])
+    cache = {"k": k, "v": v, "xk": xk, "xv": xv, "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, runtime=None):
+    """One decoder token against self-cache + cross-cache."""
+    pos = cache["pos"]
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    k_all, v_all = cache["k"], cache["v"]
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda p: p[i], params["dec_layers"])
+        h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        q = apply_rope(q, positions, cfg.rope_theta_global)
+        k = apply_rope(k, positions, cfg.rope_theta_global)
+        q = _replicate_small(q, runtime)
+        k = _replicate_small(k, runtime)
+        v = _replicate_small(v, runtime)
+        k_all = jax.lax.dynamic_update_slice(k_all, k[None], (i, 0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(v_all, v[None], (i, 0, pos, 0, 0))
+        out = attention_decode(
+            q, k_all[i], v_all[i], jnp.full((b,), pos, jnp.int32), GLOBAL
+        )
+        out = _replicate_small(out, runtime)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+        h = rms_norm(x, lp["cross_norm"], cfg.rms_eps)
+        x = x + _cross_attn(lp, cfg, h, (cache["xk"][i], cache["xv"][i]))
+        h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+        x = x + gated_mlp(h, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+    from repro.models.transformer import _head_logits
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = _head_logits(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache.update(k=k_all, v=v_all, pos=pos + 1)
+    return logits, new_cache

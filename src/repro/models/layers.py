@@ -1,0 +1,325 @@
+"""Shared model building blocks: norms, RoPE, attention variants, MLPs.
+
+All functions are pure and shape-polymorphic; sharding is decided by the
+caller (dist/sharding.py) via constraints on params/activations, never here.
+
+Attention comes in three interchangeable implementations:
+
+  * ``attention_xla``         — materialized-scores einsum path (short seq).
+  * ``attention_xla_chunked`` — online-softmax scan over KV blocks: the
+    flash-attention *algorithm* expressed in jnp so XLA fuses it; O(S) memory.
+    This is the dry-run/default long-context path.
+  * Pallas ``flash_attention`` (kernels/flash_attention) — the TPU-target
+    kernel, selected with attn_impl="flash" (validated in interpret mode).
+
+All three share the mask convention: causal + optional sliding window
+(window = -1 (GLOBAL) means unbounded), so every arch's local:global layer
+pattern runs through one code path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import GLOBAL
+
+Array = jax.Array
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# Norms & MLPs
+# --------------------------------------------------------------------- #
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def gated_mlp(x: Array, w_gate: Array, w_up: Array, w_down: Array, act: str) -> Array:
+    """SwiGLU / GeGLU feed-forward."""
+    gate = x @ w_gate
+    up = x @ w_up
+    if act == "silu":
+        h = jax.nn.silu(gate) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        raise ValueError(f"unknown act {act}")
+    return h @ w_down
+
+
+# --------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: Array | float) -> Array:
+    """(head_dim//2,) inverse frequencies; theta may be a traced scalar
+    (per-layer local/global theta under scan-over-layers)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (jnp.asarray(theta, jnp.float32) ** exponents)
+
+
+def apply_rope(x: Array, positions: Array, theta: Array | float) -> Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S) or (S,)."""
+    inv_freq = rope_frequencies(x.shape[-1], theta)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, hd/2)
+    # Broadcast over the head axis: (..., S, 1, hd/2)
+    angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Masking
+# --------------------------------------------------------------------- #
+def causal_window_bias(
+    q_positions: Array, k_positions: Array, window: Array | int
+) -> Array:
+    """Additive attention bias implementing causal + sliding-window masking.
+
+    window == GLOBAL (-1) means pure causal. Returns (..., Sq, Sk) float32
+    of {0, -inf}. ``window`` may be a traced scalar (per-layer pattern under
+    scan-over-layers).
+    """
+    dq = q_positions[..., :, None]
+    dk = k_positions[..., None, :]
+    visible = dk <= dq
+    w = jnp.asarray(window, jnp.int32)
+    in_window = jnp.where(w == GLOBAL, True, (dq - dk) < jnp.maximum(w, 1))
+    return jnp.where(visible & in_window, 0.0, _NEG_INF).astype(jnp.float32)
+
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    """(B, S, Hkv, hd) -> (B, S, Hkv*groups, hd) for GQA."""
+    if groups == 1:
+        return k
+    b, s, hkv, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, groups, hd))
+    return k.reshape(b, s, hkv * groups, hd)
+
+
+# --------------------------------------------------------------------- #
+# Attention implementations
+# --------------------------------------------------------------------- #
+def attention_xla(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_positions: Array,
+    k_positions: Array,
+    window: Array | int,
+    *,
+    bidirectional: bool = False,
+) -> Array:
+    """Materialized-score attention. q: (B,Sq,H,hd), k/v: (B,Sk,Hkv,hd).
+
+    q_positions/k_positions are 1D (Sq,)/(Sk,) — shared across the batch.
+    """
+    groups = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if not bidirectional:
+        bias = causal_window_bias(q_positions, k_positions, window)  # (Sq, Sk)
+        scores = scores + bias[None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_xla_chunked(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_positions: Array,
+    k_positions: Array,
+    window: Array | int,
+    *,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+    bidirectional: bool = False,
+) -> Array:
+    """Online-softmax (flash-algorithm) attention in pure jnp.
+
+    Two-level chunking: an outer ``jax.checkpoint``-ed scan over q chunks
+    and an inner scan over kv chunks carrying (m, l, acc). Live memory is
+    O(chunk_q·chunk_kv) scores + O(chunk_q·hd) accumulators — in both the
+    forward AND the recomputed backward — instead of O(Sq·Sk). This is the
+    flash-attention *algorithm* expressed for XLA; the Pallas kernel
+    (kernels/flash_attention) is the TPU-native version of the same tiling.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    groups = h // k.shape[2]
+    scale = hd**-0.5
+    chunk_q = max(1, min(chunk_q, sq))
+    chunk_kv = max(1, min(chunk_kv, sk))
+
+    n_kv = -(-sk // chunk_kv)
+    pad_kv = n_kv * chunk_kv - sk
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        k_positions = jnp.pad(
+            k_positions, (0, pad_kv), constant_values=jnp.iinfo(jnp.int32).max
+        )
+    kc = k.reshape(b, n_kv, chunk_kv, k.shape[2], hd)
+    vc = v.reshape(b, n_kv, chunk_kv, v.shape[2], hd)
+    kpos_c = k_positions.reshape(n_kv, chunk_kv)
+
+    n_q = -(-sq // chunk_q)
+    pad_q = n_q * chunk_q - sq
+    qp = q
+    q_pos_p = q_positions
+    if pad_q:
+        qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos_p = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    qcs = qp.reshape(b, n_q, chunk_q, h, hd).swapaxes(0, 1)  # (nq, b, cq, h, hd)
+    qpos_cs = q_pos_p.reshape(n_q, chunk_q)
+
+    # Static-window fast path: a q chunk starting at position p only sees
+    # keys in [p - window + 1, p + cq), i.e. a FIXED number of kv chunks at
+    # a dynamic offset. Slicing them out cuts attention FLOPs/traffic from
+    # O(S·S) to O(S·window) — decisive for SWA archs at 32k+ (gemma3,
+    # mixtral, hymba). Requires a static (python int) window, which the
+    # unrolled-layer paths provide (see transformer.forward_hidden).
+    import os as _os
+
+    static_window = (
+        isinstance(window, int) and window > 0
+        and _os.environ.get("REPRO_NO_STATIC_WIN") != "1"  # baseline knob
+    )
+    if static_window:
+        kw = min(n_kv, (window + chunk_q - 2) // chunk_kv + 2)
+
+    @functools.partial(jax.checkpoint, policy=None)
+    def q_chunk_attention(q_c, qp_c, qi):
+        """q_c: (b, cq, h, hd); qp_c: (cq,); qi: chunk index (traced)."""
+        q32 = (q_c * scale).astype(q_c.dtype)
+        if static_window:
+            first_q = (sk - sq) + qi * chunk_q
+            lo = jnp.clip((first_q - window + 1) // chunk_kv, 0, n_kv - kw)
+            kc_l = jax.lax.dynamic_slice_in_dim(kc, lo, kw, axis=1)
+            vc_l = jax.lax.dynamic_slice_in_dim(vc, lo, kw, axis=1)
+            kpos_l = jax.lax.dynamic_slice_in_dim(kpos_c, lo, kw, axis=0)
+        else:
+            kc_l, vc_l, kpos_l = kc, vc, kpos_c
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            k_c, v_c, kp_c = xs
+            k_c = _repeat_kv(k_c, groups)
+            v_c = _repeat_kv(v_c, groups)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q32, k_c).astype(jnp.float32)
+            if bidirectional:
+                bias = jnp.where(kp_c >= 0, 0.0, _NEG_INF)[None, None, None]
+            else:
+                bias = causal_window_bias(qp_c, kp_c, window)[None, None]
+            s = s + bias
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # Keep m finite on fully-masked rows so exp() yields 0, not NaN.
+            m_safe = jnp.where(m_new <= _NEG_INF / 2, 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(m <= _NEG_INF / 2, _NEG_INF, m) - m_safe)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_c.dtype), v_c
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, chunk_q), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, chunk_q), jnp.float32)
+        acc0 = jnp.zeros((b, h, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, acc0),
+            (kc_l.swapaxes(0, 1), vc_l.swapaxes(0, 1), kpos_l),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.swapaxes(1, 2).astype(q_c.dtype)  # (b, cq, h, hd)
+
+    _, outs = jax.lax.scan(
+        lambda _, xs: (None, q_chunk_attention(xs[0], xs[1], xs[2])),
+        None,
+        (qcs, qpos_cs, jnp.arange(n_q, dtype=jnp.int32)),
+    )
+    out = outs.swapaxes(0, 1).reshape(b, n_q * chunk_q, h, hd)
+    return out[:, :sq]
+
+
+def attention_decode(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    q_position: Array,
+    window: Array | int,
+) -> Array:
+    """Single-token decode attention against a (possibly seq-sharded) cache.
+
+    q: (B, 1, H, hd); k/v_cache: (B, S, Hkv, hd); q_position: (B,) int32.
+    Entries beyond q_position (or outside the window) are masked. The cache
+    sequence axis may be sharded (dist/sharding) — the max/sum reductions
+    then lower to small cross-shard all-reduces (flash-decode style).
+    """
+    b, s, hkv, hd = k_cache.shape
+    groups = q.shape[2] // hkv
+    k = _repeat_kv(k_cache, groups)
+    v = _repeat_kv(v_cache, groups)
+    scale = hd**-0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    dq = q_position[:, None]  # (B, 1)
+    visible = kpos[None, :] <= dq
+    w = jnp.asarray(window, jnp.int32)
+    in_window = jnp.where(w == GLOBAL, True, (dq - kpos[None, :]) < jnp.maximum(w, 1))
+    bias = jnp.where(visible & in_window, 0.0, _NEG_INF)  # (B, S)
+    probs = jax.nn.softmax(scores + bias[:, None, None, :], axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def select_attention(
+    impl: str,
+    q: Array,
+    k: Array,
+    v: Array,
+    q_positions: Array,
+    k_positions: Array,
+    window: Array | int,
+    *,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+    bidirectional: bool = False,
+) -> Array:
+    """Dispatch on attn_impl; 'auto' = xla below 8k keys, chunked above."""
+    if impl == "auto":
+        impl = "xla" if k.shape[1] <= 8192 else "xla_chunked"
+    if impl == "xla":
+        return attention_xla(
+            q, k, v, q_positions, k_positions, window, bidirectional=bidirectional
+        )
+    if impl == "xla_chunked":
+        return attention_xla_chunked(
+            q,
+            k,
+            v,
+            q_positions,
+            k_positions,
+            window,
+            chunk_q=chunk_q,
+            chunk_kv=chunk_kv,
+            bidirectional=bidirectional,
+        )
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        return flash_ops.flash_attention(
+            q, k, v, q_positions, k_positions, window, bidirectional=bidirectional
+        )
+    raise ValueError(f"unknown attn impl {impl}")

@@ -1,0 +1,311 @@
+"""Mixture-of-Experts FFN — three interchangeable implementations.
+
+  * ``moe_ffn_reference`` — every expert processes every token, outputs
+    combined by router weights. O(E·t·d·ff) compute: only for tests/smoke
+    configs. This is the semantic oracle for the other two.
+  * ``moe_ffn_dropless``  — sort-based dropless dispatch with
+    ``jax.lax.ragged_dot`` (single-host efficient path used by examples).
+  * ``moe_ffn_ep``        — expert-parallel shard_map path for the pod mesh:
+    tokens are replicated across the ``expert``×``tp`` axes (standard
+    activation layout), each expert shard slices its local experts' capacity
+    buffer, computes, and the combine is a masked psum over the expert axis
+    (+ psum over tp for the down-projection). The collective structure —
+    one (t,d)-sized psum per MoE layer over the expert axis — is what the
+    roofline's collective term reads off the dry-run HLO.
+
+Router convention (mixtral/moonlight style): softmax over expert logits,
+top-k, renormalize the top-k probabilities to sum to 1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def router_topk(xf: Array, w_router: Array, k: int):
+    """xf: (t, d) -> (topk_probs (t,k) fp32 renormalized, topk_idx (t,k) i32)."""
+    logits = xf.astype(jnp.float32) @ w_router.astype(jnp.float32)  # (t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_p, topk_i = jax.lax.top_k(probs, k)
+    topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)
+    return topk_p, topk_i.astype(jnp.int32)
+
+
+def _expert_ffn(h_in: Array, wg: Array, wu: Array, wd: Array, act: str) -> Array:
+    """Per-expert gated FFN. h_in: (E, C, d); w*: (E, d, ff)/(E, ff, d)."""
+    gate = jnp.einsum("ecd,edf->ecf", h_in, wg)
+    up = jnp.einsum("ecd,edf->ecf", h_in, wu)
+    fn = jax.nn.silu if act == "silu" else functools.partial(
+        jax.nn.gelu, approximate=True
+    )
+    return jnp.einsum("ecf,efd->ecd", fn(gate) * up, wd)
+
+
+# --------------------------------------------------------------------- #
+# Reference (dense) implementation — the oracle.
+# --------------------------------------------------------------------- #
+def moe_ffn_reference(
+    x: Array, w_router: Array, wg: Array, wu: Array, wd: Array, cfg: ModelConfig
+) -> Array:
+    """x: (B, S, d). Computes all experts on all tokens, combines by router."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    topk_p, topk_i = router_topk(xf, w_router, cfg.experts_per_token)
+    # (t, E) combine weights from the top-k selection.
+    combine = jnp.zeros((b * s, cfg.num_experts), jnp.float32)
+    combine = combine.at[
+        jnp.arange(b * s)[:, None], topk_i
+    ].set(topk_p)
+    all_out = _expert_ffn(
+        jnp.broadcast_to(xf[None], (cfg.num_experts, b * s, d)).swapaxes(0, 0),
+        wg,
+        wu,
+        wd,
+        cfg.act,
+    )  # (E, t, d) — note h_in here is (E, t, d) with C := t
+    y = jnp.einsum("te,etd->td", combine, all_out.astype(jnp.float32))
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Dropless sort-based implementation (ragged_dot).
+# --------------------------------------------------------------------- #
+def moe_ffn_dropless(
+    x: Array, w_router: Array, wg: Array, wu: Array, wd: Array, cfg: ModelConfig
+) -> Array:
+    """Sort tokens by expert, run ragged grouped matmuls, scatter back."""
+    b, s, d = x.shape
+    k = cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+    topk_p, topk_i = router_topk(xf, w_router, k)
+
+    flat_e = topk_i.reshape(-1)  # (t*k,)
+    flat_p = topk_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    tok_of_slot = order // k
+    xs = xf[tok_of_slot]  # (t*k, d) tokens in expert order
+    group_sizes = jnp.bincount(flat_e, length=cfg.num_experts)
+
+    gate = jax.lax.ragged_dot(xs, wg, group_sizes)
+    up = jax.lax.ragged_dot(xs, wu, group_sizes)
+    fn = jax.nn.silu if cfg.act == "silu" else functools.partial(
+        jax.nn.gelu, approximate=True
+    )
+    h = fn(gate) * up
+    out = jax.lax.ragged_dot(h, wd, group_sizes)  # (t*k, d)
+
+    out = out.astype(jnp.float32) * flat_p[order][:, None]
+    y = jnp.zeros((t, d), jnp.float32).at[tok_of_slot].add(out)
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# GShard-style grouped einsum implementation (GSPMD-auto path).
+# --------------------------------------------------------------------- #
+def moe_ffn_gshard(
+    x: Array, w_router: Array, wg: Array, wu: Array, wd: Array,
+    cfg: ModelConfig, *, group_size: int = 512,
+    mesh=None, expert_axis: str | None = None,
+    group_axes: tuple[str, ...] | None = None,
+    tp_axis: str | None = None,
+) -> Array:
+    """Capacity-dispatch MoE as pure einsums — the classic GShard SPMD
+    formulation. Tokens are viewed as (G, S_g) groups with per-group
+    capacity; the dispatch/combine one-hots are (G, S_g, E, C) products of
+    einsums that GSPMD partitions without manual collectives:
+
+      expert_in  = einsum('gsec,gsd->egcd', dispatch, x)   # e-shard local
+      h          = expert FFN on (e, g·c, d)               # EP compute
+      y          = einsum('gsec,egcd->gsd', combine, out)  # psum over e
+
+    Per-device transient ≈ S_g·E·C·2B per group-shard — bounded by
+    group_size, independent of global batch. Used by the pod-scale train
+    path (the shard_map EP variant trips an XLA SPMD partitioner CHECK on
+    some meshes — see DESIGN.md §4 notes).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    g_sz = min(group_size, t)
+    assert t % g_sz == 0, (t, g_sz)
+    g = t // g_sz
+    cap = _capacity(g_sz, k, e, cfg.moe_capacity_factor)
+
+    xg = x.reshape(g, g_sz, d)
+    topk_p, topk_i = router_topk(x.reshape(t, d), w_router, k)
+    topk_p = topk_p.reshape(g, g_sz, k)
+    topk_i = topk_i.reshape(g, g_sz, k)
+
+    # (G, S, E) routing indicator and combine probability.
+    oh = jax.nn.one_hot(topk_i, e, dtype=jnp.float32)  # (G, S, k, E)
+    route = jnp.sum(oh, axis=2)  # (G, S, E) ∈ {0,1}
+    probs = jnp.einsum("gske,gsk->gse", oh, topk_p)
+    # Position of each (token, expert) assignment within the expert's
+    # per-group capacity buffer: cumsum over the token dim.
+    pos = jnp.cumsum(route, axis=1) - 1.0  # (G, S, E)
+    keep = (pos < cap) & (route > 0)
+    # The (G,S,E,C) one-hots are the layer's largest transients; building
+    # them directly in the compute dtype halves that footprint (perf knob —
+    # REPRO_MOE_OH_BF16=0 keeps fp32 for the baseline measurements).
+    import os as _os
+
+    oh_dtype = (
+        jnp.dtype(cfg.compute_dtype)
+        if _os.environ.get("REPRO_MOE_OH_BF16", "1") == "1"
+        else jnp.float32
+    )
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=oh_dtype)
+    dispatch = pos_oh * keep[..., None].astype(oh_dtype)  # (G, S, E, C)
+    combine = dispatch * probs[..., None].astype(oh_dtype)
+
+    # Explicit constraints: without them GSPMD has been observed to
+    # replicate the (E, G, C, d) buffers (44 GB/device for moonshot) —
+    # dual expert×group sharding is the whole point of the layout.
+    if mesh is not None and expert_axis is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        e_ax = expert_axis if mesh.shape.get(expert_axis, 1) > 1 else None
+        g_ax = tuple(a for a in (group_axes or ()) if mesh.shape.get(a, 1) > 1)
+        g_ent = (g_ax[0] if len(g_ax) == 1 else g_ax) if g_ax else None
+        f_ax = tp_axis if tp_axis and mesh.shape.get(tp_axis, 1) > 1 else None
+
+        def c4(z, spec):
+            return jax.lax.with_sharding_constraint(z, NamedSharding(mesh, spec))
+    else:
+        P = None
+        c4 = lambda z, spec: z  # noqa: E731
+        e_ax = g_ent = f_ax = None
+
+    from jax.sharding import PartitionSpec as _P
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    dispatch_c = c4(dispatch.astype(cd), _P(g_ent, None, None, None))
+    combine_c = c4(combine.astype(cd), _P(g_ent, None, None, None))
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch_c, xg)  # (E, G, C, d)
+    expert_in = c4(expert_in, _P(e_ax, g_ent, None, None))
+    gate = jnp.einsum("egcd,edf->egcf", expert_in, wg)
+    up = jnp.einsum("egcd,edf->egcf", expert_in, wu)
+    fn = jax.nn.silu if cfg.act == "silu" else functools.partial(
+        jax.nn.gelu, approximate=True
+    )
+    h = c4(fn(gate) * up, _P(e_ax, g_ent, None, f_ax))
+    out = jnp.einsum("egcf,efd->egcd", h, wd)
+    out = c4(out, _P(e_ax, g_ent, None, None))
+    y = jnp.einsum("gsec,egcd->gsd", combine_c, out)
+    return y.reshape(b, s, d).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Expert-parallel shard_map implementation (pod mesh).
+# --------------------------------------------------------------------- #
+def _capacity(tokens: int, k: int, num_experts: int, factor: float) -> int:
+    c = int(tokens * k / num_experts * factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _local_dispatch(xf: Array, topk_p: Array, topk_i: Array, num_experts: int,
+                    capacity: int):
+    """Build the (E, C, d) capacity buffer + combine metadata, locally.
+
+    Returns (buffer, slot_expert, slot_pos, slot_weight, slot_token, keep).
+    """
+    t, k = topk_i.shape
+    flat_e = topk_i.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=num_experts)
+    offsets = jnp.cumsum(counts) - counts  # start of each expert's run
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - offsets[sorted_e]
+    keep = pos_in_e < capacity
+    tok_of_slot = (order // k).astype(jnp.int32)
+    # Dropped slots point one past the buffer; scatter mode="drop" discards
+    # them (never colliding with a legitimate slot).
+    safe_pos = jnp.where(keep, pos_in_e, capacity).astype(jnp.int32)
+    buf = jnp.zeros((num_experts, capacity, xf.shape[-1]), xf.dtype)
+    buf = buf.at[sorted_e, safe_pos].set(xf[tok_of_slot], mode="drop")
+    # Clamp for the gather on the combine side (weights zero the dropped).
+    safe_pos = jnp.minimum(safe_pos, capacity - 1)
+    weight = topk_p.reshape(-1)[order] * keep  # (t*k,) fp32
+    return buf, sorted_e, safe_pos, weight, tok_of_slot, keep
+
+
+def moe_ffn_ep(
+    x: Array,
+    w_router: Array,
+    wg: Array,
+    wu: Array,
+    wd: Array,
+    cfg: ModelConfig,
+    mesh,
+    *,
+    batch_axes: tuple[str, ...] = (),
+    expert_axis: str,
+    tp_axis: str | None,
+) -> Array:
+    """Expert-parallel MoE under shard_map (manual ONLY over expert/tp).
+
+    The batch/client axes stay in GSPMD-auto mode, so this composes under
+    the client-vmap of the federated runtime. Sharding contract:
+      x  : replicated over expert×tp (batch axes auto)
+      w_router : replicated
+      wg/wu : P(expert_axis, None, tp_axis) ; wd : P(expert_axis, tp_axis, None)
+    """
+    num_experts, k = cfg.num_experts, cfg.experts_per_token
+    e_shards = mesh.shape[expert_axis]
+    e_local = num_experts // e_shards
+    assert e_local * e_shards == num_experts, (
+        f"{cfg.name}: {num_experts} experts not divisible by expert axis "
+        f"{e_shards}"
+    )
+
+    def body(x_l, wr_l, wg_l, wu_l, wd_l):
+        b_l, s, d = x_l.shape
+        t = b_l * s
+        xf = x_l.reshape(t, d)
+        topk_p, topk_i = router_topk(xf, wr_l, k)
+        cap = _capacity(t, k, num_experts, cfg.moe_capacity_factor)
+        buf, sorted_e, safe_pos, weight, tok_of_slot, keep = _local_dispatch(
+            xf, topk_p, topk_i, num_experts, cap
+        )
+        # Slice this shard's experts out of the (replicated-over-expert-axis)
+        # capacity buffer — dispatch costs no collective.
+        e_idx = jax.lax.axis_index(expert_axis)
+        my = jax.lax.dynamic_slice_in_dim(buf, e_idx * e_local, e_local, axis=0)
+        out_l = _expert_ffn(my, wg_l, wu_l, wd_l, cfg.act)  # (E_l, C, d_partial)
+        if tp_axis is not None:
+            out_l = jax.lax.psum(out_l, tp_axis)  # reduce ff-sharded down-proj
+        # Write local experts' outputs back into a full (E, C, d) frame and
+        # sum across expert shards (the combine collective).
+        frame = jnp.zeros((num_experts, cap, d), out_l.dtype)
+        frame = jax.lax.dynamic_update_slice_in_dim(frame, out_l, e_idx * e_local, 0)
+        frame = jax.lax.psum(frame, expert_axis)
+        # Gather back to token order and weight-combine.
+        slot_out = frame[sorted_e, safe_pos].astype(jnp.float32)
+        slot_out = slot_out * (weight * keep)[:, None]
+        y = jnp.zeros((t, d), jnp.float32).at[tok_of_slot].add(slot_out)
+        return y.reshape(b_l, s, d).astype(x_l.dtype)
+
+    del batch_axes  # auto axes: never named in the specs
+    manual = {expert_axis} | ({tp_axis} if tp_axis else set())
+    in_specs = (
+        P(None, None, None),
+        P(None, None),
+        P(expert_axis, None, tp_axis),
+        P(expert_axis, None, tp_axis),
+        P(expert_axis, tp_axis, None),
+    )
+    out_specs = P(None, None, None)
+    return jax.shard_map(
+        body, mesh=mesh, axis_names=manual, in_specs=in_specs,
+        out_specs=out_specs, check_vma=False,
+    )(x, w_router, wg, wu, wd)

@@ -1,0 +1,83 @@
+"""Parameter-table machinery: one declaration produces init, abstract
+shapes (for the dry-run) and logical sharding axes (for dist/sharding.py).
+
+Every parameter is declared once as ``ParamDecl(shape, axes, init)`` where
+``axes`` is a tuple of *logical* axis names (same length as shape):
+
+  "layers"   — stacked scan dim, never sharded
+  "vocab"    — vocabulary (embedding/lm-head rows)
+  "embed"    — d_model features
+  "heads"    — attention query heads  (sharded attn_tp-way per arch)
+  "kv"       — kv heads               (replicated)
+  "head_dim" — per-head features      (replicated)
+  "mlp"      — FFN hidden             (sharded over the full model factor)
+  "experts"  — MoE expert dim         (sharded over the expert factor)
+  "expert_mlp" — per-expert FFN hidden (sharded over the tp factor)
+  "ssm"      — SSM inner channels     (sharded over the full model factor)
+  None       — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "normal_out"
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # For stacked (layers, in, ..., out) weights, fan-in is the product of
+    # all dims except the leading "layers" stack and the trailing out dim.
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return max(math.prod(shape[:-1]) // (shape[0] if len(shape) > 2 else 1), 1)
+
+
+def init_param(decl: ParamDecl, key: Array) -> Array:
+    dtype = jnp.dtype(decl.dtype)
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, dtype)
+    std = 1.0 / math.sqrt(_fan_in(decl.shape))
+    if decl.init == "normal_out":  # output-layer init, smaller
+        std = std / 2.0
+    return (jax.random.normal(key, decl.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(decls, key: Array):
+    """Initialize a pytree of ParamDecl into concrete arrays."""
+    flat, treedef = jax.tree.flatten(decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+    keys = jax.random.split(key, len(flat))
+    vals = [init_param(d, k) for d, k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shape_tree(decls):
+    """ParamDecl pytree -> ShapeDtypeStruct pytree (dry-run params)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        decls,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+def axes_tree(decls):
+    """ParamDecl pytree -> logical-axes pytree (same structure)."""
+    return jax.tree.map(
+        lambda d: d.axes, decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )

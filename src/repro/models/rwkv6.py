@@ -1,0 +1,251 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent decay.
+
+Faithful structure: token-shift mixing with low-rank data-dependent
+interpolation (time_maa LoRA), data-dependent per-channel decay
+``w = exp(-exp(w0 + lora(x)))``, per-head WKV state recurrence (ssm.wkv6 /
+kernels/wkv6), gated output, and squared-ReLU channel-mix. We use RMSNorm
+where upstream uses LayerNorm-with-bias (uniform with the rest of the
+framework; noted in DESIGN.md).
+
+Head layout: heads = d_model // 64 (hd = 64), as in the released rwkv6-1.6b.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import ParamDecl, axes_tree, init_tree, shape_tree
+
+Array = jax.Array
+
+HEAD_DIM = 64
+MAA_RANK = 32
+DECAY_RANK = 64
+N_MAA = 5  # w, k, v, r, g
+
+
+def num_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def param_decls(cfg: ModelConfig):
+    L, d, ff, V = cfg.num_layers, cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    H = num_heads(cfg)
+    pd = cfg.param_dtype
+    layers = {
+        "ln_tm": ParamDecl((L, d), ("layers", "embed"), "zeros", pd),
+        "ln_cm": ParamDecl((L, d), ("layers", "embed"), "zeros", pd),
+        # token-shift interpolation vectors + LoRA
+        "maa_x": ParamDecl((L, d), ("layers", "embed"), "zeros", pd),
+        "maa_wkvrg": ParamDecl((L, N_MAA, d), ("layers", None, "embed"), "zeros", pd),
+        "maa_w1": ParamDecl((L, d, N_MAA * MAA_RANK), ("layers", "embed", None), "normal", pd),
+        "maa_w2": ParamDecl((L, N_MAA, MAA_RANK, d), ("layers", None, None, "embed"), "normal", pd),
+        # decay
+        "decay": ParamDecl((L, d), ("layers", "mlp"), "zeros", "float32"),
+        "decay_w1": ParamDecl((L, d, DECAY_RANK), ("layers", "embed", None), "normal", pd),
+        "decay_w2": ParamDecl((L, DECAY_RANK, d), ("layers", None, "mlp"), "normal", pd),
+        "u": ParamDecl((L, H, HEAD_DIM), ("layers", "heads", "head_dim"), "zeros", "float32"),
+        # projections (columns sharded = head-sharded for r/k/v; see DESIGN)
+        "wr": ParamDecl((L, d, d), ("layers", "embed", "mlp"), "normal", pd),
+        "wk": ParamDecl((L, d, d), ("layers", "embed", "mlp"), "normal", pd),
+        "wv": ParamDecl((L, d, d), ("layers", "embed", "mlp"), "normal", pd),
+        "wg": ParamDecl((L, d, d), ("layers", "embed", "mlp"), "normal", pd),
+        "wo": ParamDecl((L, d, d), ("layers", "mlp", "embed"), "normal_out", pd),
+        "ln_x": ParamDecl((L, d), ("layers", "mlp"), "zeros", pd),
+        # channel-mix
+        "cm_maa_k": ParamDecl((L, d), ("layers", "embed"), "zeros", pd),
+        "cm_maa_r": ParamDecl((L, d), ("layers", "embed"), "zeros", pd),
+        "cm_wk": ParamDecl((L, d, ff), ("layers", "embed", "mlp"), "normal", pd),
+        "cm_wv": ParamDecl((L, ff, d), ("layers", "mlp", "embed"), "normal_out", pd),
+        "cm_wr": ParamDecl((L, d, d), ("layers", "embed", None), "normal", pd),
+    }
+    decls = {
+        "embed": ParamDecl((V, d), ("vocab", "embed"), "normal", pd),
+        "layers": layers,
+        "final_norm": ParamDecl((d,), ("embed",), "zeros", pd),
+    }
+    if not cfg.tie_embeddings:
+        decls["lm_head"] = ParamDecl((d, V), ("embed", "vocab"), "normal_out", pd)
+    return decls
+
+
+init_params = lambda cfg, key: init_tree(param_decls(cfg), key)  # noqa: E731
+param_shapes = lambda cfg: shape_tree(param_decls(cfg))  # noqa: E731
+param_axes = lambda cfg: axes_tree(param_decls(cfg))  # noqa: E731
+
+
+def _shift(x: Array, prev: Array | None = None) -> Array:
+    """Token shift: x_{t-1} along time; first step takes ``prev`` (decode)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _data_dependent_mix(lp, x: Array, xprev: Array):
+    """Finch token-shift: five interpolated views of (x, x_{t-1})."""
+    dx = xprev - x
+    xxx = x + dx * lp["maa_x"]
+    r1 = jnp.tanh(xxx @ lp["maa_w1"])  # (B,T,5*rank)
+    b, t, _ = r1.shape
+    r1 = r1.reshape(b, t, N_MAA, MAA_RANK)
+    mods = jnp.einsum("btnr,nrd->btnd", r1, lp["maa_w2"])  # (B,T,5,d)
+    views = []
+    for i in range(N_MAA):
+        mi = lp["maa_wkvrg"][i] + mods[:, :, i]
+        views.append(x + dx * mi)
+    return views  # xw, xk, xv, xr, xg
+
+
+def _time_mix(lp, cfg, x, wkv_state=None, x_prev=None, chunk=128):
+    """Returns (out, new_wkv_state, last_x). x: (B,T,d)."""
+    b, t, d = x.shape
+    H = num_heads(cfg)
+    xprev = _shift(x, x_prev)
+    xw, xk, xv, xr, xg = _data_dependent_mix(lp, x, xprev)
+    r = xr @ lp["wr"]
+    k = xk @ lp["wk"]
+    v = xv @ lp["wv"]
+    g = jax.nn.silu(xg @ lp["wg"])
+    ww = lp["decay"].astype(jnp.float32) + (
+        jnp.tanh(xw @ lp["decay_w1"]) @ lp["decay_w2"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww))  # (B,T,d) in (0,1)
+
+    def heads(z):
+        return z.reshape(b, t, H, HEAD_DIM)
+
+    y, s_final = ssm_mod.wkv6(
+        heads(r), heads(k), heads(v), heads(w.astype(x.dtype)), lp["u"],
+        initial_state=wkv_state, chunk=chunk,
+    )
+    y = y.reshape(b, t, d)
+    y = rms_norm(y, lp["ln_x"], cfg.rms_eps) * g
+    return y @ lp["wo"], s_final, x[:, -1]
+
+
+def _channel_mix(lp, x, x_prev=None):
+    xprev = _shift(x, x_prev)
+    dx = xprev - x
+    xk = x + dx * lp["cm_maa_k"]
+    xr = x + dx * lp["cm_maa_r"]
+    k = jnp.square(jax.nn.relu(xk @ lp["cm_wk"]))
+    kv = k @ lp["cm_wv"]
+    return jax.nn.sigmoid(xr @ lp["cm_wr"]) * kv, x[:, -1]
+
+
+def _layer(lp, x, cfg, state=None, chunk=128):
+    """One RWKV block. state: dict with wkv/tm_x/cm_x or None (train)."""
+    h = rms_norm(x, lp["ln_tm"], cfg.rms_eps)
+    tm_out, wkv_new, tm_x = _time_mix(
+        lp, cfg, h,
+        None if state is None else state["wkv"],
+        None if state is None else state["tm_x"],
+        chunk=chunk,
+    )
+    x = x + tm_out
+    h = rms_norm(x, lp["ln_cm"], cfg.rms_eps)
+    cm_out, cm_x = _channel_mix(
+        lp, h, None if state is None else state["cm_x"]
+    )
+    x = x + cm_out
+    return x, {"wkv": wkv_new, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def forward_hidden(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+                   runtime=None, return_state: bool = False):
+    del runtime
+    x = params["embed"][tokens] if tokens is not None else embeds
+    layer = functools.partial(_layer, cfg=cfg)
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    if cfg.scan_layers:
+        def body(carry, lp):
+            y, st = layer(lp, x=carry)
+            return y, st if return_state else None
+
+        x, states = jax.lax.scan(body, x, params["layers"])
+    else:
+        states_list = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            x, st = layer(lp, x=x)
+            states_list.append(st)
+        states = (
+            jax.tree.map(lambda *z: jnp.stack(z), *states_list)
+            if return_state
+            else None
+        )
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return (x, states) if return_state else x
+
+
+def _head_logits(params, cfg, h):
+    from repro.models.transformer import _head_logits as _hl
+
+    return _hl(params, cfg, h)
+
+
+def lm_loss(params, cfg: ModelConfig, *, tokens=None, embeds=None, targets,
+            loss_mask=None, runtime=None):
+    from repro.models import transformer as tf  # reuse chunked-CE
+
+    h = forward_hidden(params, cfg, tokens=tokens, embeds=embeds)
+    tlen = targets.shape[1]
+    h = h[:, -tlen:]
+    return tf._chunked_ce(params, cfg, h, targets, loss_mask)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    del max_len, dtype  # O(1) state — the whole point of the family
+    L, d = cfg.num_layers, cfg.d_model
+    H = num_heads(cfg)
+    return {
+        "wkv": jnp.zeros((L, batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+        "tm_x": jnp.zeros((L, batch, d), jnp.dtype(cfg.compute_dtype)),
+        "cm_x": jnp.zeros((L, batch, d), jnp.dtype(cfg.compute_dtype)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+            cache_len: int = 0, runtime=None):
+    del cache_len, runtime
+    h, states = forward_hidden(
+        params, cfg, tokens=tokens, embeds=embeds, return_state=True
+    )
+    cache = {
+        "wkv": states["wkv"],
+        "tm_x": states["tm_x"],
+        "cm_x": states["cm_x"],
+        "pos": jnp.asarray(
+            tokens.shape[1] if tokens is not None else embeds.shape[1], jnp.int32
+        ),
+    }
+    return _head_logits(params, cfg, h[:, -1:]), cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, runtime=None):
+    """tokens: (B,1). Unrolled layers; state updated in place."""
+    del runtime
+    x = params["embed"][tokens]
+    wkv, tm_x, cm_x = cache["wkv"], cache["tm_x"], cache["cm_x"]
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda p: p[i], params["layers"])
+        st = {"wkv": wkv[i], "tm_x": tm_x[i], "cm_x": cm_x[i]}
+        x, st_new = _layer(lp, x, cfg, state=st, chunk=1)
+        wkv = wkv.at[i].set(st_new["wkv"])
+        tm_x = tm_x.at[i].set(st_new["tm_x"])
+        cm_x = cm_x.at[i].set(st_new["cm_x"])
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = _head_logits(params, cfg, x)
+    return logits, {
+        "wkv": wkv, "tm_x": tm_x, "cm_x": cm_x, "pos": cache["pos"] + 1
+    }

@@ -1,0 +1,621 @@
+"""Decoder-only LM trunk covering the dense / MoE / hybrid / VLM families.
+
+Layer-stacked parameters (leading ``num_layers`` dim) + ``lax.scan`` keep the
+HLO small and compile times flat in depth (train/prefill). The decode path
+unrolls layers instead so KV-cache updates stay in-place-friendly
+(scan ys would copy the full cache every layer).
+
+Per-layer attention windows and RoPE thetas ride along the scan as (L,)
+arrays, which is how one code path serves full-causal, SWA and gemma-style
+local:global interleaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import GLOBAL, Family, ModelConfig
+from repro.models.layers import (
+    attention_decode,
+    apply_rope,
+    gated_mlp,
+    rms_norm,
+    select_attention,
+)
+from repro.models.params import ParamDecl, axes_tree, init_tree, shape_tree
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution context threaded through model apply functions.
+
+    mesh/axis names are needed only by the expert-parallel MoE path; the
+    default (None) selects single-host implementations everywhere.
+    """
+
+    mesh: Any = None
+    batch_axes: tuple[str, ...] = ("data",)
+    expert_axis: str | None = None
+    tp_axis: str | None = None
+    moe_impl: str = "dropless"  # "reference" | "dropless" | "gshard" | "ep"
+    # Mesh axes the MoE token-group dim is sharded over *inside* the current
+    # calling context (under the client-vmap that's the intra-slot axes).
+    moe_group_axes: tuple[str, ...] = ()
+
+
+# --------------------------------------------------------------------- #
+# Parameter declarations
+# --------------------------------------------------------------------- #
+def param_decls(cfg: ModelConfig):
+    L, d, H, Hkv, hd = (
+        cfg.num_layers,
+        cfg.d_model,
+        cfg.num_heads,
+        cfg.num_kv_heads,
+        cfg.head_dim,
+    )
+    ff, V = cfg.d_ff, cfg.padded_vocab
+    pd = cfg.param_dtype
+
+    layers: dict[str, ParamDecl] = {
+        "attn_norm": ParamDecl((L, d), ("layers", "embed"), "zeros", pd),
+        "mlp_norm": ParamDecl((L, d), ("layers", "embed"), "zeros", pd),
+        "wq": ParamDecl((L, d, H, hd), ("layers", "embed", "heads", "head_dim"), "normal", pd),
+        "wk": ParamDecl((L, d, Hkv, hd), ("layers", "embed", "kv", "head_dim"), "normal", pd),
+        "wv": ParamDecl((L, d, Hkv, hd), ("layers", "embed", "kv", "head_dim"), "normal", pd),
+        "wo": ParamDecl((L, H, hd, d), ("layers", "heads", "head_dim", "embed"), "normal_out", pd),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = ParamDecl((L, H, hd), ("layers", "heads", "head_dim"), "zeros", pd)
+        layers["bk"] = ParamDecl((L, Hkv, hd), ("layers", "kv", "head_dim"), "zeros", pd)
+        layers["bv"] = ParamDecl((L, Hkv, hd), ("layers", "kv", "head_dim"), "zeros", pd)
+    if cfg.qk_norm:
+        layers["q_norm"] = ParamDecl((L, hd), ("layers", "head_dim"), "zeros", pd)
+        layers["k_norm"] = ParamDecl((L, hd), ("layers", "head_dim"), "zeros", pd)
+
+    if cfg.num_experts:
+        layers["w_router"] = ParamDecl((L, d, cfg.num_experts), ("layers", "embed", None), "normal", pd)
+        layers["we_gate"] = ParamDecl((L, cfg.num_experts, d, ff), ("layers", "experts", "embed", "expert_mlp"), "normal", pd)
+        layers["we_up"] = ParamDecl((L, cfg.num_experts, d, ff), ("layers", "experts", "embed", "expert_mlp"), "normal", pd)
+        layers["we_down"] = ParamDecl((L, cfg.num_experts, ff, d), ("layers", "experts", "expert_mlp", "embed"), "normal_out", pd)
+    else:
+        layers["w_gate"] = ParamDecl((L, d, ff), ("layers", "embed", "mlp"), "normal", pd)
+        layers["w_up"] = ParamDecl((L, d, ff), ("layers", "embed", "mlp"), "normal", pd)
+        layers["w_down"] = ParamDecl((L, ff, d), ("layers", "mlp", "embed"), "normal_out", pd)
+
+    if cfg.family is Family.HYBRID:
+        di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+        layers.update(
+            ssm_norm=ParamDecl((L, d), ("layers", "embed"), "zeros", pd),
+            ssm_in=ParamDecl((L, d, 2 * di), ("layers", "embed", "ssm"), "normal", pd),
+            ssm_conv=ParamDecl((L, di, cfg.ssm_conv), ("layers", "ssm", None), "normal", pd),
+            ssm_xproj=ParamDecl((L, di, dtr + 2 * st), ("layers", "ssm", None), "normal", pd),
+            ssm_dtproj=ParamDecl((L, dtr, di), ("layers", None, "ssm"), "normal", pd),
+            ssm_a_log=ParamDecl((L, di, st), ("layers", "ssm", None), "zeros", "float32"),
+            ssm_d=ParamDecl((L, di), ("layers", "ssm"), "ones", "float32"),
+            ssm_dt_bias=ParamDecl((L, di), ("layers", "ssm"), "zeros", "float32"),
+            ssm_out=ParamDecl((L, di, d), ("layers", "ssm", "embed"), "normal_out", pd),
+        )
+
+    decls = {
+        "embed": ParamDecl((V, d), ("vocab", "embed"), "normal", pd),
+        "layers": layers,
+        "final_norm": ParamDecl((d,), ("embed",), "zeros", pd),
+    }
+    if not cfg.tie_embeddings:
+        decls["lm_head"] = ParamDecl((d, V), ("embed", "vocab"), "normal_out", pd)
+    return decls
+
+
+def init_params(cfg: ModelConfig, key: Array):
+    return init_tree(param_decls(cfg), key)
+
+
+def param_shapes(cfg: ModelConfig):
+    return shape_tree(param_decls(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return axes_tree(param_decls(cfg))
+
+
+# --------------------------------------------------------------------- #
+# Per-layer metadata (scanned alongside params)
+# --------------------------------------------------------------------- #
+def static_layer_meta(cfg: ModelConfig, i: int):
+    """Python-static (window, rope_theta) for layer i — lets unrolled paths
+    trigger the static-window kv-chunk skipping in chunked attention."""
+    w = cfg.layer_windows()[i]
+    theta = cfg.rope_theta_global if w == GLOBAL else cfg.rope_theta_local
+    return int(w), float(theta)
+
+
+def layer_meta(cfg: ModelConfig):
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)  # (L,), GLOBAL=-1
+    thetas = jnp.where(
+        windows == GLOBAL,
+        jnp.float32(cfg.rope_theta_global),
+        jnp.float32(cfg.rope_theta_local),
+    )
+    return windows, thetas
+
+
+# --------------------------------------------------------------------- #
+# Layer body
+# --------------------------------------------------------------------- #
+def _attn_block(
+    lp, cfg: ModelConfig, x: Array, positions: Array, window, theta,
+    kv_override=None,
+):
+    """Self-attention sub-block. x: (B,S,d) pre-normed input.
+
+    Returns (out (B,S,d), (k, v)) — k/v returned for cache construction.
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, lp["wv"])
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.rms_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    if kv_override is not None:
+        k, v = kv_override
+    out = select_attention(
+        cfg.attn_impl,
+        q,
+        k,
+        v,
+        positions,
+        positions,
+        window,
+        chunk_q=cfg.attn_chunk_q,
+        chunk_kv=cfg.attn_chunk_kv,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+    return out, (k, v)
+
+
+def _ffn_block(lp, cfg: ModelConfig, x: Array, runtime: Runtime):
+    if not cfg.num_experts:
+        return gated_mlp(x, lp["w_gate"], lp["w_up"], lp["w_down"], cfg.act)
+    if runtime.moe_impl == "ep":
+        return moe_mod.moe_ffn_ep(
+            x, lp["w_router"], lp["we_gate"], lp["we_up"], lp["we_down"], cfg,
+            runtime.mesh, batch_axes=runtime.batch_axes,
+            expert_axis=runtime.expert_axis, tp_axis=runtime.tp_axis,
+        )
+    if runtime.moe_impl == "gshard":
+        return moe_mod.moe_ffn_gshard(
+            x, lp["w_router"], lp["we_gate"], lp["we_up"], lp["we_down"], cfg,
+            mesh=runtime.mesh, expert_axis=runtime.expert_axis,
+            group_axes=runtime.moe_group_axes, tp_axis=runtime.tp_axis,
+        )
+    fn = (
+        moe_mod.moe_ffn_dropless
+        if runtime.moe_impl == "dropless"
+        else moe_mod.moe_ffn_reference
+    )
+    return fn(x, lp["w_router"], lp["we_gate"], lp["we_up"], lp["we_down"], cfg)
+
+
+def _ssm_branch(lp, cfg: ModelConfig, x: Array, state=None, conv_state=None):
+    """Mamba-style branch for the hybrid family (full-sequence form).
+
+    x: (B,S,d) pre-normed. Returns (out (B,S,d), final_state, final_conv).
+    """
+    b, s, d = x.shape
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x @ lp["ssm_in"]  # (B,S,2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # Depthwise short conv along time (causal).
+    w = lp["ssm_conv"].astype(jnp.float32)  # (di, conv)
+    pad = cfg.ssm_conv - 1
+    xpad = jnp.pad(xs.astype(jnp.float32), ((0, 0), (pad, 0), (0, 0)))
+    if conv_state is not None:
+        xpad = jax.lax.dynamic_update_slice(xpad, conv_state, (0, 0, 0))
+    cols = [xpad[:, i : i + s, :] * w[:, i] for i in range(cfg.ssm_conv)]
+    xc = jax.nn.silu(sum(cols)).astype(x.dtype)
+    final_conv = xpad[:, s : s + pad, :] if pad else jnp.zeros((b, 0, di))
+
+    proj = xc @ lp["ssm_xproj"]  # (B,S,dtr+2st)
+    dt_r, b_in, c_in = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ lp["ssm_dtproj"] + lp["ssm_dt_bias"])
+    y, s_final = ssm_mod.selective_scan(
+        xc, dt, lp["ssm_a_log"], b_in, c_in, lp["ssm_d"], initial_state=state
+    )
+    y = y * jax.nn.silu(z)
+    return y @ lp["ssm_out"], s_final, final_conv
+
+
+def _layer_fwd(
+    lp, cfg: ModelConfig, x: Array, positions: Array, window, theta,
+    runtime: Runtime,
+):
+    """One transformer block (train/prefill form). Returns (x', (k, v))."""
+    h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+    attn_out, kv = _attn_block(lp, cfg, h, positions, window, theta)
+    if cfg.family is Family.HYBRID:
+        hs = rms_norm(x, lp["ssm_norm"], cfg.rms_eps)
+        ssm_out, _, _ = _ssm_branch(lp, cfg, hs)
+        attn_out = 0.5 * (attn_out + ssm_out)
+    x = x + attn_out
+    h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+    x = x + _ffn_block(lp, cfg, h, runtime)
+    return x, kv
+
+
+# --------------------------------------------------------------------- #
+# Forward / loss
+# --------------------------------------------------------------------- #
+def embed_inputs(params, cfg: ModelConfig, tokens=None, embeds=None):
+    """Token ids and/or precomputed frontend embeddings -> (B, S, d).
+
+    VLM/audio stubs: ``embeds`` (patch/frame embeddings) are prepended to
+    the embedded text tokens (DESIGN.md §5)."""
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(jnp.dtype(cfg.compute_dtype)))
+    if tokens is not None:
+        parts.append(params["embed"][tokens])
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def forward_hidden(
+    params, cfg: ModelConfig, *, tokens=None, embeds=None, runtime=Runtime(),
+    return_kv: bool = False,
+):
+    """Full-sequence forward. Returns hidden (B,S,d) [, stacked (k, v)]."""
+    x = embed_inputs(params, cfg, tokens, embeds)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows, thetas = layer_meta(cfg)
+
+    layer = functools.partial(_layer_fwd, cfg=cfg, runtime=runtime)
+    use_block = cfg.remat and cfg.scan_block > 1 and not return_kv
+    if cfg.remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            "none": None,
+        }[cfg.remat_policy]
+        # Per-layer checkpoint stays on in block mode too: during a block's
+        # backward recompute it bounds residuals to one layer's carry
+        # instead of the layer's full intermediate set.
+        layer = jax.checkpoint(layer, policy=policy, static_argnums=())
+
+    if cfg.scan_layers and use_block:
+        # Nested remat-scan: outer scan over layer BLOCKS with a
+        # checkpointed body, plain inner scan within the block. Saved
+        # residuals: L/block block-inputs instead of ~3 stacks of L
+        # per-layer carries (see EXPERIMENTS.md §Perf memory iteration).
+        blk = cfg.scan_block
+        nb = cfg.num_layers // blk
+        assert nb * blk == cfg.num_layers, (cfg.num_layers, blk)
+
+        def reshape_xs(z):
+            return z.reshape((nb, blk) + z.shape[1:])
+
+        xs_blocked = jax.tree.map(
+            reshape_xs, (params["layers"], windows, thetas)
+        )
+
+        @jax.checkpoint
+        def block_body(carry, xs_blk):
+            def inner(c, xs_one):
+                lp, window, theta = xs_one
+                y, _ = layer(
+                    lp, x=c, positions=positions, window=window, theta=theta
+                )
+                return y, None
+
+            y, _ = jax.lax.scan(inner, carry, xs_blk)
+            return y, None
+
+        x, kvs = jax.lax.scan(block_body, x, xs_blocked)
+    elif cfg.scan_layers:
+        def scan_body(carry, xs):
+            lp, window, theta = xs
+            y, kv = layer(lp, x=carry, positions=positions, window=window, theta=theta)
+            return y, (kv if return_kv else None)
+
+        x, kvs = jax.lax.scan(scan_body, x, (params["layers"], windows, thetas))
+    else:
+        kvs_list = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda p: p[i], params["layers"])
+            w_i, th_i = static_layer_meta(cfg, i)
+            # Bind the python-int window BEFORE jax.checkpoint: a checkpoint
+            # wrapper would trace it to a scalar and defeat the
+            # static-window kv-chunk skipping in chunked attention.
+            layer_i = functools.partial(
+                _layer_fwd, cfg=cfg, runtime=runtime, window=w_i, theta=th_i
+            )
+            if cfg.remat:
+                layer_i = jax.checkpoint(
+                    layer_i, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            x, kv = layer_i(lp, x=x, positions=positions)
+            kvs_list.append(kv)
+        kvs = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *kvs_list)
+            if return_kv
+            else None
+        )
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return (x, kvs) if return_kv else x
+
+
+def _head_logits(params, cfg: ModelConfig, h: Array) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padded rows to -inf
+        pad_bias = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab_size, 0.0, -1e30
+        )
+        logits = logits + pad_bias
+    return logits
+
+
+def lm_loss(
+    params, cfg: ModelConfig, *, tokens=None, embeds=None, targets, loss_mask=None,
+    runtime=Runtime(),
+):
+    """Next-token cross-entropy, sequence-chunked so full (B,S,V) logits are
+    never materialized (decisive for the 152k–262k vocab archs)."""
+    h = forward_hidden(params, cfg, tokens=tokens, embeds=embeds, runtime=runtime)
+    # Align hidden states with targets: targets correspond to the LAST
+    # `targets.shape[1]` positions' next-token predictions.
+    tlen = targets.shape[1]
+    h = h[:, -tlen:]
+    return _chunked_ce(params, cfg, h, targets, loss_mask)
+
+
+def _chunked_ce(params, cfg: ModelConfig, h: Array, targets: Array, loss_mask):
+    """Sequence-chunked cross-entropy over (possibly vocab-sharded) logits."""
+    tlen = targets.shape[1]
+    if loss_mask is None:
+        loss_mask = jnp.ones(targets.shape, jnp.float32)
+
+    def ce(h_c, t_c, m_c):
+        logits = _head_logits(params, cfg, h_c)  # (B, C, V) fp32
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m_c
+        return jnp.sum(nll), jnp.sum(m_c)
+
+    chunk = cfg.loss_chunk
+    if not chunk or tlen <= chunk:
+        total, count = ce(h, targets, loss_mask)
+    else:
+        n = -(-tlen // chunk)
+        pad = n * chunk - tlen
+
+        def prep(a, fill=0):
+            if pad:
+                cfg_pad = ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)
+                a = jnp.pad(a, cfg_pad, constant_values=fill)
+            return jnp.moveaxis(
+                a.reshape((a.shape[0], n, chunk) + a.shape[2:]), 1, 0
+            )
+
+        @jax.checkpoint
+        def chunk_step(carry, xs):
+            tot, cnt = carry
+            h_c, t_c, m_c = xs
+            s, c = ce(h_c, t_c, m_c)
+            return (tot + s, cnt + c), None
+
+        (total, count), _ = jax.lax.scan(
+            chunk_step,
+            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (prep(h), prep(targets), prep(loss_mask)),
+        )
+    return total / jnp.maximum(count, 1.0)
+
+
+# --------------------------------------------------------------------- #
+# Serving: prefill + single-token decode
+# --------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        "k": jnp.zeros((L, batch, max_len, Hkv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, Hkv, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.family is Family.HYBRID:
+        cache["ssm_state"] = jnp.zeros(
+            (L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32
+        )
+        cache["conv_state"] = jnp.zeros(
+            (L, batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32
+        )
+    return cache
+
+
+def prefill(
+    params, cfg: ModelConfig, *, tokens=None, embeds=None, cache_len: int,
+    runtime=Runtime(),
+):
+    """Run the full prompt, return (last-position logits, populated cache)."""
+    if cfg.family is Family.HYBRID:
+        return _prefill_unrolled(
+            params, cfg, tokens=tokens, embeds=embeds, cache_len=cache_len,
+            runtime=runtime,
+        )
+    h, (k, v) = forward_hidden(
+        params, cfg, tokens=tokens, embeds=embeds, runtime=runtime,
+        return_kv=True,
+    )
+    s = k.shape[2]
+    batch = k.shape[1]
+    pad = cache_len - s
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    logits = _head_logits(params, cfg, h[:, -1:])
+    cache = {"k": k, "v": v, "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def _prefill_unrolled(params, cfg, *, tokens, embeds, cache_len, runtime):
+    """Hybrid prefill: also materializes SSM/conv states (unrolled layers)."""
+    x = embed_inputs(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows, thetas = layer_meta(cfg)
+    cache = init_cache(cfg, b, cache_len)
+    ks, vs, sss, ccs = [], [], [], []
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda p: p[i], params["layers"])
+        w_i, th_i = static_layer_meta(cfg, i)
+        h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+        attn_out, (k, v) = _attn_block(lp, cfg, h, positions, w_i, th_i)
+        hs = rms_norm(x, lp["ssm_norm"], cfg.rms_eps)
+        ssm_out, s_state, c_state = _ssm_branch(lp, cfg, hs)
+        x = x + 0.5 * (attn_out + ssm_out)
+        h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+        x = x + _ffn_block(lp, cfg, h, runtime)
+        ks.append(k)
+        vs.append(v)
+        sss.append(s_state)
+        ccs.append(c_state)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    k = jnp.stack(ks)
+    v = jnp.stack(vs)
+    pad = cache_len - s
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {
+        "k": k,
+        "v": v,
+        "pos": jnp.asarray(s, jnp.int32),
+        "ssm_state": jnp.stack(sss),
+        "conv_state": jnp.stack(ccs),
+    }
+    return _head_logits(params, cfg, x[:, -1:]), cache
+
+
+def _replicate_small(x, runtime: Runtime):
+    """Pin a small per-token tensor to fully-replicated.
+
+    In decode, the new-token q/k/v inherit the HEAD sharding of their
+    projections while the KV cache is SEQUENCE-sharded; GSPMD resolves that
+    conflict by replicating *the cache* per layer ("involuntary full
+    rematerialization", ~600 GB/device at 32k). Replicating the ~1 MB
+    per-token tensors instead forces flash-decode semantics: each shard
+    scores its cache chunk and the softmax merges via small psums."""
+    if runtime is None or runtime.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(runtime.mesh, P())
+    )
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, runtime=Runtime()):
+    """One-token decode. tokens: (B, 1) int32. Returns (logits, new cache).
+
+    Layers are unrolled (see module docstring); the KV cache sequence axis
+    may be sharded — attention_decode's reductions then become the
+    flash-decode cross-shard all-reduces."""
+    pos = cache["pos"]
+    x = embed_inputs(params, cfg, tokens=tokens)
+    b = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    windows, thetas = layer_meta(cfg)
+    new_cache = dict(cache)
+    k_all, v_all = cache["k"], cache["v"]
+    ss_all = cache.get("ssm_state")
+    cs_all = cache.get("conv_state")
+
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda p: p[i], params["layers"])
+        h = rms_norm(x, lp["attn_norm"], cfg.rms_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], cfg.rms_eps)
+            k = rms_norm(k, lp["k_norm"], cfg.rms_eps)
+        w_i, th_i = static_layer_meta(cfg, i)
+        q = apply_rope(q, positions, th_i)
+        k = apply_rope(k, positions, th_i)
+        q = _replicate_small(q, runtime)
+        k = _replicate_small(k, runtime)
+        v = _replicate_small(v, runtime)
+        k_all = jax.lax.dynamic_update_slice(k_all, k[None], (i, 0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(v_all, v[None], (i, 0, pos, 0, 0))
+        out = attention_decode(
+            q, k_all[i], v_all[i], jnp.full((b,), pos, jnp.int32), w_i
+        )
+        # Cut backward propagation of wo's head sharding into the cache
+        # (see _replicate_small): the (B,1,H,hd) result is tiny.
+        out = _replicate_small(out, runtime)
+        attn_out = jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+        if cfg.family is Family.HYBRID:
+            hs = rms_norm(x, lp["ssm_norm"], cfg.rms_eps)
+            ssm_out, ss_new, cs_new = _ssm_decode_step(lp, cfg, hs, ss_all[i], cs_all[i])
+            ss_all = ss_all.at[i].set(ss_new)
+            cs_all = cs_all.at[i].set(cs_new)
+            attn_out = 0.5 * (attn_out + ssm_out)
+        x = x + attn_out
+        h = rms_norm(x, lp["mlp_norm"], cfg.rms_eps)
+        x = x + _ffn_block(lp, cfg, h, runtime)
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = _head_logits(params, cfg, x)
+    new_cache["k"], new_cache["v"] = k_all, v_all
+    new_cache["pos"] = pos + 1
+    if cfg.family is Family.HYBRID:
+        new_cache["ssm_state"], new_cache["conv_state"] = ss_all, cs_all
+    return logits, new_cache
+
+
+def _ssm_decode_step(lp, cfg, x, ssm_state, conv_state):
+    """Single-step hybrid SSM branch. x: (B, 1, d)."""
+    b = x.shape[0]
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x[:, 0] @ lp["ssm_in"]  # (B, 2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # Roll the conv window: conv_state (B, conv-1, di) holds previous inputs.
+    w = lp["ssm_conv"].astype(jnp.float32)  # (di, conv)
+    hist = jnp.concatenate(
+        [conv_state.astype(jnp.float32), xs.astype(jnp.float32)[:, None, :]], axis=1
+    )  # (B, conv, di)
+    xc = jax.nn.silu(jnp.einsum("bci,ic->bi", hist, w)).astype(x.dtype)
+    new_conv = hist[:, 1:]
+    proj = xc @ lp["ssm_xproj"]
+    dt_r, b_in, c_in = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ lp["ssm_dtproj"] + lp["ssm_dt_bias"])
+    y, s_new = ssm_mod.selective_scan_step(
+        xc, dt, lp["ssm_a_log"], b_in, c_in, lp["ssm_d"], ssm_state
+    )
+    y = y * jax.nn.silu(z)
+    return (y @ lp["ssm_out"])[:, None], s_new, new_conv

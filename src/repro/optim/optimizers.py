@@ -1,0 +1,120 @@
+"""Minimal pytree optimizers (no external deps).
+
+Both optimizers follow the (init_fn, update_fn) convention:
+
+    init_fn(params)                    -> state
+    update_fn(grads, state, params)    -> (updates, state)
+    apply_updates(params, updates)     -> params
+
+States are pytrees of fp32 moments (paired with bf16 params this is the
+standard mixed-precision setup); under the federated runtime every leaf
+carries a leading client-slot axis and the ZeRO/FSDP sharding rules in
+dist/sharding.py decide placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    count: jax.Array
+    mu: Any  # first moment (or momentum)
+    nu: Any  # second moment (None for sgdm)
+
+
+def _f32_like(t):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda l: (l * scale).astype(l.dtype), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+def adamw(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    def lr_at(count):
+        return learning_rate(count) if callable(learning_rate) else learning_rate
+
+    def init_fn(params):
+        return OptState(jnp.zeros((), jnp.int32), _f32_like(params), _f32_like(params))
+
+    def update_fn(grads, state: OptState, params):
+        count = state.count + 1
+        cf = count.astype(jnp.float32)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        mu_hat_scale = 1.0 / (1 - b1**cf)
+        nu_hat_scale = 1.0 / (1 - b2**cf)
+        lr = lr_at(count)
+
+        def upd(m, v, p):
+            step = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, OptState(count, mu, nu)
+
+    return init_fn, update_fn
+
+
+def sgdm(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    momentum: float = 0.9,
+    nesterov: bool = True,
+):
+    def lr_at(count):
+        return learning_rate(count) if callable(learning_rate) else learning_rate
+
+    def init_fn(params):
+        return OptState(jnp.zeros((), jnp.int32), _f32_like(params), None)
+
+    def update_fn(grads, state: OptState, params):
+        del params
+        count = state.count + 1
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads
+        )
+        lr = lr_at(count)
+        if nesterov:
+            updates = jax.tree.map(
+                lambda m, g: -lr * (momentum * m + g.astype(jnp.float32)), mu, grads
+            )
+        else:
+            updates = jax.tree.map(lambda m: -lr * m, mu)
+        return updates, OptState(count, mu, None)
+
+    return init_fn, update_fn

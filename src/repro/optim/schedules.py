@@ -1,0 +1,30 @@
+"""Learning-rate schedules (callables of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, final_fraction: float = 0.1):
+    def fn(count):
+        frac = jnp.clip(count.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * (final_fraction + (1 - final_fraction) * cos)
+
+    return fn
+
+
+def linear_warmup_cosine(
+    lr: float, warmup_steps: int, decay_steps: int, final_fraction: float = 0.1
+):
+    cos = cosine_decay(lr, max(decay_steps - warmup_steps, 1), final_fraction)
+
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = lr * c / max(warmup_steps, 1)
+        return jnp.where(c < warmup_steps, warm, cos(count - warmup_steps))
+
+    return fn

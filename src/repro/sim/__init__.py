@@ -1,0 +1,3 @@
+from repro.sim.faas import FaasSimConfig, round_energy_j, round_times_ms
+
+__all__ = ["FaasSimConfig", "round_energy_j", "round_times_ms"]

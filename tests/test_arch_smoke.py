@@ -1,0 +1,74 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step + one prefill/decode step on CPU; asserts output shapes
+and absence of NaNs. (Full configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.configs.shapes import ShapeSpec, concrete_batch
+from repro.models import build_model
+from repro.models.config import Family
+
+KEY = jax.random.PRNGKey(0)
+SMOKE_SHAPE = ShapeSpec("smoke", "train", seq_len=24, global_batch=2)
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    arch = request.param
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = concrete_batch(cfg, SMOKE_SHAPE, KEY)
+    return arch, cfg, model, params, batch
+
+
+def test_reduced_config_same_family(arch_setup):
+    arch, cfg, *_ = arch_setup
+    assert cfg.family == get_config(arch).family
+    assert cfg.name.endswith("-reduced")
+
+
+def test_train_loss_finite(arch_setup):
+    arch, cfg, model, params, batch = arch_setup
+    loss = model.loss(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    # roughly ln(vocab) at init
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 3 * np.log(cfg.vocab_size)
+
+
+def test_train_grads_finite(arch_setup):
+    arch, cfg, model, params, batch = arch_setup
+    g = jax.grad(lambda p: model.loss(p, batch))(params)
+    flat = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in flat), arch
+    assert any(float(jnp.abs(l).max()) > 0 for l in flat), f"{arch}: all-zero grads"
+
+
+def test_prefill_and_decode_shapes(arch_setup):
+    arch, cfg, model, params, batch = arch_setup
+    b = SMOKE_SHAPE.global_batch
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :16]
+    cache_len = 24
+    if cfg.family is Family.VLM:
+        cache_len += batch["patch_embeds"].shape[1]
+    logits, cache = model.prefill(params, pre_batch, cache_len=cache_len)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    toks = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = model.decode_step(params, cache, toks)
+    assert logits2.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), arch
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+def test_param_count_positive_and_active_bounded(arch_setup):
+    arch, cfg, model, *_ = arch_setup
+    n, na = model.param_count(), model.active_param_count()
+    assert 0 < na <= n
+    if cfg.num_experts:
+        assert na < n  # MoE: active strictly smaller

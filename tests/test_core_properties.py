@@ -1,0 +1,303 @@
+"""Hypothesis property tests on the FedFog core invariants (Eqs. 1-12)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (
+    ClientTelemetry,
+    ColdStartConfig,
+    EnergyModelConfig,
+    Thresholds,
+    decay_energy_threshold,
+    epsilon,
+    fedavg_stacked,
+    fedavg_weights,
+    health_score,
+    kl_divergence,
+    median_aggregate,
+    normalize_histogram,
+    required_sigma,
+    select_clients,
+    threshold_mask,
+    topk_mask,
+    trimmed_mean_aggregate,
+    update_container_cache,
+    utility_ranking,
+    utility_score,
+)
+from repro.fl.compression import compress_int8, compress_topk
+
+SETTINGS = settings(max_examples=30, deadline=None)
+
+unit_floats = st.floats(0.0, 1.0, allow_nan=False, width=32, allow_subnormal=False)
+
+
+def unit_arrays(n=st.integers(2, 12)):
+    return n.flatmap(
+        lambda k: hnp.arrays(
+            np.float32, (k,), elements=unit_floats
+        )
+    )
+
+
+def weight3():
+    return (
+        hnp.arrays(np.float32, (3,), elements=st.floats(0.015625, 1.0, width=32, allow_subnormal=False))
+        .map(lambda a: a / a.sum())
+    )
+
+
+# --------------------------------------------------------------------- #
+# Eq. 1 — health
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(unit_arrays(), weight3())
+def test_health_is_convex_combination(vals, alpha):
+    tel = ClientTelemetry(
+        cpu=jnp.asarray(vals), mem=jnp.asarray(vals), batt=jnp.asarray(vals),
+        energy=jnp.asarray(vals),
+    )
+    h = np.asarray(health_score(tel, jnp.asarray(alpha)))
+    assert (h >= -1e-5).all() and (h <= 1 + 1e-5).all()
+    np.testing.assert_allclose(h, vals, atol=1e-5)  # equal inputs -> identity
+
+
+@SETTINGS
+@given(st.integers(2, 10), weight3(), st.data())
+def test_health_monotone_in_cpu(n, alpha, data):
+    base = data.draw(hnp.arrays(np.float32, (n,), elements=unit_floats))
+    cpu_lo = data.draw(hnp.arrays(np.float32, (n,), elements=unit_floats))
+    cpu_hi = np.minimum(cpu_lo + 0.1, 1.0).astype(np.float32)
+    mk = lambda cpu: ClientTelemetry(
+        cpu=jnp.asarray(cpu), mem=jnp.asarray(base), batt=jnp.asarray(base),
+        energy=jnp.asarray(base),
+    )
+    a = jnp.asarray(alpha)
+    h_lo = np.asarray(health_score(mk(cpu_lo), a))
+    h_hi = np.asarray(health_score(mk(cpu_hi), a))
+    assert (h_hi >= h_lo - 1e-6).all()
+
+
+# --------------------------------------------------------------------- #
+# Eq. 2 — KL drift
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(
+    hnp.arrays(np.float32, (6,), elements=st.floats(0.015625, 10.0, width=32, allow_subnormal=False)),
+    hnp.arrays(np.float32, (6,), elements=st.floats(0.015625, 10.0, width=32, allow_subnormal=False)),
+)
+def test_kl_nonnegative_and_zero_iff_equal(p_raw, q_raw):
+    p = normalize_histogram(jnp.asarray(p_raw))
+    q = normalize_histogram(jnp.asarray(q_raw))
+    kl = float(kl_divergence(p, q))
+    assert kl >= -1e-6
+    assert float(kl_divergence(p, p)) < 1e-6
+
+
+# --------------------------------------------------------------------- #
+# Eq. 3 / Eq. 7 — selection & utility
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.data())
+def test_selection_monotone_in_thresholds(data):
+    n = data.draw(st.integers(3, 16))
+    h = data.draw(hnp.arrays(np.float32, (n,), elements=unit_floats))
+    e = data.draw(hnp.arrays(np.float32, (n,), elements=unit_floats))
+    d = data.draw(hnp.arrays(np.float32, (n,), elements=unit_floats))
+    th_lo = data.draw(st.floats(0.0, 0.5, width=32, allow_subnormal=False))
+    th_hi = th_lo + data.draw(st.floats(0.0, 0.5, width=32, allow_subnormal=False))
+    mk = lambda t: threshold_mask(
+        jnp.asarray(h), jnp.asarray(e), jnp.asarray(d),
+        Thresholds(jnp.float32(t), jnp.float32(0.3), jnp.float32(0.5)),
+    )
+    lo, hi = np.asarray(mk(th_lo)), np.asarray(mk(th_hi))
+    assert (hi <= lo).all()  # raising θ_h can only shrink C_t
+
+
+@SETTINGS
+@given(st.data())
+def test_topk_respects_budget_and_eligibility(data):
+    n = data.draw(st.integers(3, 20))
+    k = data.draw(st.integers(1, n))
+    u = data.draw(hnp.arrays(np.float32, (n,), elements=st.floats(-1, 1, width=32, allow_subnormal=False)))
+    elig = data.draw(hnp.arrays(np.bool_, (n,)))
+    mask = np.asarray(topk_mask(jnp.asarray(u), jnp.asarray(elig), k))
+    assert mask.sum() <= k
+    assert (mask <= elig).all()
+    # kept clients have utility >= any dropped eligible client
+    if mask.any() and (elig & ~mask).any():
+        assert u[mask].min() >= u[elig & ~mask].max() - 1e-6
+
+
+@SETTINGS
+@given(st.data())
+def test_utility_ranking_sorted(data):
+    n = data.draw(st.integers(2, 16))
+    u = data.draw(hnp.arrays(np.float32, (n,), elements=st.floats(-2, 2, width=32, allow_subnormal=False)))
+    order = np.asarray(utility_ranking(jnp.asarray(u)))
+    sorted_u = u[order]
+    assert (np.diff(sorted_u) <= 1e-6).all()
+
+
+# --------------------------------------------------------------------- #
+# Eq. 6 — FedAvg
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.data())
+def test_fedavg_convex_hull_and_weights(data):
+    n = data.draw(st.integers(2, 8))
+    d = data.draw(st.integers(1, 5))
+    upd = data.draw(
+        hnp.arrays(np.float32, (n, d), elements=st.floats(-5, 5, width=32, allow_subnormal=False))
+    )
+    sizes = data.draw(
+        hnp.arrays(np.float32, (n,), elements=st.floats(1, 100, width=32, allow_subnormal=False))
+    )
+    mask = data.draw(hnp.arrays(np.bool_, (n,)))
+    if not mask.any():
+        mask[0] = True
+    w = np.asarray(fedavg_weights(jnp.asarray(mask), jnp.asarray(sizes)))
+    assert abs(w.sum() - 1.0) < 1e-4
+    assert (w[~mask] == 0).all()
+    agg = np.asarray(
+        fedavg_stacked({"x": jnp.asarray(upd)}, jnp.asarray(mask), jnp.asarray(sizes))["x"]
+    )
+    sel = upd[mask]
+    assert (agg <= sel.max(0) + 1e-4).all()
+    assert (agg >= sel.min(0) - 1e-4).all()
+
+
+@SETTINGS
+@given(st.data())
+def test_masked_clients_cannot_affect_fedavg(data):
+    n, d = 5, 3
+    upd = data.draw(
+        hnp.arrays(np.float32, (n, d), elements=st.floats(-5, 5, width=32, allow_subnormal=False))
+    )
+    sizes = np.ones(n, np.float32)
+    mask = np.array([True, True, False, True, False])
+    poisoned = upd.copy()
+    poisoned[~mask] = 1e6  # arbitrary garbage on masked clients
+    a1 = np.asarray(fedavg_stacked({"x": jnp.asarray(upd)}, jnp.asarray(mask), jnp.asarray(sizes))["x"])
+    a2 = np.asarray(fedavg_stacked({"x": jnp.asarray(poisoned)}, jnp.asarray(mask), jnp.asarray(sizes))["x"])
+    np.testing.assert_allclose(a1, a2, atol=1e-4)
+
+
+@SETTINGS
+@given(st.data())
+def test_robust_aggregators_bounded(data):
+    n = data.draw(st.integers(3, 9))
+    upd = data.draw(
+        hnp.arrays(np.float32, (n, 4), elements=st.floats(-3, 3, width=32, allow_subnormal=False))
+    )
+    mask = np.ones(n, bool)
+    med = np.asarray(median_aggregate({"x": jnp.asarray(upd)}, jnp.asarray(mask))["x"])
+    tm = np.asarray(
+        trimmed_mean_aggregate({"x": jnp.asarray(upd)}, jnp.asarray(mask))["x"]
+    )
+    for agg in (med, tm):
+        assert (agg <= upd.max(0) + 1e-5).all()
+        assert (agg >= upd.min(0) - 1e-5).all()
+
+
+# --------------------------------------------------------------------- #
+# Eq. 10 — energy budgeting
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.data())
+def test_energy_decay_bounds_and_neutrality(data):
+    n = data.draw(st.integers(2, 10))
+    theta = data.draw(
+        hnp.arrays(np.float32, (n,), elements=st.floats(0.125, 0.875, width=32, allow_subnormal=False))
+    )
+    cfg = EnergyModelConfig()
+    # equal spend == average -> multiplicative factor exactly 1
+    e = np.full(n, 3.0, np.float32)
+    out = np.asarray(decay_energy_threshold(jnp.asarray(theta), jnp.asarray(e), cfg))
+    np.testing.assert_allclose(out, np.clip(theta, cfg.theta_min, cfg.theta_max), atol=1e-5)
+    # arbitrary spends stay within clip bounds
+    e2 = data.draw(hnp.arrays(np.float32, (n,), elements=st.floats(0, 10, width=32, allow_subnormal=False)))
+    out2 = np.asarray(decay_energy_threshold(jnp.asarray(theta), jnp.asarray(e2), cfg))
+    assert (out2 >= cfg.theta_min - 1e-6).all() and (out2 <= cfg.theta_max + 1e-6).all()
+    # above-average spender's threshold rises relative to below-average one
+    e3 = np.zeros(n, np.float32)
+    e3[0] = 10.0
+    out3 = np.asarray(decay_energy_threshold(jnp.asarray(theta), jnp.asarray(e3), cfg))
+    assert out3[0] >= np.clip(theta[0], cfg.theta_min, cfg.theta_max) - 1e-6
+    assert (out3[1:] <= np.clip(theta[1:], cfg.theta_min, cfg.theta_max) + 1e-6).all()
+
+
+# --------------------------------------------------------------------- #
+# Eq. 4 — container cache
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.data())
+def test_container_cache_semantics(data):
+    n = data.draw(st.integers(2, 12))
+    cfg = ColdStartConfig(keep_alive_rounds=data.draw(st.integers(1, 4)))
+    warm = jnp.zeros((n,), bool)
+    last = jnp.full((n,), -1, jnp.int32)
+    mask = jnp.asarray(data.draw(hnp.arrays(np.bool_, (n,))))
+    warm1, last1 = update_container_cache(warm, last, mask, jnp.int32(0), cfg)
+    np.testing.assert_array_equal(np.asarray(warm1), np.asarray(mask))
+    # idle for keep_alive rounds -> evicted
+    w, l = warm1, last1
+    for r in range(1, cfg.keep_alive_rounds + 1):
+        w, l = update_container_cache(
+            w, l, jnp.zeros((n,), bool), jnp.int32(r), cfg
+        )
+    assert not np.asarray(w).any()
+
+
+def test_container_lru_capacity():
+    cfg = ColdStartConfig(keep_alive_rounds=10, warm_capacity=2)
+    warm = jnp.zeros((4,), bool)
+    last = jnp.full((4,), -1, jnp.int32)
+    for r, sel in enumerate([[0], [1], [2]]):
+        mask = jnp.zeros((4,), bool).at[jnp.asarray(sel)].set(True)
+        warm, last = update_container_cache(warm, last, mask, jnp.int32(r), cfg)
+    w = np.asarray(warm)
+    assert w.sum() <= 2
+    assert w[2] and w[1] and not w[0]  # LRU evicted client 0
+
+
+# --------------------------------------------------------------------- #
+# Eq. 12 — DP accounting
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(
+    st.floats(0.1, 2.0), st.floats(0.1, 5.0), st.integers(1, 100),
+)
+def test_epsilon_monotonicity_and_inverse(sigma, s, n):
+    eps = epsilon(sigma, s, n, 1e-5)
+    assert eps > 0
+    assert epsilon(sigma * 2, s, n, 1e-5) < eps  # more noise -> more private
+    assert epsilon(sigma, s, n + 10, 1e-5) < eps  # amplification
+    sig = required_sigma(eps, s, n, 1e-5)
+    np.testing.assert_allclose(sig, sigma, rtol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# Compression
+# --------------------------------------------------------------------- #
+@SETTINGS
+@given(st.data())
+def test_int8_error_bound(data):
+    x = data.draw(
+        hnp.arrays(np.float32, (3, 17), elements=st.floats(-4, 4, width=32, allow_subnormal=False))
+    )
+    out = np.asarray(compress_int8({"x": jnp.asarray(x)})["x"])
+    scale = np.abs(x).max(axis=1, keepdims=True) / 127.0 + 1e-12
+    assert (np.abs(out - x) <= scale * 0.5 + 1e-6).all()
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray(np.arange(20, dtype=np.float32)[None] - 10.0)
+    out = np.asarray(compress_topk({"x": x}, 0.25)["x"])
+    nz = np.nonzero(out[0])[0]
+    assert len(nz) == 5
+    kept = np.abs(np.asarray(x)[0])[nz]
+    dropped = np.abs(np.asarray(x)[0][out[0] == 0])
+    assert kept.min() >= dropped.max() - 1e-6

@@ -1,0 +1,126 @@
+"""Data pipeline + DES simulator invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.drift import kl_divergence
+from repro.data import emnist_like, har_like
+from repro.data.synthetic import (
+    FedDataConfig,
+    all_client_histograms,
+    client_histogram,
+    client_tokens,
+)
+from repro.data.telemetry import (
+    TelemetryConfig,
+    init_telemetry,
+    make_profiles,
+    step_telemetry,
+)
+from repro.sim.faas import FaasSimConfig, round_energy_j, round_times_ms
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_tokens_deterministic_per_client_round():
+    cfg = FedDataConfig(vocab_size=128)
+    a = client_tokens(cfg, jnp.int32(3), jnp.int32(5), KEY, 4, 16)
+    b = client_tokens(cfg, jnp.int32(3), jnp.int32(5), KEY, 4, 16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = client_tokens(cfg, jnp.int32(4), jnp.int32(5), KEY, 4, 16)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert (np.asarray(a) >= 0).all() and (np.asarray(a) < 128).all()
+
+
+def test_clients_are_non_iid():
+    cfg = FedDataConfig(vocab_size=128, dirichlet_alpha=0.3)
+    h = all_client_histograms(cfg, 8, jnp.int32(0), bins=16)
+    kls = [
+        float(kl_divergence(h[i], h[j]))
+        for i in range(8)
+        for j in range(i + 1, 8)
+    ]
+    assert max(kls) > 0.05  # distinct client distributions
+
+
+def test_drift_moves_histograms_only_after_period():
+    cfg = FedDataConfig(vocab_size=128, drift_period=10, drift_fraction=1.0)
+    h0 = client_histogram(cfg, jnp.int32(2), jnp.int32(0), 16)
+    h5 = client_histogram(cfg, jnp.int32(2), jnp.int32(5), 16)
+    h15 = client_histogram(cfg, jnp.int32(2), jnp.int32(15), 16)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h5), atol=1e-6)
+    assert float(kl_divergence(h15, h0)) > 1e-3
+
+
+def test_emnist_like_batches():
+    cfg = emnist_like.EmnistLikeConfig()
+    x, y = emnist_like.client_batch(cfg, jnp.int32(0), jnp.int32(0), KEY, 8)
+    assert x.shape == (8, 784) and y.shape == (8,)
+    assert (np.asarray(y) >= 0).all() and (np.asarray(y) < 62).all()
+    prior = emnist_like.client_histogram(cfg, jnp.int32(0), jnp.int32(0))
+    np.testing.assert_allclose(float(prior.sum()), 1.0, rtol=1e-5)
+
+
+def test_har_like_batches():
+    cfg = har_like.HarLikeConfig()
+    x, y = har_like.client_batch(cfg, jnp.int32(1), jnp.int32(0), KEY, 4)
+    assert x.shape == (4, har_like.WINDOW * har_like.CHANNELS)
+    assert (np.asarray(y) < har_like.NUM_CLASSES).all()
+
+
+def test_telemetry_bounds_and_drain():
+    cfg = TelemetryConfig(num_clients=16)
+    tel = init_telemetry(cfg)
+    prof = make_profiles(cfg)
+    participated = jnp.arange(16) < 8
+    tel2 = step_telemetry(cfg, tel, participated, jnp.zeros(16), prof, KEY)
+    for f in (tel2.cpu, tel2.mem, tel2.batt):
+        arr = np.asarray(f)
+        assert (arr >= 0).all() and (arr <= 1).all()
+    # participants drain, idlers recharge
+    b1, b2 = np.asarray(tel.batt), np.asarray(tel2.batt)
+    assert (b2[:8] <= b1[:8] + 1e-6).all()
+    assert (b2[8:] >= b1[8:] - 1e-6).all()
+
+
+def test_des_latency_structure():
+    cfg = FaasSimConfig()
+    tcfg = TelemetryConfig(num_clients=32)
+    prof = make_profiles(tcfg)
+    sel = jnp.ones(32, bool)
+    cold = jnp.zeros(32, bool)
+    warm = jnp.ones(32, bool)
+    per_c, round_c, _ = round_times_ms(cfg, prof, sel, cold, 1e9, 1e6, 1e6)
+    per_w, round_w, _ = round_times_ms(cfg, prof, sel, warm, 1e9, 1e6, 1e6)
+    assert round_c > round_w  # cold starts dominate
+    assert round_c >= np.asarray(per_c).max() - 1e-3  # straggler defines round
+
+
+def test_fogfaas_orchestration_scales_quadratically():
+    cfg = FaasSimConfig()
+    orcs = {}
+    for n in (16, 64, 256):
+        tcfg = TelemetryConfig(num_clients=n)
+        prof = make_profiles(tcfg)
+        sel = jnp.ones(n, bool)
+        warm = jnp.zeros(n, bool)
+        _, _, orch_fed = round_times_ms(
+            cfg, prof, sel, warm, 1e9, 1e6, 1e6, policy="fedfog"
+        )
+        _, _, orch_fog = round_times_ms(
+            cfg, prof, sel, warm, 1e9, 1e6, 1e6, policy="fogfaas"
+        )
+        orcs[n] = (float(orch_fed), float(orch_fog))
+    # FogFaaS grows ~quadratically, FedFog ~n·log n
+    assert orcs[256][1] / orcs[64][1] > 8  # quadratic-ish
+    assert orcs[256][0] / orcs[64][0] < 8  # sub-quadratic
+
+
+def test_energy_cold_start_penalty():
+    cfg = FaasSimConfig()
+    tcfg = TelemetryConfig(num_clients=8)
+    prof = make_profiles(tcfg)
+    sel = jnp.ones(8, bool)
+    e_cold = round_energy_j(cfg, prof, sel, jnp.zeros(8, bool), 1e9, 1e6)
+    e_warm = round_energy_j(cfg, prof, sel, jnp.ones(8, bool), 1e9, 1e6)
+    assert float(e_cold.sum()) > float(e_warm.sum())

@@ -1,0 +1,148 @@
+"""End-to-end federated behaviour: convergence, scheduling dynamics,
+attacks, baselines and the paper-faithful simulator."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheduler import SchedulerConfig
+from repro.fl import AttackConfig, FLConfig, init_fl_state, make_round_fn
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.models import Family, ModelConfig, build_model
+
+KEY = jax.random.PRNGKey(0)
+
+TINY = ModelConfig(
+    name="tiny", family=Family.DENSE, num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128, remat=False,
+    loss_chunk=0,
+)
+
+
+def _mk_batch(key, fl: FLConfig, gb=16, seq=32, vocab=128):
+    ks = jax.random.split(key, 8)
+    n = fl.num_clients
+    return {
+        "tokens": jax.random.randint(ks[0], (gb, seq + 1), 0, vocab),
+        "slot_data_sizes": jnp.abs(jax.random.normal(ks[1], (fl.slots,))) * 100 + 10,
+        "telemetry_cpu": jax.random.uniform(ks[2], (n,), minval=0.5, maxval=1.0),
+        "telemetry_mem": jax.random.uniform(ks[3], (n,), minval=0.5, maxval=1.0),
+        "telemetry_batt": jax.random.uniform(ks[4], (n,), minval=0.5, maxval=1.0),
+        "telemetry_energy": jax.random.uniform(ks[5], (n,), minval=0.55, maxval=1.0),
+        "hist": jnp.abs(jax.random.normal(ks[6], (n, fl.hist_bins))) + 1.0,
+    }
+
+
+def _run_rounds(fl, attack=AttackConfig(), rounds=6, model=None):
+    model = model or build_model(TINY)
+    state = init_fl_state(model, fl, KEY)
+    fn = jax.jit(make_round_fn(model, fl, attack=attack,
+                               flops_per_client_round=1e9))
+    key = KEY
+    hist = []
+    for _ in range(rounds):
+        key, k = jax.random.split(key)
+        state, m = fn(state, _mk_batch(k, fl))
+        hist.append({k2: float(v) for k2, v in m.items()})
+    return state, hist
+
+
+def test_round_metrics_structure_and_warmup():
+    fl = FLConfig(num_clients=12, slots=4, local_steps=2, inner_lr=0.05)
+    _, hist = _run_rounds(fl)
+    assert hist[0]["cold_starts"] > 0  # first round: everyone cold
+    assert hist[-1]["cold_starts"] <= hist[0]["cold_starts"]
+    assert hist[-1]["round_latency_ms"] <= hist[0]["round_latency_ms"]
+    for h in hist:
+        assert np.isfinite(h["loss"])
+        assert 0 <= h["slot_participation"] <= 4
+
+
+def test_microbatch_equivalence():
+    """Gradient accumulation must not change the learning trajectory."""
+    fl1 = FLConfig(num_clients=8, slots=2, inner_lr=0.05, microbatch=1)
+    fl2 = dataclasses.replace(fl1, microbatch=4)
+    model = build_model(TINY)
+    s1 = init_fl_state(model, fl1, KEY)
+    s2 = init_fl_state(model, fl2, KEY)
+    b = _mk_batch(KEY, fl1)
+    s1, m1 = jax.jit(make_round_fn(model, fl1))(s1, b)
+    s2, m2 = jax.jit(make_round_fn(model, fl2))(s2, b)
+    for a, c in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(c, np.float32), atol=2e-2
+        )
+
+
+def test_policies_run():
+    for policy in ("fedfog", "rcs", "fogfaas"):
+        fl = FLConfig(num_clients=8, slots=4, policy=policy)
+        _, hist = _run_rounds(fl, rounds=2)
+        assert np.isfinite(hist[-1]["loss"])
+
+
+def test_aggregators_run():
+    for agg in ("fedavg", "median", "trimmed"):
+        fl = FLConfig(num_clients=8, slots=4, aggregator=agg)
+        _, hist = _run_rounds(fl, rounds=2)
+        assert np.isfinite(hist[-1]["loss"])
+
+
+def test_dp_and_compression_run():
+    fl = FLConfig(
+        num_clients=8, slots=4, clip_norm=1.0, dp_sigma=0.01, compression="int8"
+    )
+    _, hist = _run_rounds(fl, rounds=2)
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_attacks_run_and_dropout_reduces_participation():
+    fl = FLConfig(num_clients=8, slots=4, scheduler=SchedulerConfig(theta_d=10.0))
+    _, clean = _run_rounds(fl, rounds=3)
+    _, dropped = _run_rounds(
+        fl, attack=AttackConfig(kind="dropout", fraction=0.5), rounds=3
+    )
+    assert (
+        sum(h["slot_participation"] for h in dropped)
+        <= sum(h["slot_participation"] for h in clean)
+    )
+
+
+# --------------------------------------------------------------------- #
+# Paper-faithful simulator
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def sim_history():
+    sim = FedFogSimulator(
+        SimulatorConfig(task="emnist", num_clients=24, rounds=12, top_k=10, seed=1)
+    )
+    return sim.run()
+
+
+def test_simulator_converges(sim_history):
+    h = sim_history
+    assert h["accuracy"][-1] > 0.5
+    assert h["accuracy"][-1] > h["accuracy"][0]
+
+
+def test_simulator_warm_containers_cut_latency(sim_history):
+    h = sim_history
+    assert h["cold_starts"][1] > 0
+    assert min(h["cold_starts"][3:]) < h["cold_starts"][1]
+
+
+def test_fedfog_beats_fogfaas_on_latency_and_energy():
+    common = dict(task="emnist", num_clients=24, rounds=8, top_k=10, seed=2)
+    fed = FedFogSimulator(SimulatorConfig(policy="fedfog", **common)).run()
+    fog = FedFogSimulator(SimulatorConfig(policy="fogfaas", **common)).run()
+    assert fed["mean_latency_ms"] < fog["mean_latency_ms"]
+    assert fed["total_energy_j"] < fog["total_energy_j"]
+
+
+def test_har_task_runs():
+    h = FedFogSimulator(
+        SimulatorConfig(task="har", num_clients=16, rounds=6, top_k=8, seed=3)
+    ).run()
+    assert h["accuracy"][-1] > 0.3

@@ -1,0 +1,102 @@
+"""Host-side validation of the sharding rules for every (arch × mesh):
+every parameter/batch/cache PartitionSpec must divide its dimension by the
+product of the mesh axes it names. Catches divisibility regressions without
+compiling anything."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.configs.shapes import SHAPES, batch_specs, cache_specs  # noqa: E402
+from repro.dist.meshes import plan_for  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+# We cannot build 256 fake devices inside the main test process (device
+# count is locked at first jax use), so validate the PLAN arithmetic and
+# spec/dimension divisibility against the abstract mesh shape instead.
+
+
+def _mesh_shape(plan, multi_pod):
+    shape = {}
+    if multi_pod:
+        shape["pod"] = 2
+    shape["client"] = plan.num_clients // (2 if multi_pod else 1)
+    shape["zero"] = plan.zero
+    for name, size in zip(plan.model_axes, plan.model_split):
+        shape[name] = size
+    return {k: v for k, v in shape.items() if v > 1}
+
+
+def _check_spec(spec: P, dims, mesh_shape, where):
+    assert len(spec) <= len(dims), (where, spec, dims)
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in axes:
+            assert a in mesh_shape, f"{where}: axis {a} missing from mesh"
+            prod *= mesh_shape[a]
+        assert dims[i] % prod == 0, (
+            f"{where}: dim {dims[i]} not divisible by {prod} ({spec})"
+        )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_and_cache_specs_divide(arch, multi_pod):
+    from repro.dist.sharding import ShardingRules
+
+    cfg = get_config(arch)
+    plan = plan_for(cfg, multi_pod=multi_pod)
+    mesh_shape = _mesh_shape(plan, multi_pod)
+
+    class FakeMesh:
+        shape = mesh_shape
+
+    rules = ShardingRules.__new__(ShardingRules)
+    object.__setattr__(rules, "cfg", cfg)
+    object.__setattr__(rules, "plan", plan)
+    object.__setattr__(rules, "mesh", FakeMesh())
+
+    model = build_model(cfg)
+    shapes, laxes = model.param_shapes(), model.param_axes()
+
+    for stacked in (False, True):
+        specs = rules.param_specs(shapes, laxes, stacked=stacked)
+        flat_s, _ = jax.tree.flatten(shapes)
+        flat_p, _ = jax.tree.flatten(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        for sds, spec in zip(flat_s, flat_p):
+            dims = ((plan.num_clients,) if stacked else ()) + sds.shape
+            _check_spec(spec, dims, mesh_shape, f"{arch} param stacked={stacked}")
+
+    for shape_name, shape in SHAPES.items():
+        bspecs = batch_specs(cfg, shape)
+        for k, spec in rules.serve_batch_specs(bspecs).items():
+            _check_spec(spec, bspecs[k].shape, mesh_shape, f"{arch} batch {k}")
+        if shape.kind == "decode":
+            cspecs = cache_specs(model, shape)
+            flat_c, _ = jax.tree.flatten(cspecs)
+            flat_cs, _ = jax.tree.flatten(
+                rules.cache_specs(cspecs), is_leaf=lambda x: isinstance(x, P)
+            )
+            for sds, spec in zip(flat_c, flat_cs):
+                _check_spec(
+                    spec, sds.shape, mesh_shape, f"{arch} cache {shape_name}"
+                )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_plan_arithmetic(arch):
+    cfg = get_config(arch)
+    for multi_pod in (False, True):
+        plan = plan_for(cfg, multi_pod=multi_pod)
+        data = 16 * (2 if multi_pod else 1)
+        assert plan.num_clients * plan.zero == data
+        assert plan.model_split[0] * plan.model_split[1] == 16
+        if cfg.num_experts:
+            assert cfg.num_experts % plan.model_split[0] == 0
+        elif plan.model_split[0] > 1:
+            assert cfg.num_heads % plan.model_split[0] == 0
