@@ -4,14 +4,16 @@ Variants: full FedFog, w/o utility scheduler (random selection), w/o drift
 manager (drift gate disabled), w/o energy model (adaptive budgeting off +
 no energy gate). Reported: accuracy, mean latency, cold starts — the paper
 claims every ablation hurts at least one of them.
+
+Runs on the sweep API: one compiled program per variant (seed 0 vmapped).
 """
 from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import Row, fmt, preset, timed_rounds
+from benchmarks.common import Row, fmt, preset, timed_sweep
 from repro.core.scheduler import SchedulerConfig
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.fl.simulator import SimulatorConfig
 
 
 def run() -> list[Row]:
@@ -31,18 +33,21 @@ def run() -> list[Row]:
             ),
         ),
     }
+    base = SimulatorConfig(
+        task="emnist", num_clients=p["clients"], rounds=p["rounds"],
+        top_k=p["topk"],
+        drift_period=max(p["rounds"] // 2, 6),  # drift manager must matter
+    )
+    res, uspc = timed_sweep(base, seeds=[0], cases=list(variants.values()))
     rows, metrics = [], {}
-    for name, kw in variants.items():
-        sim = FedFogSimulator(
-            SimulatorConfig(
-                task="emnist", num_clients=p["clients"], rounds=p["rounds"],
-                top_k=p["topk"], seed=0,
-                drift_period=max(p["rounds"] // 2, 6),  # drift manager must matter
-                **kw,
-            )
-        )
-        h, uspc = timed_rounds(sim, p["rounds"])
-        metrics[name] = h
+    for i, name in enumerate(variants):
+        s = res.stats(i)
+        metrics[name] = h = {
+            "final_accuracy": float(s["final_accuracy"][0]),
+            "mean_latency_ms": float(s["mean_latency_ms"][0]),
+            "total_cold_starts": float(s["total_cold_starts"][0]),
+            "total_energy_j": float(s["total_energy_j"][0]),
+        }
         rows.append(
             Row(
                 f"tableVI/{name}",

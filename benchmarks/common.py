@@ -34,11 +34,27 @@ class Row:
 
 
 def timed_rounds(sim, rounds: int):
-    """Run a simulator, returning (history, us_per_round)."""
+    """Run a simulator (per-round loop engine), returning (history, us_per_round)."""
     t0 = time.time()
     h = sim.run(rounds)
     dt = time.time() - t0
     return h, dt / rounds * 1e6
+
+
+def timed_sweep(cfg, seeds, *, axes=None, cases=None, rounds=None):
+    """Run a vmapped/scanned sweep, returning (SweepResult, us_per_sim_round).
+
+    us_per_sim_round amortizes wall-clock over every simulated round
+    (grid points × seeds × rounds) — directly comparable to the
+    ``timed_rounds`` number of the per-round loop engine.
+    """
+    from repro.sim import run_sweep
+
+    t0 = time.time()
+    res = run_sweep(cfg, seeds, axes=axes, cases=cases, rounds=rounds)
+    dt = time.time() - t0
+    sim_rounds = len(res.configs) * len(res.seeds) * res.rounds
+    return res, dt / max(sim_rounds, 1) * 1e6
 
 
 def fmt(**kv) -> str:

@@ -3,31 +3,30 @@
 Drift injected every ``drift_period`` rounds; report initial/peak/post-drift
 trough/recovery accuracies and rounds-to-recovery. Paper claim: ≥95% of
 peak accuracy recovered within 10 rounds post-drift.
+
+Runs on the sweep API (single grid point, scan-compiled rounds).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, fmt, preset, timed_rounds
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from benchmarks.common import Row, fmt, preset, timed_sweep
+from repro.fl.simulator import SimulatorConfig
 
 
 def run() -> list[Row]:
     p = preset()
     rounds = max(p["rounds"], 24)
     drift_at = rounds // 2
-    sim = FedFogSimulator(
-        SimulatorConfig(
-            task="emnist",
-            num_clients=p["clients"],
-            rounds=rounds,
-            top_k=p["topk"],
-            drift_period=drift_at,
-            seed=0,
-        )
+    cfg = SimulatorConfig(
+        task="emnist",
+        num_clients=p["clients"],
+        rounds=rounds,
+        top_k=p["topk"],
+        drift_period=drift_at,
     )
-    h, uspc = timed_rounds(sim, rounds)
-    acc = np.asarray(h["accuracy"])
+    res, uspc = timed_sweep(cfg, seeds=[0], rounds=rounds)
+    acc = np.asarray(res.metric("accuracy")[0, 0])
     peak_pre = float(acc[:drift_at].max())
     # trough within 10 rounds of the shift; recovery measured FROM the trough
     window_end = min(drift_at + 10, rounds)

@@ -2,42 +2,46 @@
 
 Paper claims: best trade-off near batch 32; lr 0.01-ish best, with 0.001
 too slow and 0.1 unstable.
+
+Runs on the sweep API: one sweep over batch sizes, one over learning
+rates (each grid point scan-compiled).
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, fmt, preset, timed_rounds
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from benchmarks.common import Row, fmt, preset, timed_sweep
+from repro.fl.simulator import SimulatorConfig
+
+BATCHES = (16, 32, 64, 128)
+LRS = (0.005, 0.05, 0.5)
 
 
 def run() -> list[Row]:
     p = preset()
+    base = SimulatorConfig(
+        task="emnist", num_clients=p["clients"], rounds=p["rounds"],
+        top_k=p["topk"],
+    )
     rows = []
-    accs_b, accs_lr = {}, {}
-    for bs in (16, 32, 64, 128):
-        sim = FedFogSimulator(
-            SimulatorConfig(
-                task="emnist", num_clients=p["clients"], rounds=p["rounds"],
-                top_k=p["topk"], local_batch=bs, seed=0,
-            )
-        )
-        h, uspc = timed_rounds(sim, p["rounds"])
-        accs_b[bs] = h["final_accuracy"]
+    res_b, uspc_b = timed_sweep(
+        base, seeds=[0], axes={"local_batch": list(BATCHES)}
+    )
+    accs_b = {
+        bs: float(res_b.final("accuracy")[i, 0]) for i, bs in enumerate(BATCHES)
+    }
+    for i, bs in enumerate(BATCHES):
+        s = res_b.stats(i)
         rows.append(
             Row(
-                f"fig10/batch{bs}", uspc,
-                fmt(acc=h["final_accuracy"], latency_ms=h["mean_latency_ms"]),
+                f"fig10/batch{bs}", uspc_b,
+                fmt(acc=accs_b[bs], latency_ms=float(s["mean_latency_ms"][0])),
             )
         )
-    for lr in (0.005, 0.05, 0.5):
-        sim = FedFogSimulator(
-            SimulatorConfig(
-                task="emnist", num_clients=p["clients"], rounds=p["rounds"],
-                top_k=p["topk"], lr=lr, seed=0,
-            )
-        )
-        h, uspc = timed_rounds(sim, p["rounds"])
-        accs_lr[lr] = h["final_accuracy"]
-        rows.append(Row(f"fig10/lr{lr}", uspc, fmt(acc=h["final_accuracy"])))
+    res_lr, uspc_lr = timed_sweep(base, seeds=[0], axes={"lr": list(LRS)})
+    accs_lr = {
+        lr: float(res_lr.final("accuracy")[i, 0]) for i, lr in enumerate(LRS)
+    }
+    for lr in LRS:
+        rows.append(Row(f"fig10/lr{lr}", uspc_lr, fmt(acc=accs_lr[lr])))
     rows.append(
         Row(
             "fig10/summary",

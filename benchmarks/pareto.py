@@ -3,37 +3,41 @@
 Sweeps the participation budget for FedFog / FogFaaS / RCS; each point is
 (mean latency, final accuracy). Paper claim: FedFog dominates (higher
 accuracy at lower latency).
+
+Runs on the sweep API: the policy × budget grid via ``axes`` — one
+compiled program per grid point.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, fmt, preset, timed_rounds
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from benchmarks.common import Row, fmt, preset, timed_sweep
+from repro.fl.simulator import SimulatorConfig
 
 
 def run() -> list[Row]:
     p = preset()
     budgets = [max(4, p["clients"] // 6), p["clients"] // 3, p["clients"] // 2]
+    base = SimulatorConfig(
+        task="emnist", num_clients=p["clients"], rounds=p["rounds"]
+    )
+    res, uspc = timed_sweep(
+        base,
+        seeds=[0],
+        axes={"policy": ["fedfog", "rcs", "fogfaas"], "top_k": budgets},
+    )
     rows = []
-    points = {}
-    for policy in ("fedfog", "rcs", "fogfaas"):
-        for k in budgets:
-            sim = FedFogSimulator(
-                SimulatorConfig(
-                    task="emnist", num_clients=p["clients"],
-                    rounds=p["rounds"], top_k=k, policy=policy, seed=0,
-                )
+    points: dict[str, list[tuple[float, float]]] = {}
+    for g, ov in enumerate(res.configs):
+        s = res.stats(g)
+        lat = float(s["mean_latency_ms"][0])
+        acc = float(s["final_accuracy"][0])
+        points.setdefault(ov["policy"], []).append((lat, acc))
+        rows.append(
+            Row(
+                f"fig2/{ov['policy']}/k{ov['top_k']}",
+                uspc,
+                fmt(latency_ms=lat, acc=acc),
             )
-            h, uspc = timed_rounds(sim, p["rounds"])
-            points.setdefault(policy, []).append(
-                (h["mean_latency_ms"], h["final_accuracy"])
-            )
-            rows.append(
-                Row(
-                    f"fig2/{policy}/k{k}",
-                    uspc,
-                    fmt(latency_ms=h["mean_latency_ms"], acc=h["final_accuracy"]),
-                )
-            )
+        )
     # dominance check: for each fedfog point, does any other policy point
     # have BOTH lower latency and higher accuracy?
     dominated = 0

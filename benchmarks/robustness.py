@@ -3,11 +3,13 @@
 Five settings: clean, label-flip (20%), Gaussian-noise updates (20%),
 dropout (20%), model replacement (single client). Paper's ordering of
 degradation severity: model_replacement > label_flip > noise > dropout.
+
+Runs on the sweep API: one compiled program per attack setting.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, fmt, preset, timed_rounds
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from benchmarks.common import Row, fmt, preset, timed_sweep
+from repro.fl.simulator import SimulatorConfig
 
 ATTACKS = [
     ("clean", "none", 0.0),
@@ -20,22 +22,22 @@ ATTACKS = [
 
 def run() -> list[Row]:
     p = preset()
+    base = SimulatorConfig(
+        task="emnist", num_clients=p["clients"], rounds=p["rounds"],
+        top_k=p["topk"],
+    )
+    res, uspc = timed_sweep(
+        base,
+        seeds=[0],
+        cases=[
+            {"attack": kind, "attack_fraction": frac}
+            for _, kind, frac in ATTACKS
+        ],
+    )
     rows, finals = [], {}
-    for name, kind, frac in ATTACKS:
-        sim = FedFogSimulator(
-            SimulatorConfig(
-                task="emnist",
-                num_clients=p["clients"],
-                rounds=p["rounds"],
-                top_k=p["topk"],
-                attack=kind,
-                attack_fraction=frac,
-                seed=0,
-            )
-        )
-        h, uspc = timed_rounds(sim, p["rounds"])
-        finals[name] = h["final_accuracy"]
-        rows.append(Row(f"tableV/{name}", uspc, fmt(final_acc=h["final_accuracy"])))
+    for i, (name, _, _) in enumerate(ATTACKS):
+        finals[name] = float(res.final("accuracy")[i, 0])
+        rows.append(Row(f"tableV/{name}", uspc, fmt(final_acc=finals[name])))
     clean = finals["clean"]
     drops = {k: clean - v for k, v in finals.items() if k != "clean"}
     order = sorted(drops, key=lambda k: -drops[k])

@@ -22,6 +22,7 @@ SUITES = [
     "privacy_tradeoff",  # Fig 3
     "hyperparam_sensitivity",  # Fig 10
     "sim_vs_real",  # Tables VII/VIII
+    "simulator_engine",  # scanned/sweep vs looped engine throughput
     "kernels_bench",
     "roofline",  # §Roofline (reads results/dryrun)
 ]

@@ -1,13 +1,17 @@
 """Paper Fig. 8/9: energy, cold starts, latency and accuracy vs client
 count for FedFog vs FogFaaS. Paper claims FedFog's energy grows ~O(N log N)
 vs FogFaaS ~O(N²), and cold-start overhead ~O(N) vs super-linear.
+
+Runs on the sweep API: client counts change array shapes, so each
+(N, policy) pair is its own compiled program (``cases``); seeds vmap
+inside each.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, SCALE, fmt, preset, timed_rounds
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from benchmarks.common import Row, SCALE, fmt, preset, timed_sweep
+from repro.fl.simulator import SimulatorConfig
 
 SIZES = {"quick": (8, 16, 32), "default": (16, 32, 64), "full": (16, 32, 64, 128)}
 
@@ -22,35 +26,39 @@ def _fit_power(ns, ys):
 def run() -> list[Row]:
     p = preset()
     sizes = SIZES[SCALE]
+    cases = [
+        {
+            "num_clients": n,
+            "policy": policy,
+            "top_k": max(4, n // 3) if policy == "fedfog" else None,
+        }
+        for n in sizes
+        for policy in ("fedfog", "fogfaas")
+    ]
+    base = SimulatorConfig(task="emnist", rounds=p["rounds"])
+    res, uspc = timed_sweep(base, seeds=[0], cases=cases)
     rows = []
     series = {("fedfog", "energy"): [], ("fogfaas", "energy"): [],
               ("fedfog", "cold"): [], ("fogfaas", "cold"): [],
               ("fedfog", "latency"): [], ("fogfaas", "latency"): []}
-    for n in sizes:
-        for policy in ("fedfog", "fogfaas"):
-            sim = FedFogSimulator(
-                SimulatorConfig(
-                    task="emnist", num_clients=n, rounds=p["rounds"],
-                    top_k=max(4, n // 3) if policy == "fedfog" else None,
-                    policy=policy, seed=0,
-                )
+    for g, ov in enumerate(res.configs):
+        s = res.stats(g)
+        policy, n = ov["policy"], ov["num_clients"]
+        series[(policy, "energy")].append(float(s["total_energy_j"][0]))
+        series[(policy, "cold")].append(float(s["total_cold_starts"][0]) + 1)
+        series[(policy, "latency")].append(float(s["mean_latency_ms"][0]))
+        rows.append(
+            Row(
+                f"fig8/{policy}/N{n}",
+                uspc,
+                fmt(
+                    energy_j=float(s["total_energy_j"][0]),
+                    cold=float(s["total_cold_starts"][0]),
+                    latency_ms=float(s["mean_latency_ms"][0]),
+                    acc=float(s["final_accuracy"][0]),
+                ),
             )
-            h, uspc = timed_rounds(sim, p["rounds"])
-            series[(policy, "energy")].append(h["total_energy_j"])
-            series[(policy, "cold")].append(h["total_cold_starts"] + 1)
-            series[(policy, "latency")].append(h["mean_latency_ms"])
-            rows.append(
-                Row(
-                    f"fig8/{policy}/N{n}",
-                    uspc,
-                    fmt(
-                        energy_j=h["total_energy_j"],
-                        cold=h["total_cold_starts"],
-                        latency_ms=h["mean_latency_ms"],
-                        acc=h["final_accuracy"],
-                    ),
-                )
-            )
+        )
     ns = np.asarray(sizes, float)
     rows.append(
         Row(

@@ -32,7 +32,8 @@ def _real_round_ms(sim: FedFogSimulator, n: int) -> float:
 
     def one_client(cid):
         return sim._client_update(
-            params, jnp.int32(cid), jnp.int32(1), key, jnp.zeros((), bool)
+            sim.data_cfg, params, jnp.int32(cid), jnp.int32(1), key,
+            jnp.zeros((), bool),
         )
 
     fn = jax.jit(one_client)

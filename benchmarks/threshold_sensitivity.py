@@ -3,16 +3,15 @@
 Three (θ_h, θ_e, θ_d) combinations × multiple seeds; reports mean ± std
 final accuracy. Paper claim to validate: the middle setting (0.6, 0.5, 0.1)
 gives the best accuracy of the three.
+
+Runs on the sweep API: one compiled program per grid point, all seeds
+vmapped inside it.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
-from benchmarks.common import Row, fmt, preset, timed_rounds
+from benchmarks.common import Row, fmt, preset, timed_sweep
 from repro.core.scheduler import SchedulerConfig
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.fl.simulator import SimulatorConfig
 
 GRID = [
     (0.5, 0.4, 0.10),
@@ -23,32 +22,28 @@ GRID = [
 
 def run() -> list[Row]:
     p = preset()
-    rows = []
-    results = {}
-    for th, te, td in GRID:
-        accs, uspc = [], 0.0
-        for seed in range(p["seeds"]):
-            sim = FedFogSimulator(
-                SimulatorConfig(
-                    task="emnist",
-                    num_clients=p["clients"],
-                    rounds=p["rounds"],
-                    top_k=p["topk"],
-                    seed=seed,
-                    scheduler=SchedulerConfig(theta_h=th, theta_e=te, theta_d=td),
-                )
-            )
-            h, uspc = timed_rounds(sim, p["rounds"])
-            accs.append(h["final_accuracy"])
-        results[(th, te, td)] = (float(np.mean(accs)), float(np.std(accs)))
-        rows.append(
-            Row(
-                f"tableII/theta_{th}_{te}_{td}",
-                uspc,
-                fmt(acc_mean=results[(th, te, td)][0], acc_std=results[(th, te, td)][1]),
-            )
+    base = SimulatorConfig(
+        task="emnist", num_clients=p["clients"], rounds=p["rounds"],
+        top_k=p["topk"],
+    )
+    res, uspc = timed_sweep(
+        base,
+        seeds=range(p["seeds"]),
+        cases=[
+            {"scheduler": SchedulerConfig(theta_h=th, theta_e=te, theta_d=td)}
+            for th, te, td in GRID
+        ],
+    )
+    acc_mean, acc_std = res.mean_std("accuracy", reduce="final")
+    rows = [
+        Row(
+            f"tableII/theta_{th}_{te}_{td}",
+            uspc,
+            fmt(acc_mean=float(acc_mean[i]), acc_std=float(acc_std[i])),
         )
-    best = max(results, key=lambda k: results[k][0])
+        for i, (th, te, td) in enumerate(GRID)
+    ]
+    best = GRID[int(acc_mean.argmax())]
     rows.append(
         Row(
             "tableII/summary",

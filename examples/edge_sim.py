@@ -6,10 +6,40 @@ Reproduces the qualitative story of the paper's Figures 5-9 on the
 EMNIST-like task: FedFog vs FogFaaS vs Random Client Selection, with data
 drift injected mid-run and 10% label-flipping adversaries — printing
 accuracy / latency / energy / cold-start traces per policy.
+
+``--engine scan`` (default) runs each experiment as ONE compiled XLA
+program (jax.lax.scan over rounds); ``--engine loop`` keeps the per-round
+jitted loop for streaming/debugging. ``--sweep-seeds K`` additionally
+demos the sweep API: all K seeds of all three policies vmapped/compiled
+per policy, reported as mean ± 95% CI.
 """
 import argparse
 
 from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+
+
+def sweep_demo(args) -> None:
+    """Sweep-API example: policies × seeds as compiled programs."""
+    from repro.sim import run_sweep
+
+    cfg = SimulatorConfig(
+        task="emnist",
+        num_clients=args.clients,
+        rounds=args.rounds,
+        top_k=args.topk,
+        drift_period=args.rounds // 2,
+        attack="label_flip",
+        attack_fraction=0.1,
+    )
+    res = run_sweep(
+        cfg,
+        seeds=range(args.sweep_seeds),
+        axes={"policy": ["fedfog", "fogfaas", "rcs"]},
+    )
+    mean, ci = res.mean_ci("accuracy")
+    print(f"\n=== sweep: final accuracy over {args.sweep_seeds} seeds ===")
+    for g, ov in enumerate(res.configs):
+        print(f"{ov['policy']:10s} {mean[g, -1]:.3f} ± {ci[g, -1]:.3f}")
 
 
 def main():
@@ -17,6 +47,9 @@ def main():
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--clients", type=int, default=48)
     ap.add_argument("--topk", type=int, default=16)
+    ap.add_argument("--engine", choices=("scan", "loop"), default="scan")
+    ap.add_argument("--sweep-seeds", type=int, default=0,
+                    help="if >0, also run the multi-seed sweep demo")
     args = ap.parse_args()
 
     results = {}
@@ -34,7 +67,7 @@ def main():
                 seed=0,
             )
         )
-        h = sim.run()
+        h = sim.run_scanned() if args.engine == "scan" else sim.run()
         results[policy] = h
         print(f"\n=== {policy} ===")
         print("round | accuracy | latency(ms) | energy(J) | cold starts")
@@ -53,6 +86,9 @@ def main():
             f"{h['mean_latency_ms']:12.0f} {h['total_energy_j']:13.1f} "
             f"{int(h['total_cold_starts']):12d}"
         )
+
+    if args.sweep_seeds > 0:
+        sweep_demo(args)
 
 
 if __name__ == "__main__":

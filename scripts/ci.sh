@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI entry point: dev deps → tier-1 tests → quick benchmark smoke.
+#
+# Mirrors what the GitHub Actions workflow (.github/workflows/ci.yml)
+# runs; keep the two in sync by having the workflow call this script.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Dev deps are optional (tests importorskip them); ignore install failures
+# in hermetic/offline containers.
+python -m pip install -r requirements-dev.txt 2>/dev/null \
+  || echo "ci.sh: dev-dep install skipped (offline?)"
+
+echo "=== tier-1 tests ==="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+echo "=== benchmark smoke (quick scale) ==="
+REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.run threshold_sensitivity
+
+echo "ci.sh: OK"

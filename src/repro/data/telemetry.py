@@ -13,7 +13,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ClientTelemetry
+from repro.core.types import ClientTelemetry, _pytree_dataclass
 
 Array = jax.Array
 
@@ -28,9 +28,14 @@ class TelemetryConfig:
     seed: int = 0
 
 
-@dataclasses.dataclass(frozen=True)
+@_pytree_dataclass
 class DeviceProfiles:
-    """Static heterogeneity: (N,) arrays."""
+    """Static heterogeneity: (N,) arrays.
+
+    Registered as a pytree so profiles can ride through jit/vmap/scan as
+    explicit arguments of the scan-compiled simulator and the vmapped
+    sweep subsystem (rather than leaking in as trace constants).
+    """
 
     mips: Array  # compute capacity, instructions/s (sim units)
     bw_up: Array  # uplink bytes/s

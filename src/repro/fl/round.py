@@ -34,6 +34,7 @@ from repro.fl.compression import apply_compression, wire_bytes_per_param
 from repro.fl.state import FLConfig, FLState
 from repro.models.transformer import Runtime
 from repro.optim import adamw, apply_updates, clip_by_global_norm, sgdm
+from repro.sim.des import RoundCostModel
 
 Array = jax.Array
 
@@ -98,6 +99,9 @@ def make_round_fn(
     c = fl_cfg.slots
     init_inner, update_inner = _inner_optimizer(fl_cfg)
     flops_round = flops_per_client_round or 0.0
+    # §IV.F cost accounting shared with the paper-scale simulator — both
+    # engines derive energy/cold-start semantics from the same model.
+    cost_model = RoundCostModel.from_scheduler(fl_cfg.scheduler)
 
     # Pod-scale sharding constraints: pin the slot-stacked replicas to the
     # client axis (and moments to the ZeRO axis) instead of trusting GSPMD
@@ -301,17 +305,15 @@ def make_round_fn(
         )
 
         # ---- 6. energy / cold-start / drift bookkeeping ---------------- #
-        sel_n = decision.selection.mask.astype(jnp.float32)
         # Per-LOGICAL-client energy: compute ∝ FLOPs for selected clients,
-        # uplink ∝ compressed delta bytes (§IV.F).
-        em = fl_cfg.scheduler.energy_model
+        # uplink ∝ compressed delta bytes (§IV.F) — via the shared DES
+        # cost model (repro.sim.des).
         tx_bytes = wire_bytes_per_param(
             fl_cfg.compression, fl_cfg.topk_fraction
         ) * float(model.param_count())
-        cpu_cycles = flops_round  # 1 cycle ≈ 1 flop in sim units
-        round_energy_j = sel_n * (
-            em.c_cpu * cpu_cycles + em.c_tx * tx_bytes
-        ) + (decision.selection.mask & ~state.sched.warm) * em.cold_start_energy_j
+        round_energy_j = cost_model.energy_j(
+            decision.selection.mask, state.sched.warm, flops_round, tx_bytes
+        )
         new_sched = account_energy(
             decision.new_state, round_energy_j, fl_cfg.scheduler
         )

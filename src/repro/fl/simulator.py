@@ -9,6 +9,24 @@ Unlike the pod-scale runtime (fl/round.py) which maps clients onto mesh
 slots, here ALL N clients are vmapped — at MLP scale that is the fastest
 way to simulate a 100-device deployment on one host, and it keeps the
 simulator exactly faithful to the paper's synchronous-round semantics.
+
+Two execution engines share ONE round function (``_round``):
+
+  * ``run()``        — per-round jitted loop. One dispatch + host sync per
+                       round; keep for debugging / streaming metrics.
+  * ``run_scanned()`` — the whole multi-round experiment compiled into a
+                       single ``jax.lax.scan``: per-round metrics are
+                       stacked on-device and transferred to the host ONCE
+                       at the end. This is the hot path behind every
+                       benchmark suite, and what ``repro.sim.sweep`` vmaps
+                       over seeds.
+
+All round state is functional: ``init_state(seed)`` builds an immutable
+``(env, params, sched_state, telemetry)`` tuple and is traceable over the
+seed, so a whole seed batch can be initialized inside one vmapped program.
+DES cost accounting (latency / energy / cold starts) comes from the shared
+``repro.sim.des.RoundCostModel`` — the same model the pod-scale engine
+uses, so the two engines cannot drift apart on §IV.F semantics.
 """
 from __future__ import annotations
 
@@ -32,7 +50,7 @@ from repro.data.telemetry import (
 )
 from repro.fl import attacks as attacks_mod
 from repro.fl.compression import apply_compression, wire_bytes_per_param
-from repro.sim.faas import FaasSimConfig, round_energy_j, round_times_ms
+from repro.sim.des import FaasSimConfig, RoundCostModel
 
 Array = jax.Array
 
@@ -111,7 +129,10 @@ class SimulatorConfig:
 
 
 class FedFogSimulator:
-    def __init__(self, cfg: SimulatorConfig):
+    def __init__(self, cfg: SimulatorConfig, *, defer_state: bool = False):
+        """``defer_state=True`` skips the eager default-seed state build —
+        for callers (the sweep layer) that trace ``init_state`` per seed
+        inside a compiled program and would discard the eager one."""
         self.cfg = cfg
         self.data_cfg = cfg.data_cfg()
         in_dim, n_cls = cfg.dims()
@@ -120,49 +141,87 @@ class FedFogSimulator:
         self.tel_cfg = cfg.telemetry or TelemetryConfig(
             num_clients=cfg.num_clients, seed=cfg.seed
         )
-        self.profiles = make_profiles(self.tel_cfg)
-        key = jax.random.PRNGKey(cfg.seed)
-        self.params = mlp_init(key, self.sizes)
-        self.n_params = sum(
-            int(jnp.size(l)) for l in jax.tree.leaves(self.params)
+        # When telemetry was derived from the simulator seed, sweep seeds
+        # re-derive it; an explicitly provided TelemetryConfig stays fixed.
+        self._tel_follows_seed = cfg.telemetry is None
+        self.n_mal = int(round(cfg.attack_fraction * cfg.num_clients))
+        self.cost_model = RoundCostModel(cfg.faas)
+        self.n_params = sum(a * b + b for a, b in zip(self.sizes[:-1], self.sizes[1:]))
+        self.env = self.params = self.sched_state = self.telemetry = None
+        if not defer_state:
+            self._ensure_state()
+        self._round_jit = jax.jit(self._round)
+        self._scan_jit = jax.jit(self._scan_rounds, static_argnames=("rounds",))
+
+    def _ensure_state(self):
+        if self.env is None:
+            env, params, sched, tel = self.init_state(self.cfg.seed)
+            self.env = env
+            self.params, self.sched_state, self.telemetry = params, sched, tel
+
+    @property
+    def profiles(self):
+        """Device profiles of the default-seed env (None until state init)."""
+        return None if self.env is None else self.env["profiles"]
+
+    # ------------------------------------------------------------------ #
+    def init_state(self, seed):
+        """Functional state init: (env, params, sched_state, telemetry).
+
+        ``seed`` may be a Python int (eager path) or a traced int32 — the
+        whole init is jax-traceable, which is what lets the sweep layer
+        vmap it over a seed batch inside one compiled program.
+        """
+        cfg = self.cfg
+        seed = jnp.asarray(seed, jnp.int32)
+        data_cfg = dataclasses.replace(self.data_cfg, seed=seed)
+        params = mlp_init(jax.random.PRNGKey(seed), self.sizes)
+        tel_cfg = (
+            dataclasses.replace(self.tel_cfg, seed=seed)
+            if self._tel_follows_seed
+            else self.tel_cfg
         )
-        self.sched_state = init_scheduler_state(
-            cfg.num_clients, n_cls, cfg.scheduler.theta_e
+        profiles = make_profiles(tel_cfg)
+        telemetry = init_telemetry(tel_cfg)
+        sched = init_scheduler_state(
+            cfg.num_clients, self.num_classes, cfg.scheduler.theta_e
         )
         # Bootstrap the drift reference with the true round-0 distributions,
         # otherwise round 0 flags every client as "drifted" vs the uniform
         # prior and selects nobody.
-        import dataclasses as _dc
-
-        self.sched_state = _dc.replace(
-            self.sched_state,
-            prev_hist=self._histograms(jnp.zeros((), jnp.int32)),
+        sched = dataclasses.replace(
+            sched,
+            prev_hist=self._histograms(data_cfg, jnp.zeros((), jnp.int32)),
         )
-        self.telemetry = init_telemetry(self.tel_cfg)
-        self.data_sizes = jnp.exp(
-            jax.random.normal(jax.random.PRNGKey(cfg.seed + 40), (cfg.num_clients,))
+        data_sizes = jnp.exp(
+            jax.random.normal(jax.random.PRNGKey(seed + 40), (cfg.num_clients,))
             * 0.5
             + jnp.log(300.0)
         )
         # malicious client designation (fixed at start, §IV.D)
-        n_mal = int(round(cfg.attack_fraction * cfg.num_clients))
-        self.malicious = jax.random.permutation(
-            jax.random.PRNGKey(cfg.seed + 41),
-            jnp.arange(cfg.num_clients) < n_mal,
+        malicious = jax.random.permutation(
+            jax.random.PRNGKey(seed + 41),
+            jnp.arange(cfg.num_clients) < self.n_mal,
         )
-        self._round_jit = jax.jit(self._round)
+        env = {
+            "profiles": profiles,
+            "data_sizes": data_sizes,
+            "malicious": malicious,
+            "data_seed": seed,
+        }
+        return env, params, sched, telemetry
 
     # ------------------------------------------------------------------ #
-    def _client_update(self, params, cid, round_idx, key, malicious):
+    def _client_update(self, data_cfg, params, cid, round_idx, key, malicious):
         """E local epochs of SGD on one client's data (Eq. 5)."""
         cfg = self.cfg
         if cfg.task == "emnist":
             x, y = emnist_like.client_batch(
-                self.data_cfg, cid, round_idx, key, cfg.local_batch * cfg.local_epochs
+                data_cfg, cid, round_idx, key, cfg.local_batch * cfg.local_epochs
             )
         else:
             x, y = har_like.client_batch(
-                self.data_cfg, cid, round_idx, key, cfg.local_batch * cfg.local_epochs
+                data_cfg, cid, round_idx, key, cfg.local_batch * cfg.local_epochs
             )
         if cfg.attack == "label_flip":
             y = jnp.where(malicious, (self.num_classes - 1) - y, y)
@@ -176,23 +235,28 @@ class FedFogSimulator:
         p_new, _ = jax.lax.scan(step, params, (xs, ys))
         return jax.tree.map(lambda a, b: a - b, p_new, params)
 
-    def _histograms(self, round_idx):
+    def _histograms(self, data_cfg, round_idx):
         fn = (
             emnist_like.client_histogram
             if self.cfg.task == "emnist"
             else har_like.client_histogram
         )
-        return jax.vmap(lambda c: fn(self.data_cfg, c, round_idx))(
+        return jax.vmap(lambda c: fn(data_cfg, c, round_idx))(
             jnp.arange(self.cfg.num_clients)
         )
 
     # ------------------------------------------------------------------ #
-    def _round(self, params, sched_state, telemetry, round_idx, key):
+    def _round(self, env, params, sched_state, telemetry, round_idx, key):
+        """One synchronous FL round — pure function of its arguments, so it
+        is equally valid as a jitted step, a ``lax.scan`` body, and a
+        vmapped-per-seed program."""
         cfg = self.cfg
         n = cfg.num_clients
+        data_cfg = dataclasses.replace(self.data_cfg, seed=env["data_seed"])
+        malicious = env["malicious"]
         k_sel, k_data, k_attack, k_dp, k_tel, k_eval = jax.random.split(key, 6)
 
-        hist = self._histograms(round_idx)
+        hist = self._histograms(data_cfg, round_idx)
         decision = schedule_round(sched_state, telemetry, hist, cfg.scheduler)
 
         # --- policy-specific participation --------------------------- #
@@ -210,8 +274,10 @@ class FedFogSimulator:
         # --- local training over ALL clients (vmapped), masked ------- #
         cids = jnp.arange(n)
         deltas = jax.vmap(
-            lambda cid, k, m: self._client_update(params, cid, round_idx, k, m)
-        )(cids, jax.random.split(k_data, n), self.malicious)
+            lambda cid, k, m: self._client_update(
+                data_cfg, params, cid, round_idx, k, m
+            )
+        )(cids, jax.random.split(k_data, n), malicious)
 
         if cfg.clip_norm > 0:
             from repro.optim import clip_by_global_norm
@@ -221,14 +287,14 @@ class FedFogSimulator:
             )
         if cfg.attack not in ("none", "label_flip"):
             deltas = attacks_mod.corrupt_deltas(
-                deltas, self.malicious & mask, cfg.attack, k_attack,
+                deltas, malicious & mask, cfg.attack, k_attack,
                 noise_scale=cfg.attack_noise_scale,
                 replacement_scale=cfg.attack_replacement_scale,
             )
-            mask = attacks_mod.dropout_mask(mask, self.malicious, cfg.attack)
+            mask = attacks_mod.dropout_mask(mask, malicious, cfg.attack)
         deltas = apply_compression(deltas, cfg.compression)
 
-        agg = agg_mod.fedavg_stacked(deltas, mask, self.data_sizes)
+        agg = agg_mod.fedavg_stacked(deltas, mask, env["data_sizes"])
         if cfg.dp_sigma > 0:
             agg = privacy_mod.gaussian_mechanism(
                 agg,
@@ -241,30 +307,28 @@ class FedFogSimulator:
             lambda p, a: p + cfg.server_lr * a, params, agg
         )
 
-        # --- DES: latency + energy (§IV.F) --------------------------- #
+        # --- DES: latency + energy (§IV.F, shared RoundCostModel) ----- #
         workload = 6.0 * self.n_params * cfg.local_batch * cfg.local_epochs
         up_bytes = wire_bytes_per_param(cfg.compression) * self.n_params
         warm = sched_state.warm
         if cfg.policy in ("fogfaas",):
             warm = jnp.zeros_like(warm)  # naive platform: no keep-alive
-        per_ms, round_ms, orch_ms = round_times_ms(
-            cfg.faas, self.profiles, mask, warm, workload, up_bytes,
+        costs = self.cost_model.round_costs(
+            env["profiles"], mask, warm, workload, up_bytes,
             2.0 * self.n_params,
             policy="fedfog" if cfg.policy in ("fedfog", "rcs", "vanilla") else "fogfaas",
         )
-        energy = round_energy_j(cfg.faas, self.profiles, mask, warm, workload, up_bytes)
-        cold_starts = jnp.sum((mask & ~warm).astype(jnp.int32))
 
-        new_sched = account_energy(decision.new_state, energy, cfg.scheduler)
+        new_sched = account_energy(decision.new_state, costs.energy_j, cfg.scheduler)
         new_tel = step_telemetry(
-            self.tel_cfg, telemetry, mask, energy, self.profiles, k_tel
+            self.tel_cfg, telemetry, mask, costs.energy_j, env["profiles"], k_tel
         )
 
         # --- eval ------------------------------------------------------ #
         ev = (
-            emnist_like.eval_batch(self.data_cfg, k_eval, 512)
+            emnist_like.eval_batch(data_cfg, k_eval, 512)
             if cfg.task == "emnist"
-            else har_like.eval_batch(self.data_cfg, k_eval, 512)
+            else har_like.eval_batch(data_cfg, k_eval, 512)
         )
         logits = mlp_apply(new_params, ev[0])
         acc = jnp.mean((jnp.argmax(logits, -1) == ev[1]).astype(jnp.float32))
@@ -272,10 +336,10 @@ class FedFogSimulator:
         metrics = {
             "accuracy": acc,
             "num_selected": jnp.sum(mask.astype(jnp.int32)),
-            "round_latency_ms": round_ms,
-            "orchestration_ms": orch_ms,
-            "energy_j": jnp.sum(energy),
-            "cold_starts": cold_starts,
+            "round_latency_ms": costs.round_ms,
+            "orchestration_ms": costs.orchestration_ms,
+            "energy_j": jnp.sum(costs.energy_j),
+            "cold_starts": costs.cold_starts,
             "mean_drift": jnp.mean(decision.selection.drift),
             "mean_utility": jnp.mean(decision.selection.utility),
             "mean_battery": jnp.mean(new_tel.batt),
@@ -283,22 +347,70 @@ class FedFogSimulator:
         return new_params, new_sched, new_tel, metrics
 
     # ------------------------------------------------------------------ #
-    def run(self, rounds: int | None = None) -> dict[str, Any]:
-        rounds = rounds or self.cfg.rounds
-        key = jax.random.PRNGKey(self.cfg.seed + 100)
-        history: dict[str, list] = {}
-        params, sched, tel = self.params, self.sched_state, self.telemetry
-        for r in range(rounds):
+    def _scan_rounds(self, env, params, sched_state, telemetry, key, *, rounds):
+        """All ``rounds`` rounds inside ONE program: ``lax.scan`` over the
+        round body, stacking per-round metrics on-device."""
+
+        def body(carry, round_idx):
+            params, sched, tel, key = carry
             key, k = jax.random.split(key)
-            params, sched, tel, metrics = self._round_jit(
-                params, sched, tel, jnp.asarray(r, jnp.int32), k
+            params, sched, tel, metrics = self._round(
+                env, params, sched, tel, round_idx, k
             )
-            for name, v in metrics.items():
-                history.setdefault(name, []).append(float(v))
-        self.params, self.sched_state, self.telemetry = params, sched, tel
+            return (params, sched, tel, key), metrics
+
+        (params, sched, tel, _), stacked = jax.lax.scan(
+            body,
+            (params, sched_state, telemetry, key),
+            jnp.arange(rounds, dtype=jnp.int32),
+        )
+        return params, sched, tel, stacked
+
+    # ------------------------------------------------------------------ #
+    def _finalize(self, history: dict[str, Any], rounds: int) -> dict[str, Any]:
         history["final_accuracy"] = history["accuracy"][-1]
         history["peak_accuracy"] = max(history["accuracy"])
         history["total_energy_j"] = sum(history["energy_j"])
         history["mean_latency_ms"] = sum(history["round_latency_ms"]) / rounds
         history["total_cold_starts"] = sum(history["cold_starts"])
         return history
+
+    def run(self, rounds: int | None = None) -> dict[str, Any]:
+        """Per-round jitted loop (debug/streaming path).
+
+        One dispatch and one metrics host-sync per round; prefer
+        ``run_scanned()`` for anything performance-sensitive.
+        """
+        rounds = rounds or self.cfg.rounds
+        self._ensure_state()
+        key = jax.random.PRNGKey(self.cfg.seed + 100)
+        history: dict[str, list] = {}
+        params, sched, tel = self.params, self.sched_state, self.telemetry
+        for r in range(rounds):
+            key, k = jax.random.split(key)
+            params, sched, tel, metrics = self._round_jit(
+                self.env, params, sched, tel, jnp.asarray(r, jnp.int32), k
+            )
+            for name, v in metrics.items():
+                history.setdefault(name, []).append(float(v))
+        self.params, self.sched_state, self.telemetry = params, sched, tel
+        return self._finalize(history, rounds)
+
+    def run_scanned(self, rounds: int | None = None) -> dict[str, Any]:
+        """Scan-compiled engine: the full experiment as one XLA program.
+
+        Semantics match ``run()`` (same round function, same key chain);
+        metrics histories agree to float tolerance. Returns the same
+        history dict, but the device→host transfer happens once.
+        """
+        rounds = int(rounds or self.cfg.rounds)
+        self._ensure_state()
+        key = jax.random.PRNGKey(self.cfg.seed + 100)
+        params, sched, tel, stacked = self._scan_jit(
+            self.env, self.params, self.sched_state, self.telemetry, key,
+            rounds=rounds,
+        )
+        self.params, self.sched_state, self.telemetry = params, sched, tel
+        host = jax.device_get(stacked)  # single device→host transfer
+        history = {name: [float(x) for x in v] for name, v in host.items()}
+        return self._finalize(history, rounds)

@@ -1,0 +1,16 @@
+"""Version-compat shims for the Pallas TPU API.
+
+``pltpu.CompilerParams`` was renamed across JAX releases (older releases
+expose ``TPUCompilerParams``; newer ones ``CompilerParams``). Every kernel
+imports the name from here so the repo tracks whichever the installed JAX
+provides.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+__all__ = ["CompilerParams"]

@@ -1,3 +1,24 @@
-from repro.sim.faas import FaasSimConfig, round_energy_j, round_times_ms
+"""Simulation stack: shared DES cost model, FaaS façade, sweep subsystem.
 
-__all__ = ["FaasSimConfig", "round_energy_j", "round_times_ms"]
+Layering (see each module's docstring):
+
+    des.py   — ``RoundCostModel``: the single §IV.F latency/energy/cold-
+               start model consumed by BOTH engines (paper-scale simulator
+               and pod-scale ``make_round_fn``).
+    faas.py  — legacy function-style façade over the cost model.
+    sweep.py — ``run_sweep``: vmap-over-seeds / grid-over-configs driver
+               for the scan-compiled simulator engine.
+"""
+from repro.sim.des import FaasSimConfig, RoundCostModel, RoundCosts
+from repro.sim.faas import round_energy_j, round_times_ms
+from repro.sim.sweep import SweepResult, run_sweep
+
+__all__ = [
+    "FaasSimConfig",
+    "RoundCostModel",
+    "RoundCosts",
+    "round_energy_j",
+    "round_times_ms",
+    "SweepResult",
+    "run_sweep",
+]

@@ -1,48 +1,24 @@
-"""Serverless (FaaS) execution model: per-round latency & energy (§IV.F).
+"""Serverless (FaaS) execution model — legacy functional façade.
 
-Per selected client i in round r:
+The actual §IV.F formulas live in ``repro.sim.des.RoundCostModel``, which
+both the paper-scale simulator and the pod-scale round engine consume.
+This module keeps the original function-style API (used by tests and
+external callers) as thin delegating wrappers.
 
-    t_compute = workload_flops / MIPS_i
-    t_network = upload_bytes / bw_up_i + download_bytes / bw_down_i + RTT_i
-    t_orchestration = scheduler dispatch cost (policy-dependent, §V.A)
-    δ_i = δ_cold | δ_warm (Eq. 4, container cache)
-    t_i = δ_i + t_compute + t_network + t_orchestration
-    round latency = max_{i ∈ C_t} t_i          (synchronous round)
-
-    E_i = C_cpu·CPU_cycles + C_tx·TX_bytes (+ e_c per cold start)
-    T_cold = Σ_r S_r · (δ_c + e_c)            (§IV.F)
-
-Orchestration models (Table IX):
-    fedfog : priority-queue scheduling O(N log N) + O(K) dispatch,
-             container reuse (keep-alive cache)
-    fogfaas: flat scan O(N) + stateless per-round redeploy O(N²) —
-             every function re-deployed and status-polled against every
-             active deployment, no orchestration memory.
+Note: ``round_times_ms`` returns a fully masked ``per_client`` vector —
+unselected clients report 0 ms (they used to leak the amortized
+orchestration share).
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 
-from repro.core.coldstart import ColdStartConfig
-from repro.core.energy import EnergyModelConfig
 from repro.data.telemetry import DeviceProfiles
+from repro.sim.des import FaasSimConfig, RoundCostModel
+
+__all__ = ["FaasSimConfig", "round_energy_j", "round_times_ms"]
 
 Array = jax.Array
-
-
-@dataclasses.dataclass(frozen=True)
-class FaasSimConfig:
-    cold_start: ColdStartConfig = dataclasses.field(default_factory=ColdStartConfig)
-    energy: EnergyModelConfig = dataclasses.field(default_factory=EnergyModelConfig)
-    # Orchestration cost constants (ms) — calibrated so a 16-client FedFog
-    # round lands near the paper's Table VII (2.45 s at 16 clients).
-    dispatch_ms: float = 1.5  # per scheduled client (FedFog O(K))
-    sort_ms_per_nlogn: float = 0.02  # FedFog priority queue per N·log2(N)
-    deploy_ms: float = 2.0  # FogFaaS per-deployment
-    poll_ms: float = 0.08  # FogFaaS per (deployment × active) status poll
 
 
 def round_times_ms(
@@ -56,23 +32,10 @@ def round_times_ms(
     policy: str = "fedfog",
 ):
     """Returns (per_client_ms (N,), round_ms (), orchestration_ms ())."""
-    n = selected.shape[0]
-    k = jnp.sum(selected.astype(jnp.float32))
-    t_compute = workload_flops / profiles.mips * 1e3
-    t_net = (
-        upload_bytes / profiles.bw_up + download_bytes / profiles.bw_down
-    ) * 1e3 + profiles.rtt_ms
-    delta = jnp.where(warm, cfg.cold_start.delta_warm_ms, cfg.cold_start.delta_cold_ms)
-
-    if policy == "fedfog":
-        orch = cfg.sort_ms_per_nlogn * n * jnp.log2(float(max(n, 2))) + (
-            cfg.dispatch_ms * k
-        )
-    else:  # fogfaas-style: redeploy everything, poll everything pairwise
-        orch = cfg.deploy_ms * n + cfg.poll_ms * n * n
-    per_client = (delta + t_compute + t_net) * selected + orch / jnp.maximum(k, 1.0)
-    round_ms = jnp.max(jnp.where(selected, per_client, 0.0))
-    return per_client, round_ms, orch
+    return RoundCostModel(cfg).times_ms(
+        profiles, selected, warm, workload_flops, upload_bytes, download_bytes,
+        policy,
+    )
 
 
 def round_energy_j(
@@ -84,10 +47,7 @@ def round_energy_j(
     upload_bytes: Array | float,
 ):
     """Per-client Joules for the round (§IV.F energy model)."""
-    cpu_cycles = workload_flops  # 1 cycle ≈ 1 flop in sim units
-    e = (
-        cfg.energy.c_cpu * cpu_cycles
-        + cfg.energy.c_tx * upload_bytes
-        + (~warm) * cfg.energy.cold_start_energy_j
+    del profiles  # energy constants are profile-independent in sim units
+    return RoundCostModel(cfg).energy_j(
+        selected, warm, workload_flops, upload_bytes
     )
-    return e * selected

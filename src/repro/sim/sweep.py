@@ -1,0 +1,188 @@
+"""Vmapped sweep subsystem: seed batches × config grids as XLA programs.
+
+The paper's headline tables are all multi-seed, multi-config sweeps. The
+seed repo ran them as nested Python loops — one jit dispatch per round per
+seed per config, with a host sync per metric. This module runs them
+sweep-natively:
+
+  * **seeds** are vmapped: ``FedFogSimulator.init_state`` is traceable
+    over the seed, so an S-seed × R-round experiment compiles ONCE and
+    executes as a single XLA program (vmap over seeds of the scan-compiled
+    engine — ``lax.scan`` over rounds inside).
+  * **configs** (grid ``axes`` or explicit ``cases``) change trace
+    structure (policies branch in Python, client counts change shapes),
+    so each grid point is its own compiled program — still one program
+    per grid point instead of S × R dispatches.
+
+Typical use::
+
+    from repro.sim import run_sweep
+    res = run_sweep(
+        SimulatorConfig(num_clients=64, rounds=50),
+        seeds=range(8),
+        axes={"policy": ["fedfog", "rcs"], "top_k": [8, 16, 24]},
+    )
+    mean, ci = res.mean_ci("accuracy")      # (G, R) curves
+    finals = res.final("accuracy")          # (G, S)
+    stats = res.stats(0)                    # per-seed run() summary dict
+
+``history`` arrays are shaped ``(G, S, R)`` — grid point × seed × round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+
+
+def _grid(
+    axes: Mapping[str, Sequence[Any]] | None,
+    cases: Sequence[Mapping[str, Any]] | None,
+) -> list[dict[str, Any]]:
+    """Grid points as config-override dicts.
+
+    ``cases`` (an explicit list of override dicts) wins over ``axes``
+    (a cartesian product of per-field value lists). Both empty → one
+    unmodified grid point.
+    """
+    if cases:
+        return [dict(c) for c in cases]
+    if not axes:
+        return [{}]
+    names = list(axes)
+    return [
+        dict(zip(names, combo))
+        for combo in itertools.product(*(axes[n] for n in names))
+    ]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Stacked histories of a config-grid × seed-batch sweep."""
+
+    configs: list[dict[str, Any]]  # G override dicts (grid points)
+    seeds: np.ndarray  # (S,)
+    rounds: int
+    history: dict[str, np.ndarray]  # each (G, S, R)
+
+    # -- raw access ---------------------------------------------------- #
+    def metric(self, name: str) -> np.ndarray:
+        """(G, S, R) round-by-round history of one metric."""
+        return self.history[name]
+
+    def final(self, name: str) -> np.ndarray:
+        """(G, S) last-round value of a metric."""
+        return self.history[name][..., -1]
+
+    # -- reductions ---------------------------------------------------- #
+    def mean_ci(self, name: str, z: float = 1.96) -> tuple[np.ndarray, np.ndarray]:
+        """Across-seed mean and z·SEM half-width, each (G, R).
+
+        SEM uses the sample std (ddof=1); with a single seed there is no
+        uncertainty estimate and the half-width is NaN rather than a
+        misleading ±0.
+        """
+        h = self.history[name]
+        mean = h.mean(axis=1)
+        s = h.shape[1]
+        if s < 2:
+            return mean, np.full_like(mean, np.nan)
+        sem = h.std(axis=1, ddof=1) / np.sqrt(s)
+        return mean, z * sem
+
+    def mean_std(self, name: str, reduce: str = "final") -> tuple[np.ndarray, np.ndarray]:
+        """Across-seed mean/std of a per-run scalar, each (G,).
+
+        ``reduce``: 'final' (last round), 'sum', 'mean', or 'max' over
+        the round axis.
+        """
+        h = self.history[name]
+        per_run = {
+            "final": h[..., -1],
+            "sum": h.sum(axis=-1),
+            "mean": h.mean(axis=-1),
+            "max": h.max(axis=-1),
+        }[reduce]
+        return per_run.mean(axis=1), per_run.std(axis=1)
+
+    def stats(self, g: int = 0) -> dict[str, np.ndarray]:
+        """Per-seed summary of grid point ``g`` — the same derived fields
+        ``FedFogSimulator.run()`` appends, each shaped (S,)."""
+        h = {k: v[g] for k, v in self.history.items()}
+        return {
+            "final_accuracy": h["accuracy"][:, -1],
+            "peak_accuracy": h["accuracy"].max(axis=-1),
+            "total_energy_j": h["energy_j"].sum(axis=-1),
+            "mean_latency_ms": h["round_latency_ms"].mean(axis=-1),
+            "total_cold_starts": h["cold_starts"].sum(axis=-1),
+        }
+
+
+def run_sweep(
+    cfg: SimulatorConfig,
+    seeds: Iterable[int],
+    axes: Mapping[str, Sequence[Any]] | None = None,
+    cases: Sequence[Mapping[str, Any]] | None = None,
+    rounds: int | None = None,
+) -> SweepResult:
+    """Run a (config grid) × (seed batch) × (rounds) sweep.
+
+    Per grid point: one jit compile; all seeds execute inside it as a
+    ``vmap`` over functional ``init_state(seed)`` + the scan-compiled
+    round loop, with a single device→host transfer of the stacked
+    ``(S, R)`` metric histories. Seed s of any grid point reproduces
+    ``FedFogSimulator(replace(cfg, seed=s)).run_scanned()`` exactly.
+
+    Args:
+      cfg: base configuration; ``cfg.seed`` is ignored in favor of
+        ``seeds``.
+      seeds: the seed batch (vmapped axis).
+      axes: cartesian-product grid, e.g. ``{"policy": [...], "top_k": [...]}``.
+      cases: explicit list of override dicts (non-product grids); wins
+        over ``axes``.
+      rounds: override ``cfg.rounds``.
+
+    Returns:
+      SweepResult with ``(G, S, R)`` histories.
+    """
+    rounds = int(rounds or cfg.rounds)
+    seeds_arr = jnp.asarray(list(seeds), jnp.int32)
+    if seeds_arr.ndim != 1 or seeds_arr.shape[0] == 0:
+        raise ValueError("seeds must be a non-empty 1-D collection of ints")
+    grid = _grid(axes, cases)
+
+    stacked_per_g = []
+    for overrides in grid:
+        # defer_state: per-seed state is built inside the compiled program,
+        # so the eager default-seed init would be dead work.
+        sim = FedFogSimulator(
+            dataclasses.replace(cfg, **overrides), defer_state=True
+        )
+
+        def per_seed(seed, sim=sim):
+            env, params, sched, tel = sim.init_state(seed)
+            key = jax.random.PRNGKey(seed + 100)
+            _, _, _, stacked = sim._scan_rounds(
+                env, params, sched, tel, key, rounds=rounds
+            )
+            return stacked
+
+        stacked = jax.jit(jax.vmap(per_seed))(seeds_arr)
+        stacked_per_g.append(jax.device_get(stacked))  # one transfer / point
+
+    history = {
+        name: np.stack([np.asarray(h[name], np.float64) for h in stacked_per_g])
+        for name in stacked_per_g[0]
+    }
+    return SweepResult(
+        configs=grid,
+        seeds=np.asarray(seeds_arr),
+        rounds=rounds,
+        history=history,
+    )

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev dep; see requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 

@@ -1,0 +1,205 @@
+"""Scan-compiled engine, vmapped sweep, and shared DES cost model.
+
+Covers the three contracts the simulation-stack refactor must hold:
+  (a) ``run_scanned()`` reproduces the per-round loop for all policies;
+  (b) sweeps are seed-deterministic and seed s of a sweep reproduces a
+      standalone ``run_scanned()`` at seed s;
+  (c) the shared ``RoundCostModel`` reproduces the seed repo's
+      latency/energy formulas consumed by both engines.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.telemetry import TelemetryConfig, make_profiles
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.sim import (
+    FaasSimConfig,
+    RoundCostModel,
+    round_energy_j,
+    round_times_ms,
+    run_sweep,
+)
+
+POLICIES = ("fedfog", "rcs", "fogfaas", "vanilla")
+
+
+def _cfg(**kw) -> SimulatorConfig:
+    base = dict(
+        task="emnist", num_clients=8, rounds=4, top_k=4, hidden=(16,), seed=0
+    )
+    base.update(kw)
+    return SimulatorConfig(**base)
+
+
+# --------------------------------------------------------------------- #
+# (a) scanned engine ≡ per-round loop
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("policy", POLICIES)
+def test_run_scanned_matches_loop(policy):
+    cfg = _cfg(policy=policy)
+    h_loop = FedFogSimulator(cfg).run()
+    h_scan = FedFogSimulator(cfg).run_scanned()
+    assert set(h_loop) == set(h_scan)
+    for name in h_loop:
+        np.testing.assert_allclose(
+            np.asarray(h_loop[name]),
+            np.asarray(h_scan[name]),
+            rtol=1e-5,
+            atol=1e-5,
+            err_msg=f"{policy}/{name}",
+        )
+
+
+def test_run_scanned_advances_state_like_loop():
+    cfg = _cfg()
+    a, b = FedFogSimulator(cfg), FedFogSimulator(cfg)
+    a.run()
+    b.run_scanned()
+    for pa, pb in zip(
+        jnp.ravel(a.params[0]["w"])[:32], jnp.ravel(b.params[0]["w"])[:32]
+    ):
+        np.testing.assert_allclose(float(pa), float(pb), rtol=1e-5, atol=1e-6)
+    assert int(a.sched_state.round_index) == int(b.sched_state.round_index) == 4
+
+
+# --------------------------------------------------------------------- #
+# (b) sweep: deterministic, and seed-sliced ≡ standalone runs
+# --------------------------------------------------------------------- #
+def test_sweep_is_seed_deterministic():
+    cfg = _cfg()
+    r1 = run_sweep(cfg, seeds=[0, 1], axes={"policy": ["fedfog", "rcs"]})
+    r2 = run_sweep(cfg, seeds=[0, 1], axes={"policy": ["fedfog", "rcs"]})
+    assert r1.configs == r2.configs
+    for name in r1.history:
+        np.testing.assert_array_equal(r1.history[name], r2.history[name])
+    # different seeds genuinely differ
+    assert not np.array_equal(
+        r1.metric("accuracy")[:, 0], r1.metric("accuracy")[:, 1]
+    )
+
+
+def test_sweep_matches_standalone_scanned_runs():
+    cfg = _cfg()
+    seeds = [0, 3]
+    res = run_sweep(cfg, seeds=seeds, cases=[{"policy": "fedfog"}, {"top_k": 2}])
+    assert res.metric("accuracy").shape == (2, 2, cfg.rounds)
+    for g, overrides in enumerate(res.configs):
+        for si, s in enumerate(seeds):
+            h = FedFogSimulator(
+                dataclasses.replace(cfg, seed=s, **overrides)
+            ).run_scanned()
+            for name in ("accuracy", "round_latency_ms", "energy_j",
+                         "cold_starts", "num_selected"):
+                np.testing.assert_allclose(
+                    res.metric(name)[g, si],
+                    np.asarray(h[name]),
+                    rtol=1e-5,
+                    atol=1e-5,
+                    err_msg=f"{overrides}/seed{s}/{name}",
+                )
+
+
+def test_sweep_reductions_shapes():
+    cfg = _cfg(rounds=3)
+    res = run_sweep(cfg, seeds=[0, 1, 2])
+    mean, ci = res.mean_ci("accuracy")
+    assert mean.shape == ci.shape == (1, 3)
+    m, s = res.mean_std("energy_j", reduce="sum")
+    assert m.shape == s.shape == (1,)
+    stats = res.stats(0)
+    assert stats["final_accuracy"].shape == (3,)
+    np.testing.assert_allclose(
+        stats["total_energy_j"], res.metric("energy_j")[0].sum(axis=-1)
+    )
+
+
+# --------------------------------------------------------------------- #
+# (c) shared cost model reproduces the seed formulas for both engines
+# --------------------------------------------------------------------- #
+def _fixture(n=16, seed=0):
+    prof = make_profiles(TelemetryConfig(num_clients=n, seed=seed))
+    rng = np.random.RandomState(seed)
+    selected = jnp.asarray(rng.rand(n) < 0.6)
+    warm = jnp.asarray(rng.rand(n) < 0.5)
+    return prof, selected, warm
+
+
+def test_cost_model_times_reproduce_seed_formula():
+    cfg = FaasSimConfig()
+    prof, selected, warm = _fixture()
+    n = selected.shape[0]
+    workload, up, down = 1e9, 1e6, 2e6
+    for policy in ("fedfog", "fogfaas"):
+        per, rnd, orch = round_times_ms(
+            cfg, prof, selected, warm, workload, up, down, policy=policy
+        )
+        # seed formula, per-client orchestration share included
+        k = float(jnp.sum(selected))
+        t_comp = workload / prof.mips * 1e3
+        t_net = (up / prof.bw_up + down / prof.bw_down) * 1e3 + prof.rtt_ms
+        delta = jnp.where(
+            warm, cfg.cold_start.delta_warm_ms, cfg.cold_start.delta_cold_ms
+        )
+        if policy == "fedfog":
+            orch_ref = cfg.sort_ms_per_nlogn * n * np.log2(n) + cfg.dispatch_ms * k
+        else:
+            orch_ref = cfg.deploy_ms * n + cfg.poll_ms * n * n
+        per_ref = (delta + t_comp + t_net + orch_ref / max(k, 1.0)) * selected
+        np.testing.assert_allclose(np.asarray(per), np.asarray(per_ref), rtol=1e-5)
+        np.testing.assert_allclose(float(orch), float(orch_ref), rtol=1e-5)
+        np.testing.assert_allclose(
+            float(rnd), float(np.asarray(per_ref).max()), rtol=1e-5
+        )
+
+
+def test_per_client_latency_masked_for_unselected():
+    cfg = FaasSimConfig()
+    prof, selected, warm = _fixture()
+    per, _, _ = round_times_ms(cfg, prof, selected, warm, 1e9, 1e6, 2e6)
+    np.testing.assert_array_equal(
+        np.asarray(per)[~np.asarray(selected)], 0.0
+    )
+    assert (np.asarray(per)[np.asarray(selected)] > 0).all()
+
+
+def test_cost_model_energy_reproduces_both_engine_formulas():
+    cfg = FaasSimConfig()
+    prof, selected, warm = _fixture()
+    workload, up = 1e9, 1e6
+    e = RoundCostModel(cfg).energy_j(selected, warm, workload, up)
+    # paper-scale engine formula (seed sim/faas.py)
+    e_faas = round_energy_j(cfg, prof, selected, warm, workload, up)
+    np.testing.assert_allclose(np.asarray(e), np.asarray(e_faas), rtol=1e-6)
+    # pod-scale engine formula (seed fl/round.py inline expression)
+    em = cfg.energy
+    sel_f = np.asarray(selected, np.float32)
+    e_pod = sel_f * (em.c_cpu * workload + em.c_tx * up) + (
+        np.asarray(selected) & ~np.asarray(warm)
+    ) * em.cold_start_energy_j
+    np.testing.assert_allclose(np.asarray(e), e_pod, rtol=1e-6)
+
+
+def test_round_costs_bundle_consistency():
+    cfg = FaasSimConfig()
+    prof, selected, warm = _fixture()
+    costs = RoundCostModel(cfg).round_costs(
+        prof, selected, warm, 1e9, 1e6, 2e6, policy="fedfog"
+    )
+    per, rnd, orch = round_times_ms(cfg, prof, selected, warm, 1e9, 1e6, 2e6)
+    np.testing.assert_allclose(np.asarray(costs.per_client_ms), np.asarray(per))
+    np.testing.assert_allclose(float(costs.round_ms), float(rnd))
+    np.testing.assert_allclose(float(costs.orchestration_ms), float(orch))
+    assert int(costs.cold_starts) == int(
+        np.sum(np.asarray(selected) & ~np.asarray(warm))
+    )
+
+
+def test_cost_model_from_scheduler_matches_faas_defaults():
+    from repro.core.scheduler import SchedulerConfig
+
+    m = RoundCostModel.from_scheduler(SchedulerConfig())
+    assert m.cfg.energy == FaasSimConfig().energy
+    assert m.cfg.cold_start == FaasSimConfig().cold_start
