@@ -41,17 +41,26 @@ def timed_rounds(sim, rounds: int):
     return h, dt / rounds * 1e6
 
 
-def timed_sweep(cfg, seeds, *, axes=None, cases=None, rounds=None):
+def timed_sweep(cfg, seeds, *, axes=None, cases=None, rounds=None,
+                devices=None):
     """Run a vmapped/scanned sweep, returning (SweepResult, us_per_sim_round).
 
     us_per_sim_round amortizes wall-clock over every simulated round
     (grid points × seeds × rounds) — directly comparable to the
     ``timed_rounds`` number of the per-round loop engine.
+
+    ``devices`` is forwarded to ``run_sweep(devices=...)``: pass an int N
+    (or a device list) to shard the vmapped seed batch across N local
+    devices, so each runs |seeds|/N simulations in parallel — per-seed
+    results are unchanged (verified bit-identical by
+    test_sweep_devices_sharding_bit_identical in
+    tests/test_simulator_engine.py). Default None keeps one device.
     """
     from repro.sim import run_sweep
 
     t0 = time.time()
-    res = run_sweep(cfg, seeds, axes=axes, cases=cases, rounds=rounds)
+    res = run_sweep(cfg, seeds, axes=axes, cases=cases, rounds=rounds,
+                    devices=devices)
     dt = time.time() - t0
     sim_rounds = len(res.configs) * len(res.seeds) * res.rounds
     return res, dt / max(sim_rounds, 1) * 1e6

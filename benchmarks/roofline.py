@@ -23,8 +23,15 @@ from repro.configs.shapes import SHAPES
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from repro.models import build_model
 
-DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "../results/dryrun")
-OUT_CSV = os.path.join(os.path.dirname(__file__), "../results/roofline.csv")
+# CWD-relative, matching repro.launch.dryrun's RESULT_DIR (both halves of
+# the pipeline are run from the repo root); fall back to the repo-root
+# location when invoked from elsewhere.
+DRYRUN_DIR = os.path.join("results", "dryrun")
+if not os.path.isdir(DRYRUN_DIR):
+    DRYRUN_DIR = os.path.join(
+        os.path.dirname(__file__), "..", "results", "dryrun"
+    )
+OUT_CSV = os.path.join(os.path.dirname(DRYRUN_DIR), "roofline.csv")
 
 # bf16 HLO byte traffic is inflated ~2x by the CPU backend's f32
 # legalization of bf16 arithmetic; we report raw parsed bytes (upper bound)

@@ -23,6 +23,7 @@ SUITES = [
     "hyperparam_sensitivity",  # Fig 10
     "sim_vs_real",  # Tables VII/VIII
     "simulator_engine",  # scanned/sweep vs looped engine throughput
+    "dryrun_sharding",  # dist layer: compile time + collective census
     "kernels_bench",
     "roofline",  # §Roofline (reads results/dryrun)
 ]

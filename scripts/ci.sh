@@ -18,4 +18,9 @@ echo "=== benchmark smoke (quick scale) ==="
 REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run threshold_sensitivity
 
+echo "=== dryrun smoke (1 reduced cell on the 512-fake-device mesh) ==="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k \
+    --reduced --limit 1 --force --out "$(mktemp -d)/dryrun"
+
 echo "ci.sh: OK"

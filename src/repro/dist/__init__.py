@@ -1,0 +1,28 @@
+"""Distribution layer: mesh plans, sharding rules, HLO accounting.
+
+    meshes.py        MeshPlan / plan_for — per-arch axis factorizations
+    sharding.py      ShardingRules / make_rules — logical→mesh PartitionSpecs
+    hlo_analysis.py  analyze_hlo / count_axis_crossing — post-compile stats
+    selftest.py      fake-device sharded-round equivalence worker
+"""
+from repro.dist.hlo_analysis import (
+    CollectiveStats,
+    HLOAnalysis,
+    analyze_hlo,
+    count_axis_crossing,
+    inter_client_all_reduces,
+)
+from repro.dist.meshes import MeshPlan, plan_for
+from repro.dist.sharding import ShardingRules, make_rules
+
+__all__ = [
+    "CollectiveStats",
+    "HLOAnalysis",
+    "MeshPlan",
+    "ShardingRules",
+    "analyze_hlo",
+    "count_axis_crossing",
+    "inter_client_all_reduces",
+    "make_rules",
+    "plan_for",
+]

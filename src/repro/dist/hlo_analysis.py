@@ -1,0 +1,307 @@
+"""Post-compile HLO accounting: collectives, dot FLOPs, HBM traffic.
+
+``analyze_hlo(compiled.as_text())`` parses the optimized HLO module text —
+no XLA internals, just the stable text format — and returns per-kind
+collective counts/bytes plus dot-FLOP and memory-traffic estimates. The
+launch dry-run records these per (arch × shape × mesh) cell, and the
+sharded train path uses :func:`count_axis_crossing` to assert the FedFog
+round contains exactly the paper's ONE inter-client all-reduce.
+
+Collectives inside while-loop bodies are counted ONCE (static texts carry
+no trip counts); such ops are surfaced in ``trip_count_warnings`` so the
+per-round byte totals are read with the right caveat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+import numpy as np
+
+# Bytes per element for HLO primitive types.
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+# op name (with async -start variants normalized) -> canonical kind
+_COLLECTIVE_KINDS = {
+    "all-reduce": "all-reduce",
+    "all-gather": "all-gather",
+    "reduce-scatter": "reduce-scatter",
+    "all-to-all": "all-to-all",
+    "collective-permute": "collective-permute",
+    "collective-broadcast": "collective-broadcast",
+    "ragged-all-to-all": "all-to-all",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}0-9]+?))\s+"
+    r"([\w\-]+)\("
+)
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[\d,{} ]*\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{([\d,{} ]*)\}")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of one HLO result type (sums tuple elements)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        numel = math.prod(int(d) for d in dims.split(",") if d) if dims else 1
+        total += _DTYPE_BYTES[dtype] * numel
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",") if d) if dims else ()
+
+
+def _parse_groups(line: str) -> list[list[int]] | None:
+    """Replica groups from either text form; None = no groups attr
+    (convention: one group spanning every participant)."""
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return [
+            [int(x) for x in g.split(",") if x.strip()]
+            for g in re.findall(r"\{([\d, ]*)\}", m.group(1))
+        ]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(math.prod(dims)).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+        return ids.reshape(ng, gs).tolist()
+    m = _SRC_TGT_RE.search(line)
+    if m:  # collective-permute: each pair is a 2-group
+        pairs = re.findall(r"\{(\d+),\s*(\d+)\}", m.group(1))
+        return [[int(a), int(b)] for a, b in pairs]
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    name: str
+    kind: str
+    bytes: float
+    computation: str
+    groups: list[list[int]] | None  # None = all participants together
+    in_loop_body: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveStats:
+    ops: tuple[CollectiveOp, ...]
+
+    @property
+    def count_by_kind(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for op in self.ops:
+            out[op.kind] = out.get(op.kind, 0) + 1
+        return out
+
+    @property
+    def bytes_by_kind(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for op in self.ops:
+            out[op.kind] = out.get(op.kind, 0.0) + op.bytes
+        return out
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(op.bytes for op in self.ops)
+
+    @property
+    def trip_count_warnings(self) -> list[str]:
+        return [
+            f"{op.kind} {op.name} ({op.bytes:.2e} B) inside loop body "
+            f"{op.computation}: bytes counted once, executes per iteration"
+            for op in self.ops
+            if op.in_loop_body
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class HLOAnalysis:
+    collectives: CollectiveStats
+    dot_flops: float  # 2·M·N·K over every dot (fusion bodies included)
+    hbm_bytes: float  # entry args + outputs + materialized fusion results
+    hbm_bytes_in: float
+    hbm_bytes_out: float
+    num_instructions: int
+
+
+def analyze_hlo(hlo_text: str) -> HLOAnalysis:
+    """Parse one optimized HLO module's text into traffic/compute stats."""
+    shapes: dict[str, str] = {}  # instr name -> type string
+    instrs: list[tuple[str, str, str, str, str]] = []  # comp, name, type, op, line
+    comp = ""
+    loop_bodies: set[str] = set()
+
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        # Computation header: "%name (params...) -> type {" (or ENTRY ...);
+        # no "=" before the parameter list, ends with an opening brace.
+        if (
+            line.endswith("{")
+            and "(" in line
+            and "=" not in line.split("(", 1)[0]
+        ):
+            cm = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if cm:
+                comp = cm.group(1)
+                continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, type_str, opcode = im.groups()
+        shapes[name] = type_str
+        instrs.append((comp, name, type_str, opcode, line))
+        if opcode == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            if bm:
+                loop_bodies.add(bm.group(1))
+
+    ops: list[CollectiveOp] = []
+    dot_flops = 0.0
+    entry_params = 0.0
+    entry_out = 0.0
+    fusion_bytes = 0.0
+    entry_comp = instrs[0][0] if instrs else ""
+    # The ENTRY computation is the one whose line in the text is marked
+    # ENTRY; _COMP_RE can't see the marker after .match groups, so find it
+    # directly.
+    em = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    if em:
+        entry_comp = em.group(1)
+
+    for comp, name, type_str, opcode, line in instrs:
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if opcode.endswith("-done"):
+            continue  # async pair: counted at -start
+        if base in _COLLECTIVE_KINDS:
+            ops.append(
+                CollectiveOp(
+                    name=name,
+                    kind=_COLLECTIVE_KINDS[base],
+                    bytes=_shape_bytes(type_str),
+                    computation=comp,
+                    groups=_parse_groups(line),
+                    in_loop_body=comp in loop_bodies,
+                )
+            )
+        elif base == "dot":
+            dims = _shape_dims(type_str)
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            # First operand: "dot(f32[8,16]{1,0} %arg0, ..." or "dot(arg0, ..."
+            lhs_name = None
+            if "dot(" in line:
+                inner = line.split("dot(", 1)[1]
+                pm = re.search(r"%([\w.\-]+)", inner)
+                if pm is not None and pm.start() < inner.find(")"):
+                    lhs_name = pm.group(1)
+                else:  # typeless operand form: names only, commas top-level
+                    first = inner.split(",", 1)[0].strip()
+                    lhs_name = first.split()[-1] if first else None
+            if cm is not None and lhs_name in shapes:
+                lhs_dims = _shape_dims(shapes[lhs_name])
+                k = math.prod(
+                    lhs_dims[int(i)]
+                    for i in cm.group(1).split(",")
+                    if i and int(i) < len(lhs_dims)
+                )
+                dot_flops += 2.0 * math.prod(dims or (0,)) * k
+        elif opcode == "parameter":
+            if comp == entry_comp:
+                entry_params += _shape_bytes(type_str)
+        elif base in ("fusion", "custom-call"):
+            fusion_bytes += _shape_bytes(type_str)
+        if comp == entry_comp and line.lstrip().startswith("ROOT"):
+            entry_out = _shape_bytes(type_str)
+
+    return HLOAnalysis(
+        collectives=CollectiveStats(ops=tuple(ops)),
+        dot_flops=dot_flops,
+        hbm_bytes=entry_params + entry_out + fusion_bytes,
+        hbm_bytes_in=entry_params,
+        hbm_bytes_out=entry_out,
+        num_instructions=len(instrs),
+    )
+
+
+def inter_client_all_reduces(
+    analysis: HLOAnalysis, rules, param_count: int
+) -> tuple[int, float]:
+    """Count all-reduces that cross the plan's client axes AND carry the
+    model-delta payload (≥ half the fused f32 delta bytes, which filters
+    the metric-scalar traffic). The FedFog contract is exactly ONE such
+    op per round when the client axes span more than one device; callers
+    should skip the check when ``delta_bytes`` is returned with a
+    single-way client axis (count is 0 by construction there).
+
+    Returns (count, delta_bytes).
+    """
+    mesh_shape = rules.mesh.shape
+    delta_bytes = 4.0 * param_count / max(mesh_shape.get("zero", 1), 1)
+    count = count_axis_crossing(
+        analysis,
+        rules.mesh,
+        axes=rules.plan.client_axes,
+        kinds=("all-reduce",),
+        min_bytes=0.5 * delta_bytes,
+    )
+    return count, delta_bytes
+
+
+def count_axis_crossing(
+    analysis: HLOAnalysis,
+    mesh,
+    axes=("client",),
+    kinds=("all-reduce",),
+    min_bytes: float = 0.0,
+) -> int:
+    """Number of collectives whose replica groups CROSS the given mesh
+    axes — i.e. some group contains two devices with different coordinates
+    along one of ``axes``. Partition ids index ``mesh.devices`` flattened
+    row-major (the jit/GSPMD device-assignment order).
+
+    ``min_bytes`` filters metric-scalar traffic so the model-delta
+    aggregation can be isolated (the paper's one inter-client collective).
+    """
+    names = list(mesh.axis_names)
+    sizes = [int(mesh.shape[a]) for a in names]
+    idxs = [names.index(a) for a in axes if a in names]
+    if not idxs:
+        return 0
+    total = math.prod(sizes)
+
+    def crosses(groups) -> bool:
+        if groups is None:
+            return any(sizes[i] > 1 for i in idxs)
+        for g in groups:
+            coords = np.array(np.unravel_index(np.asarray(g) % total, sizes))
+            for i in idxs:
+                if len(set(coords[i].tolist())) > 1:
+                    return True
+        return False
+
+    return sum(
+        1
+        for op in analysis.collectives.ops
+        if op.kind in kinds and op.bytes >= min_bytes and crosses(op.groups)
+    )

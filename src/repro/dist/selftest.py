@@ -1,0 +1,196 @@
+"""Fake-device sharded-round self-test (run as a SUBPROCESS).
+
+Backs an N-device host mesh with XLA's fake CPU devices, compiles one
+FedFog round with the full ShardingRules wiring, verifies via
+``analyze_hlo`` that the round body contains exactly ONE inter-client
+all-reduce carrying the model-delta payload (the paper's communication
+contract), and — with ``--check`` — executes the sharded round next to a
+plain single-device round on identical inputs and compares metrics and
+updated parameters within float tolerance.
+
+MUST run in its own process: the fake-device flag has to be set before
+jax initializes its backend, which is why the integration test
+(tests/test_sharded_round.py) and the dryrun-sharding benchmark both
+invoke ``python -m repro.dist.selftest --json ...``.
+"""
+import os
+import sys
+
+if __name__ == "__main__":  # set BEFORE any jax import in this process
+    _n = "8"
+    for _i, _a in enumerate(sys.argv):
+        if _a == "--devices" and _i + 1 < len(sys.argv):
+            _n = sys.argv[_i + 1]
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+
+
+def run_selftest(
+    arch: str = "llama3.2-1b",
+    devices: int = 8,
+    *,
+    check: bool = True,
+    seq_len: int = 64,
+    batch_per_slot: int = 4,
+    rounds: int = 1,
+    zero: int | None = None,
+) -> dict:
+    """Compile (and optionally execute + cross-check) one sharded round."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.configs.shapes import concrete_batch, ShapeSpec
+    from repro.dist.hlo_analysis import analyze_hlo, inter_client_all_reduces
+    from repro.dist.sharding import make_rules
+    from repro.fl import FLConfig, init_fl_state, make_round_fn
+    from repro.models import Runtime, build_model
+
+    assert len(jax.devices()) >= devices, (
+        f"need {devices} devices, have {len(jax.devices())} — run via "
+        "python -m repro.dist.selftest (it sets XLA_FLAGS pre-import)"
+    )
+    # float32 end-to-end so the sharded/unsharded comparison is tight.
+    cfg = get_reduced(
+        arch, loss_chunk=0, param_dtype="float32", compute_dtype="float32"
+    )
+    model = build_model(cfg)
+    rules = make_rules(None, cfg, device_count=devices, zero=zero)
+    plan = rules.plan
+
+    fl_cfg = FLConfig(
+        num_clients=max(2 * plan.num_clients, 8),
+        slots=plan.num_clients,
+        local_steps=1,
+        inner_optimizer="sgdm",
+        server_optimizer="fedavgm",
+    )
+    global_batch = plan.num_clients * batch_per_slot
+    shape = ShapeSpec("selftest", "train", seq_len, global_batch)
+
+    key = jax.random.PRNGKey(0)
+    k_state, k_data, k_tel = jax.random.split(key, 3)
+    state = init_fl_state(model, fl_cfg, k_state)
+    n = fl_cfg.num_clients
+    batch = dict(concrete_batch(cfg, shape, k_data))
+    ks = jax.random.split(k_tel, 6)
+    batch.update(
+        slot_data_sizes=jax.random.uniform(
+            ks[0], (fl_cfg.slots,), minval=10.0, maxval=100.0
+        ),
+        telemetry_cpu=jax.random.uniform(ks[1], (n,), minval=0.1, maxval=0.5),
+        telemetry_mem=jax.random.uniform(ks[2], (n,), minval=0.1, maxval=0.5),
+        telemetry_batt=jax.random.uniform(ks[3], (n,), minval=0.5, maxval=1.0),
+        telemetry_energy=jax.random.uniform(ks[4], (n,), minval=0.0, maxval=0.1),
+        hist=jax.random.dirichlet(
+            ks[5], jnp.ones((fl_cfg.hist_bins,)), (n,)
+        ),
+    )
+
+    tokens_per_client = seq_len * batch_per_slot
+    flops = model.flops_per_token() * tokens_per_client
+
+    # ---- sharded program ---------------------------------------------- #
+    round_sharded = make_round_fn(
+        model, fl_cfg, Runtime(mesh=rules.mesh, batch_axes=rules.batch_axes),
+        flops_per_client_round=flops, rules=rules,
+    )
+    state_shardings = rules.shardings(rules.fl_state_specs(model, state))
+    batch_shardings = rules.fl_batch_shardings(batch)
+
+    jitted = jax.jit(
+        round_sharded,
+        in_shardings=(state_shardings, batch_shardings),
+    )
+    t0 = time.time()
+    lowered = jitted.lower(state, batch)
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    hlo = analyze_hlo(compiled.as_text())
+    # The delta aggregation moves whole-model bytes; metric scalars don't.
+    inter_client, _ = inter_client_all_reduces(hlo, rules, model.param_count())
+    result = {
+        "arch": arch,
+        "devices": devices,
+        "plan": {
+            "num_clients": plan.num_clients,
+            "zero": plan.zero,
+            "model_axes": list(plan.model_axes),
+            "model_split": list(plan.model_split),
+        },
+        "compile_s": round(compile_s, 2),
+        "collective_counts": hlo.collectives.count_by_kind,
+        "collective_bytes": {
+            k: round(v) for k, v in hlo.collectives.bytes_by_kind.items()
+        },
+        "inter_client_all_reduces": inter_client,
+        "ok": inter_client == 1,
+    }
+    if not check:
+        return result
+
+    # ---- equivalence: sharded vs single-device ------------------------ #
+    round_plain = jax.jit(
+        make_round_fn(model, fl_cfg, Runtime(), flops_per_client_round=flops)
+    )
+    s_sh, s_pl = state, state
+    for _ in range(rounds):
+        s_sh, m_sh = compiled(s_sh, batch) if rounds == 1 else jitted(s_sh, batch)
+        s_pl, m_pl = round_plain(s_pl, batch)
+    diffs = {
+        k: abs(float(m_sh[k]) - float(m_pl[k]))
+        for k in m_pl
+    }
+    flat_a = jax.tree.leaves(jax.device_get(s_sh.params))
+    flat_b = jax.tree.leaves(jax.device_get(s_pl.params))
+    import numpy as np
+
+    max_param_diff = max(
+        float(np.max(np.abs(a.astype(np.float64) - b.astype(np.float64))))
+        for a, b in zip(flat_a, flat_b)
+    )
+    metrics_ok = all(
+        v <= 1e-3 * (1.0 + abs(float(m_pl[k]))) for k, v in diffs.items()
+    )
+    result.update(
+        metric_diffs={k: float(f"{v:.3e}") for k, v in diffs.items()},
+        max_param_diff=max_param_diff,
+        loss=float(m_pl["loss"]),
+        equivalence_ok=bool(metrics_ok and max_param_diff < 1e-4),
+    )
+    result["ok"] = bool(result["ok"] and result["equivalence_ok"])
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--zero", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--no-check", action="store_true",
+                    help="compile + HLO analysis only (no execution)")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+    res = run_selftest(
+        args.arch, args.devices, check=not args.no_check,
+        seq_len=args.seq_len, zero=args.zero,
+    )
+    if args.json:
+        print(json.dumps(res))
+    else:
+        for k, v in res.items():
+            print(f"{k}: {v}")
+    return 0 if res["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

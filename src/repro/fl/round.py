@@ -24,6 +24,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregation as agg_mod
 from repro.core import privacy as privacy_mod
@@ -125,6 +126,37 @@ def make_round_fn(
 
         _client_ent = rules._as_spec_entry(rules.plan.client_axes)
         _zero_ent = "zero" if "zero" in rules.mesh.shape else None
+        _zero_size = rules.mesh.shape.get("zero", 1)
+
+        def fuse_deltas(tree):
+            """Concat every delta leaf into ONE (C, P) f32 buffer so the
+            cross-client aggregation lowers to a single all-reduce — the
+            paper's one-collective-per-round contract, asserted by
+            dist.hlo_analysis on the compiled round. Returns the buffer
+            and the inverse (split + reshape + cast back)."""
+            flat, treedef = jax.tree.flatten(tree)
+            shapes = [x.shape[1:] for x in flat]
+            dtypes = [x.dtype for x in flat]
+            sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+            cat = jnp.concatenate(
+                [x.reshape((x.shape[0], -1)).astype(jnp.float32) for x in flat],
+                axis=1,
+            )
+            p_total = cat.shape[1]
+            z_ent = _zero_ent if p_total % max(_zero_size, 1) == 0 else None
+            cat = jax.lax.with_sharding_constraint(
+                cat, NamedSharding(rules.mesh, P(_client_ent, z_ent))
+            )
+
+            def unfuse(vec):
+                parts = jnp.split(vec, list(np.cumsum(sizes)[:-1]))
+                leaves = [
+                    p.reshape(s).astype(dt)
+                    for p, s, dt in zip(parts, shapes, dtypes)
+                ]
+                return jax.tree.unflatten(treedef, leaves)
+
+            return cat, unfuse
 
         def constrain_batch(tree):
             """Pin slot-major batches to (client, zero, ...) so activations
@@ -139,6 +171,7 @@ def make_round_fn(
     else:
         constrain_stacked = constrain_opt_tree = lambda t: t
         constrain_batch = lambda t: t
+        fuse_deltas = None
 
     def per_slot_loss(params_c, batch_c):
         return model.loss(params_c, batch_c, runtime)
@@ -286,12 +319,20 @@ def make_round_fn(
         )
 
         # ---- 4. aggregate (Eq. 6) — the inter-client collective -------- #
+        # On the pod-scale path the leaves are fused into one (C, P)
+        # buffer first, so ALL the cross-client traffic of the round is a
+        # single all-reduce instead of one per parameter tensor.
+        agg_in, unfuse = (
+            fuse_deltas(deltas) if fuse_deltas is not None else (deltas, None)
+        )
         if fl_cfg.aggregator == "median":
-            agg = agg_mod.median_aggregate(deltas, slot_mask)
+            agg = agg_mod.median_aggregate(agg_in, slot_mask)
         elif fl_cfg.aggregator == "trimmed":
-            agg = agg_mod.trimmed_mean_aggregate(deltas, slot_mask)
+            agg = agg_mod.trimmed_mean_aggregate(agg_in, slot_mask)
         else:
-            agg = agg_mod.fedavg_stacked(deltas, slot_mask, slot_sizes)
+            agg = agg_mod.fedavg_stacked(agg_in, slot_mask, slot_sizes)
+        if unfuse is not None:
+            agg = unfuse(agg)
         if fl_cfg.dp_sigma > 0:
             dp = privacy_mod.DPConfig(
                 sigma=fl_cfg.dp_sigma,

@@ -35,7 +35,9 @@ from repro.launch import mesh as mesh_mod
 from repro.models import Runtime, build_model
 from repro.models.config import Family
 
-RESULT_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+# Resolved against the CWD (NOT the module: an installed package would
+# point outside the tree) and created lazily in main().
+RESULT_DIR = os.path.join("results", "dryrun")
 
 
 # --------------------------------------------------------------------- #
@@ -49,6 +51,16 @@ def _scan_block(num_layers: int) -> int:
 
 
 TRAIN_MICROBATCH = int(os.environ.get("REPRO_MICROBATCH", "4"))
+
+
+def _cell_config(arch: str, reduced: bool):
+    """Full assigned config, or the reduced variant (CI smoke: identical
+    mesh/sharding wiring, minutes-not-hours compile)."""
+    if reduced:
+        from repro.configs import get_reduced
+
+        return get_reduced(arch, loss_chunk=0)
+    return get_config(arch)
 
 
 def shape_tuned_config(cfg, shape: ShapeSpec):
@@ -102,20 +114,12 @@ def fl_batch_specs(cfg, rules: ShardingRules, shape: ShapeSpec, fl_cfg: FLConfig
         telemetry_energy=jax.ShapeDtypeStruct((n,), jnp.float32),
         hist=jax.ShapeDtypeStruct((n, fl_cfg.hist_bins), jnp.float32),
     )
-    shardings = rules.train_batch_specs(
-        {k: specs[k] for k in ("tokens", "patch_embeds", "frames") if k in specs}
-    )
-    full = {k: jax.sharding.NamedSharding(rules.mesh, v)
-            for k, v in shardings.items()}
-    rep = rules.replicated()
-    for k in specs:
-        if k not in full:
-            full[k] = rep
-    return specs, full
+    return specs, rules.fl_batch_shardings(specs)
 
 
-def build_train(arch: str, shape: ShapeSpec, multi_pod: bool):
-    cfg = shape_tuned_config(get_config(arch), shape)
+def build_train(arch: str, shape: ShapeSpec, multi_pod: bool,
+                reduced: bool = False):
+    cfg = shape_tuned_config(_cell_config(arch, reduced), shape)
     pm = mesh_mod.make_production_mesh(multi_pod=multi_pod)
     zero_env = os.environ.get("REPRO_ZERO")
     rules = make_rules(
@@ -149,23 +153,7 @@ def build_train(arch: str, shape: ShapeSpec, multi_pod: bool):
     )
 
     state_abs = abstract_fl_state(model, fl_cfg)
-    shapes, laxes = model.param_shapes(), model.param_axes()
-    p_spec = rules.param_specs(shapes, laxes, stacked=False)
-    mu_spec = rules.opt_spec_tree(shapes, laxes, stacked=False)
-    from jax.sharding import PartitionSpec as P
-
-    from repro.fl.state import FLState
-
-    rep = P()
-    state_specs = FLState(
-        params=p_spec,
-        server_mu=mu_spec if state_abs.server_mu is not None else None,
-        server_count=rep,
-        sched=jax.tree.map(lambda _: rep, state_abs.sched),
-        rng=rep,
-        step=rep,
-    )
-    state_shardings = rules.shardings(state_specs)
+    state_shardings = rules.shardings(rules.fl_state_specs(model, state_abs))
     batch_abs, batch_shardings = fl_batch_specs(cfg, rules, shape, fl_cfg)
 
     jitted = jax.jit(
@@ -176,8 +164,9 @@ def build_train(arch: str, shape: ShapeSpec, multi_pod: bool):
     return jitted, (state_abs, batch_abs), rules, pm, cfg
 
 
-def build_prefill(arch: str, shape: ShapeSpec, multi_pod: bool):
-    cfg = shape_tuned_config(get_config(arch), shape)
+def build_prefill(arch: str, shape: ShapeSpec, multi_pod: bool,
+                  reduced: bool = False):
+    cfg = shape_tuned_config(_cell_config(arch, reduced), shape)
     if os.environ.get("REPRO_UNROLL_LAYERS") == "1":  # static-window knob
         cfg = dataclasses.replace(cfg, scan_layers=False)
     pm = mesh_mod.make_production_mesh(multi_pod=multi_pod)
@@ -201,8 +190,9 @@ def build_prefill(arch: str, shape: ShapeSpec, multi_pod: bool):
     return jitted, (shapes, batch_abs), rules, pm, cfg
 
 
-def build_decode(arch: str, shape: ShapeSpec, multi_pod: bool):
-    cfg = shape_tuned_config(get_config(arch), shape)
+def build_decode(arch: str, shape: ShapeSpec, multi_pod: bool,
+                 reduced: bool = False):
+    cfg = shape_tuned_config(_cell_config(arch, reduced), shape)
     if os.environ.get("REPRO_DECODE_F32") == "1":  # legalization probe
         cfg = dataclasses.replace(
             cfg, compute_dtype="float32", param_dtype="float32"
@@ -236,7 +226,8 @@ def build_decode(arch: str, shape: ShapeSpec, multi_pod: bool):
 # --------------------------------------------------------------------- #
 # Cell runner
 # --------------------------------------------------------------------- #
-def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             reduced: bool = False):
     shape = SHAPES[shape_name]
     skips = get_skips(arch)
     mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
@@ -254,11 +245,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
     t0 = time.time()
     try:
         if shape.kind == "train":
-            jitted, args, rules, pm, cfg = build_train(arch, shape, multi_pod)
+            jitted, args, rules, pm, cfg = build_train(
+                arch, shape, multi_pod, reduced)
         elif shape.kind == "prefill":
-            jitted, args, rules, pm, cfg = build_prefill(arch, shape, multi_pod)
+            jitted, args, rules, pm, cfg = build_prefill(
+                arch, shape, multi_pod, reduced)
         else:
-            jitted, args, rules, pm, cfg = build_decode(arch, shape, multi_pod)
+            jitted, args, rules, pm, cfg = build_decode(
+                arch, shape, multi_pod, reduced)
 
         with pm:
             lowered = jitted.lower(*args)
@@ -268,6 +262,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax>=0.4.35: list per program
+            cost = cost[0] if cost else {}
         hlo = analyze_hlo(compiled.as_text())
         stats = hlo.collectives
 
@@ -324,7 +320,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
             try:
                 os.environ["REPRO_DECODE_F32"] = "1"
                 jax.clear_caches()
-                jitted2, args2, *_ = build_decode(arch, shape, multi_pod)
+                jitted2, args2, *_ = build_decode(arch, shape, multi_pod,
+                                                  reduced)
                 with pm:
                     compiled2 = jitted2.lower(*args2).compile()
                 mem2 = compiled2.memory_analysis()
@@ -356,6 +353,11 @@ def main():
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     ap.add_argument("--out", default=RESULT_DIR)
     ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--limit", type=int, default=0,
+                    help="stop after N non-cached cells (CI smoke)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced configs on the full production mesh "
+                         "(same sharding wiring, fast compiles)")
     args = ap.parse_args()
 
     arches = ARCH_IDS if args.arch == "all" else [args.arch]
@@ -364,10 +366,16 @@ def main():
     os.makedirs(args.out, exist_ok=True)
 
     n_fail = 0
+    n_run = 0
     for arch in arches:
         for shape_name in shapes:
             for multi_pod in meshes:
+                if args.limit and n_run >= args.limit:
+                    print(f"done (limit {args.limit}); failures: {n_fail}")
+                    return 1 if n_fail else 0
                 tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+                if args.reduced:
+                    tag += "__reduced"
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path) and not args.force:
                     with open(path) as f:
@@ -376,7 +384,8 @@ def main():
                     n_fail += cached["status"] == "FAIL"
                     continue
                 print(f"[dryrun] {tag} ...", flush=True)
-                res = run_cell(arch, shape_name, multi_pod)
+                res = run_cell(arch, shape_name, multi_pod, reduced=args.reduced)
+                n_run += 1
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
                 print(

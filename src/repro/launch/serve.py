@@ -3,21 +3,22 @@
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
         --scale tiny --batch 4 --prompt-len 32 --gen 16
 
-Runs the reduced config on CPU; on a TPU pod drop --scale to get the
-production mesh + sharded KV caches (sequence-parallel flash-decode for
-batch-unshardable long-context cells; see dist/sharding.py).
+``--scale tiny`` runs the reduced config on one CPU device. ``--scale
+full`` is the distribution-aware path: it builds the ``repro.dist`` mesh
+plan, shards params (no FSDP on the decode path), batch and KV cache via
+``ShardingRules`` — batch-parallel when the batch divides the data axes,
+sequence-parallel otherwise (the long-context fallback) — and reports the
+decode step's collectives via ``analyze_hlo``. On a TPU pod it uses the
+production mesh; on CPU back it with fake devices:
+
+    python -m repro.launch.serve --scale full --devices 8 --reduced \
+        --batch 8 --prompt-len 32 --gen 8
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, get_reduced
-from repro.models import build_model
-from repro.models.config import Family
 
 
 def main(argv=None):
@@ -28,15 +29,60 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="back the full-scale mesh with N fake CPU devices "
+                         "(XLA_FLAGS; set before jax initializes)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="with --scale full: reduced config on the real "
+                         "mesh plan (CPU-executable sharded decode)")
     args = ap.parse_args(argv)
 
+    if args.scale == "full" and args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_reduced
+    from repro.models import Runtime, build_model
+    from repro.models.config import Family
+
+    full = args.scale == "full"
     cfg = (
-        get_reduced(args.arch, loss_chunk=0)
-        if args.scale == "tiny"
-        else get_config(args.arch)
+        get_config(args.arch)
+        if full and not args.reduced
+        else get_reduced(args.arch, loss_chunk=0)
     )
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
+
+    rules = None
+    runtime = Runtime()
+    if full:
+        from repro.dist import make_rules
+        from repro.launch import mesh as mesh_mod
+
+        pods = 2 if args.multi_pod else 1
+        if args.devices and args.devices != 256 * pods:
+            rules = make_rules(None, cfg, multi_pod=args.multi_pod,
+                               device_count=args.devices)
+        else:
+            pm = mesh_mod.make_production_mesh(multi_pod=args.multi_pod)
+            rules = make_rules(pm, cfg, multi_pod=args.multi_pod)
+        mesh_shape = rules.mesh.shape
+        runtime = Runtime(
+            mesh=rules.mesh,
+            batch_axes=rules.serve_batch_axes,
+            expert_axis="expert" if cfg.num_experts else None,
+            tp_axis="tp" if mesh_shape.get("tp", 1) > 1 else None,
+            moe_impl="gshard" if cfg.num_experts else "dropless",
+            moe_group_axes=rules.serve_batch_axes,
+        )
+        print(f"[serve] mesh plan: {dict(mesh_shape)}")
+
     params = model.init(key)
 
     cache_len = args.prompt_len + args.gen
@@ -55,8 +101,32 @@ def main(argv=None):
             key, (args.batch, args.prompt_len, cfg.d_model)
         ).astype(cfg.compute_dtype)
 
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
-    decode = jax.jit(model.decode_step)
+    if rules is not None:
+        from jax.sharding import NamedSharding
+
+        shapes, laxes = model.param_shapes(), model.param_axes()
+        # Decode-path weights: model-parallel only, no ZeRO sharding.
+        p_sh = rules.shardings(
+            rules.param_specs(shapes, laxes, stacked=False, fsdp=False)
+        )
+        params = jax.device_put(params, p_sh)
+        b_sh = {
+            k: NamedSharding(rules.mesh, v)
+            for k, v in rules.serve_batch_specs(batch).items()
+        }
+        batch = {k: jax.device_put(v, b_sh[k]) for k, v in batch.items()}
+        prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cache_len,
+                                       runtime=runtime),
+            in_shardings=(p_sh, b_sh),
+        )
+        decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, runtime),
+            donate_argnums=(1,),
+        )
+    else:
+        prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
+        decode = jax.jit(model.decode_step)
 
     t0 = time.time()
     logits, cache = prefill(params, batch)
@@ -64,6 +134,20 @@ def main(argv=None):
     t_prefill = time.time() - t0
 
     toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    if rules is not None:
+        # Pin the cache to the rules' layout (batch- or sequence-parallel),
+        # AOT-compile ONE decode program against it, and report its
+        # collective census — the same executable then serves every step.
+        from repro.dist import analyze_hlo
+
+        cache = jax.device_put(
+            cache, rules.shardings(rules.cache_specs(cache))
+        )
+        decode = decode.lower(params, cache, toks).compile()
+        stats = analyze_hlo(decode.as_text()).collectives
+        print(f"[serve] decode collectives: {stats.count_by_kind} "
+              f"total={stats.total_bytes:.2e} B")
+
     generated = [toks]
     t0 = time.time()
     for _ in range(args.gen - 1):

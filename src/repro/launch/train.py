@@ -1,35 +1,28 @@
 """Federated training driver (pod-scale path on real hardware; CPU-scaled
-here). Wires: configs → model → sharding rules → FedFog round → data
-pipeline → checkpointing, with auto-resume.
+here). Wires: configs → model → mesh plan + sharding rules → FedFog round
+→ data pipeline → checkpointing, with auto-resume.
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
         --rounds 100 --scale tiny --ckpt-dir /tmp/fedfog_ckpt
 
-``--scale tiny|smoke`` substitutes the reduced config + a 1-device plan so
-the full driver logic (including checkpoint/restart) runs on this CPU
-container; on a TPU pod, drop --scale and the production mesh is used.
+``--scale tiny`` substitutes the reduced config + a 1-device plan so the
+full driver logic (including checkpoint/restart) runs on this CPU
+container. ``--scale full`` is the distribution-aware path: it builds the
+mesh plan from ``repro.dist``, jits the round with in/out shardings from
+``ShardingRules`` and verifies via ``analyze_hlo`` that the compiled
+round contains exactly the paper's ONE inter-client all-reduce. On a TPU
+pod it uses the 256-chip production mesh; on CPU, back it with fake
+devices:
+
+    python -m repro.launch.train --scale full --devices 256 --compile-only
+    python -m repro.launch.train --scale full --devices 8 \
+        --reduced --rounds 2          # actually executes sharded rounds
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
+import os
 import time
-
-import jax
-import jax.numpy as jnp
-
-from repro import checkpoint as ckpt
-from repro.configs import get_config, get_reduced
-from repro.configs.shapes import SHAPES
-from repro.data.synthetic import (
-    FedDataConfig,
-    all_client_histograms,
-    client_data_sizes,
-    round_batch,
-)
-from repro.data.telemetry import TelemetryConfig, init_telemetry, make_profiles, step_telemetry
-from repro.fl import FLConfig, init_fl_state, make_round_fn
-from repro.models import Runtime, build_model
 
 
 def parse_args(argv=None):
@@ -47,17 +40,76 @@ def parse_args(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    # --scale full knobs
+    ap.add_argument("--devices", type=int, default=0,
+                    help="back the full-scale mesh with N fake CPU devices "
+                         "(XLA_FLAGS; must be set before jax initializes). "
+                         "0 = use the real platform's device pool")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="with --scale full: reduced config on the real "
+                         "mesh plan (CPU-executable sharded rounds)")
+    ap.add_argument("--compile-only", action="store_true",
+                    help="with --scale full: lower+compile the sharded "
+                         "round, report collectives, skip execution")
     return ap.parse_args(argv)
 
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.scale == "full" and args.devices:
+        # Must precede the first jax backend init in this process.
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+    import jax
+    import jax.numpy as jnp
+
+    from repro import checkpoint as ckpt
+    from repro.configs import get_config, get_reduced
+    from repro.data.synthetic import (
+        FedDataConfig,
+        all_client_histograms,
+        client_data_sizes,
+        round_batch,
+    )
+    from repro.data.telemetry import (
+        TelemetryConfig,
+        init_telemetry,
+        make_profiles,
+        step_telemetry,
+    )
+    from repro.fl import FLConfig, init_fl_state, make_round_fn
+    from repro.models import Runtime, build_model
+
+    full = args.scale == "full"
     cfg = (
-        get_reduced(args.arch, loss_chunk=0)
-        if args.scale == "tiny"
-        else get_config(args.arch)
+        get_config(args.arch)
+        if full and not args.reduced
+        else get_reduced(args.arch, loss_chunk=0)
     )
     model = build_model(cfg)
+
+    rules = None
+    if full:
+        from repro.dist import make_rules
+        from repro.launch import mesh as mesh_mod
+
+        pods = 2 if args.multi_pod else 1
+        if args.devices and args.devices != 256 * pods:
+            # Scaled host plan (client × zero only) on N local devices.
+            rules = make_rules(
+                None, cfg, multi_pod=args.multi_pod,
+                device_count=args.devices,
+            )
+        else:
+            pm = mesh_mod.make_production_mesh(multi_pod=args.multi_pod)
+            rules = make_rules(pm, cfg, multi_pod=args.multi_pod)
+        args.slots = rules.plan.num_clients
+        args.clients = max(args.clients, 2 * args.slots)
+        print(f"[train] mesh plan: {dict(rules.mesh.shape)}")
+
     fl_cfg = FLConfig(
         num_clients=args.clients,
         slots=args.slots,
@@ -72,6 +124,27 @@ def main(argv=None):
     telemetry = init_telemetry(tel_cfg)
     sizes = client_data_sizes(data_cfg, args.clients)
 
+    tokens_per_client = args.batch_per_slot * args.seq_len * args.local_steps
+    flops_round = model.flops_per_token() * tokens_per_client
+
+    if rules is not None:
+        # Compile against abstract inputs FIRST: --compile-only never
+        # allocates full-size parameters on the host.
+        round_fn = _sharded_round_fn(args, cfg, model, fl_cfg, rules,
+                                     flops_round)
+        if args.compile_only:
+            return None
+    else:
+        round_fn = jax.jit(
+            make_round_fn(
+                model,
+                fl_cfg,
+                Runtime(moe_impl="dropless" if cfg.num_experts else "reference"),
+                flops_per_client_round=flops_round,
+            ),
+            donate_argnums=(0,),
+        )
+
     key = jax.random.PRNGKey(args.seed)
     state = init_fl_state(model, fl_cfg, key)
     start_round = 0
@@ -85,18 +158,6 @@ def main(argv=None):
                 start_round = latest
                 print(f"[train] resumed from round {latest}")
 
-    tokens_per_client = args.batch_per_slot * args.seq_len * args.local_steps
-    round_fn = jax.jit(
-        make_round_fn(
-            model,
-            fl_cfg,
-            Runtime(moe_impl="dropless" if cfg.num_experts else "reference"),
-            flops_per_client_round=model.flops_per_token() * tokens_per_client,
-        ),
-        donate_argnums=(0,),
-    )
-
-    gb = args.slots * args.batch_per_slot * args.local_steps
     data_key = jax.random.PRNGKey(args.seed + 1)
     for r in range(start_round, args.rounds):
         t0 = time.time()
@@ -148,6 +209,83 @@ def main(argv=None):
     if checkpointer:
         checkpointer.wait()
     return state
+
+
+def _sharded_round_fn(args, cfg, model, fl_cfg, rules, flops_round):
+    """AOT-compile the round with shardings from the rules against
+    abstract inputs (so --compile-only never allocates parameters and
+    round 0 doesn't re-trace), and enforce the paper's communication
+    contract: exactly ONE inter-client all-reduce (the Eq. 6 delta
+    aggregation) in the compiled round body. Returns the compiled
+    executable."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist import analyze_hlo, inter_client_all_reduces
+    from repro.fl import abstract_fl_state, make_round_fn
+    from repro.models import Runtime
+
+    mesh_shape = rules.mesh.shape
+    runtime = Runtime(
+        mesh=rules.mesh,
+        batch_axes=rules.batch_axes,
+        expert_axis="expert" if cfg.num_experts else None,
+        tp_axis="tp" if mesh_shape.get("tp", 1) > 1 else None,
+        moe_impl="gshard" if cfg.num_experts else "dropless",
+        moe_group_axes=tuple(a for a in ("zero",) if mesh_shape.get(a, 1) > 1),
+    )
+    round_fn = make_round_fn(
+        model, fl_cfg, runtime,
+        flops_per_client_round=flops_round, rules=rules,
+    )
+
+    state_abs = abstract_fl_state(model, fl_cfg)
+    state_sh = rules.shardings(rules.fl_state_specs(model, state_abs))
+
+    gb = fl_cfg.slots * args.batch_per_slot * args.local_steps
+    n = fl_cfg.num_clients
+    f32 = jnp.float32
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct((gb, args.seq_len + 1), jnp.int32),
+        "slot_data_sizes": jax.ShapeDtypeStruct((fl_cfg.slots,), f32),
+        "telemetry_cpu": jax.ShapeDtypeStruct((n,), f32),
+        "telemetry_mem": jax.ShapeDtypeStruct((n,), f32),
+        "telemetry_batt": jax.ShapeDtypeStruct((n,), f32),
+        "telemetry_energy": jax.ShapeDtypeStruct((n,), f32),
+        "hist": jax.ShapeDtypeStruct((n, fl_cfg.hist_bins), f32),
+    }
+    batch_sh = rules.fl_batch_shardings(batch_abs)
+
+    jitted = jax.jit(
+        round_fn, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
+    )
+    t0 = time.time()
+    compiled = jitted.lower(state_abs, batch_abs).compile()
+    print(f"[train] sharded round compiled in {time.time() - t0:.1f}s")
+
+    hlo = analyze_hlo(compiled.as_text())
+    stats = hlo.collectives
+    print(f"[train] collectives: {stats.count_by_kind} "
+          f"bytes={ {k: f'{v:.2e}' for k, v in stats.bytes_by_kind.items()} }")
+    for w in stats.trip_count_warnings[:3]:
+        print(f"[train] note: {w}")
+
+    client_ways = 1
+    for a in rules.plan.client_axes:
+        client_ways *= mesh_shape.get(a, 1)
+    if client_ways > 1:
+        n_cross, delta_bytes = inter_client_all_reduces(
+            hlo, rules, model.param_count()
+        )
+        if n_cross != 1:
+            raise AssertionError(
+                f"expected exactly ONE inter-client all-reduce in the "
+                f"round body, found {n_cross} (≥{0.5 * delta_bytes:.2e} B "
+                f"crossing {rules.plan.client_axes})"
+            )
+        print("[train] verified: ONE inter-client all-reduce "
+              f"({delta_bytes:.2e} B delta payload)")
+    return compiled
 
 
 if __name__ == "__main__":

@@ -130,6 +130,7 @@ def run_sweep(
     axes: Mapping[str, Sequence[Any]] | None = None,
     cases: Sequence[Mapping[str, Any]] | None = None,
     rounds: int | None = None,
+    devices: int | Sequence[Any] | None = None,
 ) -> SweepResult:
     """Run a (config grid) × (seed batch) × (rounds) sweep.
 
@@ -147,6 +148,12 @@ def run_sweep(
       cases: explicit list of override dicts (non-product grids); wins
         over ``axes``.
       rounds: override ``cfg.rounds``.
+      devices: shard the vmapped seed batch across local devices — an int
+        (first N of ``jax.devices()``) or an explicit device sequence.
+        Each device then runs |seeds|/N independent simulations of every
+        grid point in parallel (seeds are padded to a multiple of N and
+        the pad rows dropped). Per-seed results are unchanged. None/0/1
+        keeps the single-device layout.
 
     Returns:
       SweepResult with ``(G, S, R)`` histories.
@@ -156,6 +163,24 @@ def run_sweep(
     if seeds_arr.ndim != 1 or seeds_arr.shape[0] == 0:
         raise ValueError("seeds must be a non-empty 1-D collection of ints")
     grid = _grid(axes, cases)
+
+    n_seeds = int(seeds_arr.shape[0])
+    seed_sharding = None
+    seeds_in = seeds_arr
+    if devices:
+        devs = (
+            list(jax.devices())[: int(devices)]
+            if isinstance(devices, int)
+            else list(devices)
+        )
+        if len(devs) > 1:
+            mesh = jax.sharding.Mesh(np.asarray(devs), ("seed",))
+            seed_sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("seed")
+            )
+            pad = (-n_seeds) % len(devs)
+            if pad:  # cycle seeds to a full multiple; pad rows dropped below
+                seeds_in = jnp.resize(seeds_arr, (n_seeds + pad,))
 
     stacked_per_g = []
     for overrides in grid:
@@ -173,7 +198,15 @@ def run_sweep(
             )
             return stacked
 
-        stacked = jax.jit(jax.vmap(per_seed))(seeds_arr)
+        fn = jax.vmap(per_seed)
+        jitted = (
+            jax.jit(fn, in_shardings=(seed_sharding,))
+            if seed_sharding is not None
+            else jax.jit(fn)
+        )
+        stacked = jitted(seeds_in)
+        if seeds_in.shape[0] != n_seeds:
+            stacked = jax.tree.map(lambda x: x[:n_seeds], stacked)
         stacked_per_g.append(jax.device_get(stacked))  # one transfer / point
 
     history = {

@@ -1,0 +1,49 @@
+"""Fake-device integration test: one FedFog round on an 8-device host
+mesh (client=4 × zero=2) must reproduce the single-device round within
+float tolerance, and its compiled body must contain exactly ONE
+inter-client all-reduce carrying the delta payload (the paper's §III
+communication contract; see PAPER.md).
+
+Runs ``repro.dist.selftest`` in a SUBPROCESS because the fake-device
+count must be fixed before jax initializes — this test process has
+already locked its backend to one device.
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_selftest(*extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.dist.selftest", "--json", *extra],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO,
+        timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"selftest failed\nstdout: {proc.stdout[-2000:]}\n"
+        f"stderr: {proc.stderr[-2000:]}"
+    )
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_round_equivalence_and_one_all_reduce():
+    res = _run_selftest("--devices", "8")
+    assert res["plan"]["num_clients"] == 4 and res["plan"]["zero"] == 2
+    # The paper's contract: ONE inter-client all-reduce per round.
+    assert res["inter_client_all_reduces"] == 1
+    # Sharded and single-device rounds agree on metrics AND params.
+    assert res["equivalence_ok"], res
+    assert res["max_param_diff"] < 1e-4, res
+    for k, v in res["metric_diffs"].items():
+        assert v < 1e-2, (k, v)
+    assert res["ok"]

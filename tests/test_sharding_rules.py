@@ -6,15 +6,10 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-pytest.importorskip(
-    "repro.dist.meshes",
-    reason="repro.dist (meshes + sharding rules) absent from the seed; "
-    "restoring it is a ROADMAP open item",
-)
-from repro.configs import ARCH_IDS, get_config  # noqa: E402
-from repro.configs.shapes import SHAPES, batch_specs, cache_specs  # noqa: E402
-from repro.dist.meshes import plan_for  # noqa: E402
-from repro.models import build_model  # noqa: E402
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, batch_specs, cache_specs
+from repro.dist.meshes import plan_for
+from repro.models import build_model
 
 # We cannot build 256 fake devices inside the main test process (device
 # count is locked at first jax use), so validate the PLAN arithmetic and

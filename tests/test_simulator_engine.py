@@ -102,6 +102,48 @@ def test_sweep_matches_standalone_scanned_runs():
                 )
 
 
+def test_sweep_devices_sharding_bit_identical():
+    """run_sweep(devices=N) — including the seed-padding path where
+    |seeds| is not a multiple of N — reproduces the single-device sweep
+    bit-for-bit. Subprocess: the fake-device count must be set before
+    jax initializes."""
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = """
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=4 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+import numpy as np
+from repro.fl.simulator import SimulatorConfig
+from repro.sim import run_sweep
+
+cfg = SimulatorConfig(task="emnist", num_clients=8, rounds=3, top_k=4,
+                      hidden=(16,), seed=0)
+for seeds in ([0, 1, 2], [0, 1, 2, 3], [0, 1, 2, 3, 4, 5]):
+    a = run_sweep(cfg, seeds=seeds)
+    b = run_sweep(cfg, seeds=seeds, devices=4)
+    for k in a.history:
+        assert np.array_equal(a.history[k], b.history[k]), (len(seeds), k)
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(repo, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=repo, timeout=600,
+    )
+    assert proc.returncode == 0 and "OK" in proc.stdout, (
+        proc.stdout[-1000:], proc.stderr[-1000:]
+    )
+
+
 def test_sweep_reductions_shapes():
     cfg = _cfg(rounds=3)
     res = run_sweep(cfg, seeds=[0, 1, 2])
