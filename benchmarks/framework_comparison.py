@@ -1,12 +1,16 @@
 """Paper Fig. 5/6: FedFog vs FogFaaS vs Vanilla FL vs RCS on both tasks.
 
-Reported per framework: final accuracy, mean round latency, total energy.
-Paper claims: FedFog lowest latency, 20-30% less energy, highest accuracy.
+Reported per framework: final accuracy (mean ± 95% CI over seeds), mean
+round latency, total energy. Paper claims: FedFog lowest latency, 20-30%
+less energy, highest accuracy.
+
+Sweep-native since PR 3: per task, ONE compiled program per policy runs
+the whole seed batch (vmap over seeds of the scanned engine).
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, fmt, preset, timed_rounds
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from benchmarks.common import Row, fmt, preset, timed_sweep
+from repro.fl.simulator import SimulatorConfig
 
 POLICIES = ("fedfog", "fogfaas", "vanilla", "rcs")
 
@@ -15,38 +19,49 @@ def run() -> list[Row]:
     p = preset()
     rows = []
     for task in ("emnist", "har"):
-        metrics = {}
-        for policy in POLICIES:
-            sim = FedFogSimulator(
-                SimulatorConfig(
-                    task=task, num_clients=p["clients"], rounds=p["rounds"],
-                    top_k=p["topk"], policy=policy, seed=0,
-                )
+        cfg = SimulatorConfig(
+            task=task, num_clients=p["clients"], rounds=p["rounds"],
+            top_k=p["topk"], seed=0,
+        )
+        res, uspc = timed_sweep(
+            cfg, seeds=range(p["seeds"]),
+            axes={"policy": list(POLICIES)},
+        )
+        acc_mean, acc_ci = res.mean_ci("accuracy")
+        lat_mean, _ = res.mean_std("round_latency_ms", reduce="mean")
+        en_mean, _ = res.mean_std("energy_j", reduce="sum")
+        cold_mean, _ = res.mean_std("cold_starts", reduce="sum")
+        stats = {}
+        for g, policy in enumerate(POLICIES):
+            stats[policy] = dict(
+                acc=float(acc_mean[g, -1]),
+                lat=float(lat_mean[g]),
+                en=float(en_mean[g]),
             )
-            h, uspc = timed_rounds(sim, p["rounds"])
-            metrics[policy] = h
             rows.append(
                 Row(
                     f"fig5/{task}/{policy}",
                     uspc,
                     fmt(
-                        acc=h["final_accuracy"],
-                        latency_ms=h["mean_latency_ms"],
-                        energy_j=h["total_energy_j"],
-                        cold=h["total_cold_starts"],
+                        acc=stats[policy]["acc"],
+                        acc_ci95=float(acc_ci[g, -1]),
+                        latency_ms=stats[policy]["lat"],
+                        energy_j=stats[policy]["en"],
+                        cold=float(cold_mean[g]),
+                        seeds=p["seeds"],
                     ),
                 )
             )
-        fed = metrics["fedfog"]
-        others_lat = min(m["mean_latency_ms"] for k, m in metrics.items() if k != "fedfog")
-        others_en = min(m["total_energy_j"] for k, m in metrics.items() if k != "fedfog")
+        fed = stats["fedfog"]
+        others_lat = min(m["lat"] for k, m in stats.items() if k != "fedfog")
+        others_en = min(m["en"] for k, m in stats.items() if k != "fedfog")
         rows.append(
             Row(
                 f"fig5/{task}/summary",
                 0.0,
                 fmt(
-                    fedfog_lowest_latency=int(fed["mean_latency_ms"] <= others_lat),
-                    energy_saving_vs_best_other=1 - fed["total_energy_j"] / others_en,
+                    fedfog_lowest_latency=int(fed["lat"] <= others_lat),
+                    energy_saving_vs_best_other=1 - fed["en"] / others_en,
                 ),
             )
         )

@@ -16,7 +16,7 @@ import numpy as np
 from benchmarks.common import Row, SCALE, fmt
 from repro.core.scheduler import SchedulerConfig, schedule_round
 from repro.core.types import ClientTelemetry, init_scheduler_state
-from repro.sim.faas import FaasSimConfig, round_times_ms
+from repro.sim.des import FaasSimConfig, RoundCostModel
 from repro.data.telemetry import TelemetryConfig, make_profiles
 
 SIZES = {"quick": (64, 256, 1024), "default": (64, 256, 1024, 4096),
@@ -48,13 +48,13 @@ def _time_scheduler(n: int, iters: int = 20) -> float:
 def run() -> list[Row]:
     sizes = SIZES[SCALE]
     rows, fed_us, fog_ms = [], [], []
-    faas = FaasSimConfig()
+    cost_model = RoundCostModel(FaasSimConfig())
     for n in sizes:
         us = _time_scheduler(n)
         fed_us.append(us)
         prof = make_profiles(TelemetryConfig(num_clients=n))
-        _, _, orch = round_times_ms(
-            faas, prof, jnp.ones(n, bool), jnp.zeros(n, bool), 1e9, 1e6, 1e6,
+        _, _, orch = cost_model.times_ms(
+            prof, jnp.ones(n, bool), jnp.zeros(n, bool), 1e9, 1e6, 1e6,
             policy="fogfaas",
         )
         fog_ms.append(float(orch))

@@ -1,41 +1,52 @@
 """Paper Fig. 3 + §III.K: accuracy vs differential-privacy level.
 
 Sweeps the Gaussian-mechanism noise scale σ, reporting (ε per Eq. 12,
-final accuracy). Also prints the Eq. 12 worked example (with the paper's
-arithmetic discrepancy noted — see DESIGN.md).
+final accuracy mean ± 95% CI over seeds). Also prints the Eq. 12 worked
+example (with the paper's arithmetic discrepancy noted — see
+docs/EXPERIMENTS.md).
+
+Sweep-native since PR 3: one vmapped/scanned program per σ instead of a
+per-round Python loop — multi-seed at the same wall cost.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, fmt, preset, timed_rounds
+from benchmarks.common import Row, fmt, preset, timed_sweep
 from repro.core.privacy import epsilon
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.fl.simulator import SimulatorConfig
 
 SIGMAS = (0.0, 0.05, 0.1, 0.3)
 
 
 def run() -> list[Row]:
     p = preset()
+    cfg = SimulatorConfig(
+        task="emnist", num_clients=p["clients"], rounds=p["rounds"],
+        top_k=p["topk"], clip_norm=1.1, seed=0,
+    )
+    res, uspc = timed_sweep(
+        cfg, seeds=range(p["seeds"]),
+        cases=[{"dp_sigma": s} for s in SIGMAS],
+    )
+    mean, ci = res.mean_ci("accuracy")
     rows = []
-    accs = {}
-    for sigma in SIGMAS:
-        sim = FedFogSimulator(
-            SimulatorConfig(
-                task="emnist", num_clients=p["clients"], rounds=p["rounds"],
-                top_k=p["topk"], dp_sigma=sigma, clip_norm=1.1, seed=0,
-            )
-        )
-        h, uspc = timed_rounds(sim, p["rounds"])
+    finals = {}
+    for g, sigma in enumerate(SIGMAS):
         eps = (
             float("inf")
             if sigma == 0
             else epsilon(sigma, 1.1, p["topk"], 1e-5)
         )
-        accs[sigma] = h["final_accuracy"]
+        finals[sigma] = float(mean[g, -1])
         rows.append(
             Row(
                 f"fig3/sigma{sigma}",
                 uspc,
-                fmt(eps_per_round=eps, final_acc=h["final_accuracy"]),
+                fmt(
+                    eps_per_round=eps,
+                    final_acc=finals[sigma],
+                    ci95=float(ci[g, -1]),
+                    seeds=p["seeds"],
+                ),
             )
         )
     rows.append(
@@ -55,7 +66,8 @@ def run() -> list[Row]:
             "fig3/summary",
             0.0,
             fmt(
-                acc_retention_at_strongest_dp=accs[SIGMAS[-1]] / max(accs[0.0], 1e-9),
+                acc_retention_at_strongest_dp=finals[SIGMAS[-1]]
+                / max(finals[0.0], 1e-9),
                 paper_claim=">0.8 retention",
             ),
         )

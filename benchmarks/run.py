@@ -2,10 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV per the repo contract. Scale with
 REPRO_BENCH_SCALE=quick|default|full. Select suites with
-``python -m benchmarks.run [suite ...]``.
+``python -m benchmarks.run [suite ...]``. ``--json out.json`` additionally
+records the rows (plus scale/timings) as JSON — used by scripts/ci.sh to
+keep a ``BENCH_simulator.json`` perf baseline across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 import traceback
@@ -22,7 +26,8 @@ SUITES = [
     "privacy_tradeoff",  # Fig 3
     "hyperparam_sensitivity",  # Fig 10
     "sim_vs_real",  # Tables VII/VIII
-    "simulator_engine",  # scanned/sweep vs looped engine throughput
+    "async_vs_sync",  # event-driven engine: async rules vs round barrier
+    "simulator_engine",  # scanned/sweep/async vs looped engine throughput
     "dryrun_sharding",  # dist layer: compile time + collective census
     "kernels_bench",
     "roofline",  # §Roofline (reads results/dryrun)
@@ -32,22 +37,55 @@ SUITES = [
 def main() -> None:
     import importlib
 
-    wanted = sys.argv[1:] or SUITES
+    argv = list(sys.argv[1:])
+    json_out = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_out = argv[i + 1]
+        except IndexError:
+            sys.exit("--json requires an output path")
+        del argv[i : i + 2]
+
+    wanted = argv or SUITES
     print("name,us_per_call,derived")
     failures = 0
+    records = []
     for suite in wanted:
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{suite}")
             for row in mod.run():
                 print(row.csv(), flush=True)
+                records.append(
+                    {
+                        "suite": suite,
+                        "name": row.name,
+                        "us_per_call": row.us_per_call,
+                        "derived": row.derived,
+                    }
+                )
         except Exception as e:  # keep the harness going
             failures += 1
             print(f"{suite}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+            records.append({"suite": suite, "name": f"{suite}/ERROR",
+                            "error": f"{type(e).__name__}:{e}"})
         print(
             f"# {suite} done in {time.time() - t0:.1f}s", file=sys.stderr, flush=True
         )
+        if records and "wall_s" not in records[-1]:
+            records[-1]["wall_s"] = round(time.time() - t0, 2)
+    if json_out:
+        payload = {
+            "scale": os.environ.get("REPRO_BENCH_SCALE", "default"),
+            "suites": wanted,
+            "failures": failures,
+            "rows": records,
+        }
+        with open(json_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {json_out}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

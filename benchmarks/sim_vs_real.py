@@ -8,6 +8,10 @@ clocks. We calibrate the DES compute constant on the smallest client count
 (as the paper calibrates to its hardware), then report deviation at the
 larger scales — testing whether the simulator extrapolates, exactly like
 Table VIII's 8/16/32-client sweep.
+
+Sweep-native since PR 3: the DES predictions come from one multi-seed
+``run_sweep`` (client counts as grid points), so the predicted latency is
+a seed-averaged quantity rather than a single trajectory.
 """
 from __future__ import annotations
 
@@ -15,11 +19,13 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import Row, fmt
-from repro.fl.simulator import FedFogSimulator, SimulatorConfig, mlp_apply
+from benchmarks.common import Row, fmt, preset, timed_sweep
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
 
 SIZES = (8, 16, 32)
+ROUNDS = 4  # enough to reach warm-round latency
 
 
 def _real_round_ms(sim: FedFogSimulator, n: int) -> float:
@@ -46,20 +52,30 @@ def _real_round_ms(sim: FedFogSimulator, n: int) -> float:
 
 
 def run() -> list[Row]:
+    p = preset()
+    base = SimulatorConfig(task="emnist", num_clients=8, rounds=ROUNDS,
+                           top_k=8, seed=0)
+    # DES predictions: all sizes × seeds as compiled sweep programs.
+    res, _ = timed_sweep(
+        base, seeds=range(p["seeds"]),
+        cases=[{"num_clients": n, "top_k": n} for n in SIZES],
+        rounds=ROUNDS,
+    )
+    lat = res.metric("round_latency_ms")  # (G, S, R)
+    sims = {n: float(lat[g, :, -1].mean()) for g, n in enumerate(SIZES)}
+
     rows = []
-    sims, reals = {}, {}
+    reals = {}
     for n in SIZES:
         sim = FedFogSimulator(
-            SimulatorConfig(task="emnist", num_clients=n, rounds=4, top_k=n, seed=0)
+            SimulatorConfig(task="emnist", num_clients=n, rounds=ROUNDS,
+                            top_k=n, seed=0)
         )
-        h = sim.run(4)
-        # DES predicted per-round latency (warm rounds)
-        sims[n] = h["round_latency_ms"][-1]
         reals[n] = _real_round_ms(sim, n)
     # calibrate on the smallest size (paper: calibrate constants to hardware)
     scale = sims[SIZES[0]] / max(reals[SIZES[0]], 1e-9)
     devs = {}
-    for n in SIZES:
+    for g, n in enumerate(SIZES):
         predicted = sims[n]
         measured = reals[n] * scale
         devs[n] = abs(predicted - measured) / max(measured, 1e-9)
@@ -69,8 +85,13 @@ def run() -> list[Row]:
                 reals[n] * 1e3,
                 fmt(
                     sim_latency_ms=predicted,
+                    sim_latency_ci95=float(
+                        1.96 * lat[g, :, -1].std(ddof=1)
+                        / np.sqrt(lat.shape[1])
+                    ) if lat.shape[1] > 1 else float("nan"),
                     real_calibrated_ms=measured,
                     deviation=devs[n],
+                    seeds=p["seeds"],
                 ),
             )
         )

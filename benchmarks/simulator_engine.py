@@ -10,6 +10,11 @@ Three ways to run the same S-seed × R-round × N-client experiment:
            program, one device→host transfer per seed.
   sweep  : ``run_sweep()`` — ONE compiled program for the entire seed
            batch (vmap over seeds of the scanned engine).
+  async  : ``run_sweep(engine="async")`` in the sync-equivalent cohort
+           configuration — the event-driven engine (queue pops, dispatch/
+           complete events, buffered aggregation) doing the same work, so
+           its row is the event-machinery overhead AND an events/sec
+           throughput number for the perf baseline (BENCH_simulator.json).
 
 Wall-clock includes compilation — that is the honest end-to-end cost a
 benchmark suite pays, and amortizing compilation across the seed batch is
@@ -61,12 +66,28 @@ def run() -> list[Row]:
     res = run_sweep(base, seeds=range(n_seeds), rounds=rounds)
     t_sweep = time.time() - t0
 
-    # correctness cross-check: all three engines tell the same story
+    # --- event-driven engine, sync-equivalent cohort config ------------ #
+    from repro.sim.events import AsyncConfig
+
+    t0 = time.time()
+    res_async = run_sweep(
+        base, seeds=range(n_seeds), rounds=rounds,
+        engine="async", async_cfg=AsyncConfig(staleness_exponent=0.0),
+    )
+    t_async = time.time() - t0
+    # one dispatch + its completions + the flush ≈ (topk+2) events/round
+    sim_events = int((res_async.metric("valid") > 0).sum()) + n_seeds * rounds * (
+        p["topk"] + 1
+    )
+
+    # correctness cross-check: all four engines tell the same story
     acc_loop = np.asarray([h["accuracy"] for h in looped])
     acc_scan = np.asarray([h["accuracy"] for h in scanned])
     acc_sweep = np.asarray(res.metric("accuracy")[0])
+    acc_async = np.asarray(res_async.metric("accuracy")[0])[:, :rounds]
     dev_scan = float(np.abs(acc_loop - acc_scan).max())
     dev_sweep = float(np.abs(acc_loop - acc_sweep).max())
+    dev_async = float(np.abs(acc_loop - acc_async).max())
 
     shape = fmt(seeds=n_seeds, rounds=rounds, clients=p["clients"])
     return [
@@ -86,11 +107,18 @@ def run() -> list[Row]:
             f"wall_s={t_sweep:.2f};max_acc_dev={dev_sweep:.2g};{shape}",
         ),
         Row(
+            "simulator_engine/async_events",
+            t_async / sim_rounds * 1e6,
+            f"wall_s={t_async:.2f};max_acc_dev={dev_async:.2g};"
+            f"events_per_sec={sim_events / max(t_async, 1e-9):.0f};{shape}",
+        ),
+        Row(
             "simulator_engine/summary",
             0.0,
             fmt(
                 scanned_speedup_vs_loop=t_loop / max(t_scan, 1e-9),
                 sweep_speedup_vs_loop=t_loop / max(t_sweep, 1e-9),
+                async_overhead_vs_sweep=t_async / max(t_sweep, 1e-9),
             ),
         ),
     ]

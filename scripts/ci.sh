@@ -18,6 +18,14 @@ echo "=== benchmark smoke (quick scale) ==="
 REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run threshold_sensitivity
 
+echo "=== async event engine smoke (2 virtual seconds) ==="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.sim.events.engine --horizon-ms 2000
+
+echo "=== simulator perf baseline (looped/scanned/sweep/async -> BENCH_simulator.json) ==="
+REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.run simulator_engine --json BENCH_simulator.json
+
 echo "=== dryrun smoke (1 reduced cell on the 512-fake-device mesh) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k \

@@ -1,7 +1,7 @@
 """Paper-scale FedFog simulator: N edge clients, small models, full DES.
 
-This is the engine behind the paper-table benchmarks (EXPERIMENTS.md
-§Paper-fidelity): EMNIST-like / HAR-like tasks, the complete scheduler
+This is the engine behind the paper-table benchmarks (docs/EXPERIMENTS.md
+maps suites to paper tables): EMNIST-like / HAR-like tasks, the complete scheduler
 (Eqs. 1-12), telemetry + FaaS latency/energy simulation, drift injection,
 attacks, and all four policies (FedFog / RCS / FogFaaS / Vanilla FL).
 
@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from repro.core import aggregation as agg_mod
 from repro.core import privacy as privacy_mod
 from repro.core.scheduler import SchedulerConfig, account_energy, schedule_round
-from repro.core.selection import random_selection_mask
+from repro.core.selection import random_selection_mask, topk_mask
 from repro.core.types import init_scheduler_state
 from repro.data import emnist_like, har_like
 from repro.data.telemetry import (
@@ -50,6 +50,7 @@ from repro.data.telemetry import (
 )
 from repro.fl import attacks as attacks_mod
 from repro.fl.compression import apply_compression, wire_bytes_per_param
+from repro.optim import clip_by_global_norm
 from repro.sim.des import FaasSimConfig, RoundCostModel
 
 Array = jax.Array
@@ -246,32 +247,37 @@ class FedFogSimulator:
         )
 
     # ------------------------------------------------------------------ #
-    def _round(self, env, params, sched_state, telemetry, round_idx, key):
-        """One synchronous FL round — pure function of its arguments, so it
-        is equally valid as a jitted step, a ``lax.scan`` body, and a
-        vmapped-per-seed program."""
+    def _participation(self, decision, telemetry, k_sel):
+        """Policy-specific participation mask for one scheduling decision.
+
+        Shared by the synchronous round and the event-driven async engine
+        (``repro.sim.events.engine``), so both admit exactly the same
+        clients for a given (state, policy).
+        """
         cfg = self.cfg
-        n = cfg.num_clients
-        data_cfg = dataclasses.replace(self.data_cfg, seed=env["data_seed"])
-        malicious = env["malicious"]
-        k_sel, k_data, k_attack, k_dp, k_tel, k_eval = jax.random.split(key, 6)
-
-        hist = self._histograms(data_cfg, round_idx)
-        decision = schedule_round(sched_state, telemetry, hist, cfg.scheduler)
-
-        # --- policy-specific participation --------------------------- #
         if cfg.policy == "fedfog":
             mask = decision.selection.mask
             if cfg.top_k is not None:
-                from repro.core.selection import topk_mask
-
                 mask = topk_mask(decision.selection.utility, mask, cfg.top_k)
         elif cfg.policy == "rcs":
-            mask = random_selection_mask(k_sel, n, cfg.top_k or n)
+            mask = random_selection_mask(
+                k_sel, cfg.num_clients, cfg.top_k or cfg.num_clients
+            )
         else:  # fogfaas / vanilla: everyone alive participates
             mask = telemetry.batt > 0.05
+        return mask
 
-        # --- local training over ALL clients (vmapped), masked ------- #
+    def _local_deltas(self, data_cfg, params, round_idx, mask, malicious,
+                      k_data, k_attack):
+        """Vmapped local training over ALL clients + clip/attack/compression.
+
+        Returns ``(deltas, mask)`` — ``mask`` may shrink under the dropout
+        attack. Shared by both engines: the sync round computes and
+        aggregates in the same step; the async engine computes at dispatch
+        time and aggregates at completion/flush time.
+        """
+        cfg = self.cfg
+        n = cfg.num_clients
         cids = jnp.arange(n)
         deltas = jax.vmap(
             lambda cid, k, m: self._client_update(
@@ -280,8 +286,6 @@ class FedFogSimulator:
         )(cids, jax.random.split(k_data, n), malicious)
 
         if cfg.clip_norm > 0:
-            from repro.optim import clip_by_global_norm
-
             deltas = jax.vmap(lambda d: clip_by_global_norm(d, cfg.clip_norm)[0])(
                 deltas
             )
@@ -293,6 +297,42 @@ class FedFogSimulator:
             )
             mask = attacks_mod.dropout_mask(mask, malicious, cfg.attack)
         deltas = apply_compression(deltas, cfg.compression)
+        return deltas, mask
+
+    def _round_workload(self):
+        """(workload_flops, upload_bytes, download_bytes) per client-round."""
+        cfg = self.cfg
+        workload = 6.0 * self.n_params * cfg.local_batch * cfg.local_epochs
+        up_bytes = wire_bytes_per_param(cfg.compression) * self.n_params
+        return workload, up_bytes, 2.0 * self.n_params
+
+    def _eval_accuracy(self, data_cfg, params, k_eval):
+        """Held-out accuracy on a 512-sample eval batch."""
+        ev = (
+            emnist_like.eval_batch(data_cfg, k_eval, 512)
+            if self.cfg.task == "emnist"
+            else har_like.eval_batch(data_cfg, k_eval, 512)
+        )
+        logits = mlp_apply(params, ev[0])
+        return jnp.mean((jnp.argmax(logits, -1) == ev[1]).astype(jnp.float32))
+
+    # ------------------------------------------------------------------ #
+    def _round(self, env, params, sched_state, telemetry, round_idx, key):
+        """One synchronous FL round — pure function of its arguments, so it
+        is equally valid as a jitted step, a ``lax.scan`` body, and a
+        vmapped-per-seed program."""
+        cfg = self.cfg
+        data_cfg = dataclasses.replace(self.data_cfg, seed=env["data_seed"])
+        malicious = env["malicious"]
+        k_sel, k_data, k_attack, k_dp, k_tel, k_eval = jax.random.split(key, 6)
+
+        hist = self._histograms(data_cfg, round_idx)
+        decision = schedule_round(sched_state, telemetry, hist, cfg.scheduler)
+
+        mask = self._participation(decision, telemetry, k_sel)
+        deltas, mask = self._local_deltas(
+            data_cfg, params, round_idx, mask, malicious, k_data, k_attack
+        )
 
         agg = agg_mod.fedavg_stacked(deltas, mask, env["data_sizes"])
         if cfg.dp_sigma > 0:
@@ -308,14 +348,12 @@ class FedFogSimulator:
         )
 
         # --- DES: latency + energy (§IV.F, shared RoundCostModel) ----- #
-        workload = 6.0 * self.n_params * cfg.local_batch * cfg.local_epochs
-        up_bytes = wire_bytes_per_param(cfg.compression) * self.n_params
+        workload, up_bytes, down_bytes = self._round_workload()
         warm = sched_state.warm
         if cfg.policy in ("fogfaas",):
             warm = jnp.zeros_like(warm)  # naive platform: no keep-alive
         costs = self.cost_model.round_costs(
-            env["profiles"], mask, warm, workload, up_bytes,
-            2.0 * self.n_params,
+            env["profiles"], mask, warm, workload, up_bytes, down_bytes,
             policy="fedfog" if cfg.policy in ("fedfog", "rcs", "vanilla") else "fogfaas",
         )
 
@@ -324,14 +362,7 @@ class FedFogSimulator:
             self.tel_cfg, telemetry, mask, costs.energy_j, env["profiles"], k_tel
         )
 
-        # --- eval ------------------------------------------------------ #
-        ev = (
-            emnist_like.eval_batch(data_cfg, k_eval, 512)
-            if cfg.task == "emnist"
-            else har_like.eval_batch(data_cfg, k_eval, 512)
-        )
-        logits = mlp_apply(new_params, ev[0])
-        acc = jnp.mean((jnp.argmax(logits, -1) == ev[1]).astype(jnp.float32))
+        acc = self._eval_accuracy(data_cfg, new_params, k_eval)
 
         metrics = {
             "accuracy": acc,

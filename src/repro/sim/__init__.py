@@ -7,7 +7,13 @@ Layering (see each module's docstring):
                and pod-scale ``make_round_fn``).
     faas.py  — legacy function-style façade over the cost model.
     sweep.py — ``run_sweep``: vmap-over-seeds / grid-over-configs driver
-               for the scan-compiled simulator engine.
+               for the scan-compiled simulator engine and the event-driven
+               async engine (``engine="async"``).
+    events/  — event-driven asynchronous FL engine (virtual-clock queue,
+               staleness-aware buffered aggregation, churn). Imported as
+               ``repro.sim.events`` — intentionally NOT re-exported here,
+               because its engine imports ``repro.fl.simulator`` which in
+               turn imports ``repro.sim.des`` (import-cycle hygiene).
 """
 from repro.sim.des import FaasSimConfig, RoundCostModel, RoundCosts
 from repro.sim.faas import round_energy_j, round_times_ms

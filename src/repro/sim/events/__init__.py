@@ -1,0 +1,53 @@
+"""Event-driven asynchronous FL engine (virtual-clock DES).
+
+Layering:
+
+    queue.py     — fixed-capacity masked event queue: parallel
+                   ``(time, client, kind, payload)`` arrays with argmin-pop
+                   and shape-static push, usable inside ``lax.scan``.
+    staleness.py — staleness-discounted generalization of the Eq. 6
+                   weighted average (FedAsync / FedBuff server rules).
+    churn.py     — client arrival/departure + battery-death availability
+                   processes layered on ``data/telemetry.py``.
+    engine.py    — ``AsyncFedFogSimulator``: the continuous-virtual-clock
+                   event loop sharing the sync simulator's client-update,
+                   scheduler-gating, and ``RoundCostModel`` code.
+
+Import note: ``engine`` imports ``repro.fl.simulator``; keep this package
+out of ``repro.sim.__init__`` so ``repro.fl.simulator → repro.sim.des``
+does not become circular.
+"""
+from repro.sim.events.churn import ChurnConfig, available_mask, step_churn
+from repro.sim.events.engine import AsyncConfig, AsyncFedFogSimulator
+from repro.sim.events.queue import (
+    KIND_COMPLETE,
+    KIND_DISPATCH,
+    EventQueue,
+    make_queue,
+    pop_event,
+    push_event,
+    push_events,
+)
+from repro.sim.events.staleness import (
+    async_aggregate,
+    stale_discount,
+    staleness_weights,
+)
+
+__all__ = [
+    "AsyncConfig",
+    "AsyncFedFogSimulator",
+    "ChurnConfig",
+    "EventQueue",
+    "KIND_COMPLETE",
+    "KIND_DISPATCH",
+    "async_aggregate",
+    "available_mask",
+    "make_queue",
+    "pop_event",
+    "push_event",
+    "push_events",
+    "stale_discount",
+    "staleness_weights",
+    "step_churn",
+]

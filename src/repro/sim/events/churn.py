@@ -1,0 +1,58 @@
+"""Client churn & availability processes for the async engine.
+
+Layered on ``data/telemetry.py``: telemetry supplies the battery signal,
+this module supplies the *presence* signal. Each client is an independent
+two-state continuous-time Markov process (online/offline) with exponential
+holding times, stepped lazily at event times:
+
+    P(depart in dt | online)  = 1 - exp(-departure_rate · dt)
+    P(arrive in dt | offline) = 1 - exp(-arrival_rate  · dt)
+
+with dt in virtual seconds. A client is *available* for dispatch when it
+is online AND its battery is above the death threshold — matching the
+sync engine's "everyone alive" rule (``batt > 0.05``). Clients that
+become unavailable while an update is in flight are stragglers that never
+report: the engine cancels their COMPLETE events.
+
+Rates of 0 (the default) disable churn entirely — ``step_churn`` is then
+the identity, which is what the async-vs-sync equivalence tests rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    arrival_rate: float = 0.0  # offline→online events per virtual second
+    departure_rate: float = 0.0  # online→offline events per virtual second
+    death_batt: float = 0.05  # battery level below which a client is dead
+    initial_online_frac: float = 1.0  # fraction online at t=0
+
+
+def init_online(cfg: ChurnConfig, num_clients: int, key: Array) -> Array:
+    """(N,) bool initial presence mask."""
+    if cfg.initial_online_frac >= 1.0:
+        return jnp.ones((num_clients,), bool)
+    return jax.random.uniform(key, (num_clients,)) < cfg.initial_online_frac
+
+
+def step_churn(cfg: ChurnConfig, online: Array, dt_ms: Array, key: Array) -> Array:
+    """Advance the presence process by ``dt_ms`` virtual milliseconds."""
+    if cfg.arrival_rate == 0.0 and cfg.departure_rate == 0.0:
+        return online
+    dt_s = jnp.maximum(jnp.asarray(dt_ms, jnp.float32), 0.0) * 1e-3
+    p_depart = 1.0 - jnp.exp(-cfg.departure_rate * dt_s)
+    p_arrive = 1.0 - jnp.exp(-cfg.arrival_rate * dt_s)
+    u = jax.random.uniform(key, online.shape)
+    return jnp.where(online, u >= p_depart, u < p_arrive)
+
+
+def available_mask(cfg: ChurnConfig, online: Array, batt: Array) -> Array:
+    """Online AND battery above the death threshold."""
+    return online & (batt > cfg.death_batt)

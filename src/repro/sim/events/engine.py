@@ -1,0 +1,574 @@
+"""``AsyncFedFogSimulator`` — event-driven asynchronous FL on a virtual clock.
+
+Where ``FedFogSimulator`` runs synchronous rounds (the straggler defines
+the round via ``max(per_client_ms)`` and nothing ever arrives late), this
+engine advances a continuous virtual clock through a fixed-capacity event
+queue (``queue.py``):
+
+  * DISPATCH events admit clients through the *same* ``schedule_round``
+    gating + policy participation as the sync engine, compute their local
+    updates against the current global model (shared
+    ``FedFogSimulator._local_deltas``), and schedule one COMPLETE event
+    per admitted client at a per-client arrival time drawn from the
+    shared ``RoundCostModel.times_ms`` plus an optional lognormal
+    straggler tail.
+  * COMPLETE events move the client's update into the server buffer. The
+    server flushes the buffer — the staleness-discounted Eq. 6
+    generalization in ``staleness.py`` — either when it holds
+    ``buffer_k`` updates (FedBuff) / every update (``buffer_k=1``,
+    FedAsync), or when nothing is left in flight.
+  * Churn (``churn.py``): clients arrive/depart and die on battery
+    between events; a client that becomes unavailable mid-flight never
+    reports (its COMPLETE event is cancelled).
+
+The whole loop is one ``lax.scan`` over ``max_events`` queue pops with a
+``lax.switch`` on the event kind — jit-compiled once, vmappable over
+seeds (``repro.sim.sweep.run_sweep(engine="async")``).
+
+Sync recovery: with ``dispatch_mode="on_flush"``, no churn, no straggler
+tail, ``buffer_k=None`` (flush when the cohort drains) and
+``staleness_exponent=0``, every dispatch behaves exactly like one
+synchronous round — the accuracy trajectory matches ``run_scanned()`` to
+float tolerance (tests/test_async_engine.py). The async machinery is a
+strict generalization, not a parallel implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import privacy as privacy_mod
+from repro.core.scheduler import account_energy, schedule_round
+from repro.data.telemetry import step_telemetry
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.sim.events.churn import (
+    ChurnConfig,
+    available_mask,
+    init_online,
+    step_churn,
+)
+from repro.sim.events.queue import (
+    KIND_COMPLETE,
+    KIND_DISPATCH,
+    cancel_events,
+    make_queue,
+    pop_event,
+    push_event,
+    push_events,
+)
+from repro.sim.events.staleness import async_aggregate
+
+Array = jax.Array
+
+_FLUSH_METRICS = (
+    "t_ms", "accuracy", "num_aggregated", "mean_staleness", "energy_j",
+    "update_latency_ms", "cold_starts",
+)
+_DISPATCH_METRICS = ("t_ms", "num_admitted", "num_available", "cold_starts")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Event-engine knobs, orthogonal to the shared ``SimulatorConfig``.
+
+    ``buffer_k``: server buffer size K. ``1`` aggregates every arriving
+    update immediately (FedAsync); ``K>1`` waits for K updates (FedBuff);
+    ``None`` disables count-triggered flushes — combined with
+    ``flush_on_idle`` that means "flush when the cohort drains", the
+    synchronous-equivalent configuration.
+
+    ``dispatch_mode``: ``"on_flush"`` schedules the next DISPATCH when a
+    flush happens (sequential cohorts, sync-like); ``"interval"``
+    dispatches on a fixed virtual cadence so cohorts overlap and
+    staleness actually accrues.
+    """
+
+    max_dispatches: int | None = None  # default: SimulatorConfig.rounds
+    dispatch_mode: str = "on_flush"  # "on_flush" | "interval"
+    dispatch_interval_ms: float = 5000.0
+    buffer_k: int | None = None  # 1=FedAsync, K>1=FedBuff, None=cohort
+    flush_on_idle: bool = True  # flush leftovers when nothing is in flight
+    staleness_exponent: float = 0.5  # a in (1+s)^-a; 0 = no discount
+    straggler_sigma: float = 0.0  # lognormal tail on per-client latency
+    horizon_ms: float | None = None  # stop dispatching past this time
+    churn: ChurnConfig = dataclasses.field(default_factory=ChurnConfig)
+    queue_capacity: int | None = None  # default: num_clients + 8
+    max_events: int | None = None  # default: max_dispatches*(N+1)+2
+
+    @classmethod
+    def fedasync(cls, **kw) -> "AsyncConfig":
+        """Immediate staleness-weighted application of every update."""
+        kw.setdefault("buffer_k", 1)
+        kw.setdefault("dispatch_mode", "interval")
+        return cls(**kw)
+
+    @classmethod
+    def fedbuff(cls, k: int = 8, **kw) -> "AsyncConfig":
+        """Buffered aggregation: flush every ``k`` arrived updates."""
+        kw.setdefault("buffer_k", k)
+        kw.setdefault("dispatch_mode", "interval")
+        return cls(**kw)
+
+
+class AsyncState(NamedTuple):
+    """Full event-loop carry — a pytree, so the loop scans and vmaps."""
+
+    queue: Any
+    t_ms: Array  # () virtual clock
+    key: Array  # dispatch-round key chain (mirrors the sync engine)
+    env: Any  # profiles / data_sizes / malicious / data_seed
+    params: Any
+    sched: Any  # SchedulerState
+    tel: Any  # ClientTelemetry
+    online: Array  # (N,) churn presence
+    version: Array  # () global model version (increments per flush)
+    dispatch_idx: Array  # () dispatches so far
+    flush_idx: Array  # () flushes so far
+    completions: Array  # () updates arrived so far
+    lost_inflight: Array  # () in-flight updates killed by churn
+    busy: Array  # (N,) update in flight
+    buf: Array  # (N,) completed, awaiting aggregation
+    pending: Any  # (N, ...) delta stored at dispatch time
+    pend_version: Array  # (N,) model version the delta was computed at
+    pend_energy: Array  # (N,) Joules of the in-flight update
+    pend_t: Array  # (N,) dispatch time of the in-flight update
+    last_disp_t: Array  # () time of the latest dispatch
+    last_cold: Array  # () cold starts of the latest dispatch
+    k_dp: Array  # keys captured at the latest dispatch, consumed at flush
+    k_tel: Array
+    k_eval: Array
+    key_uses: Array  # () flushes that already consumed the stored keys
+    m_flush: Any  # dict of (max_flushes,) metric arrays
+    m_dispatch: Any  # dict of (max_dispatches,) metric arrays
+
+
+class AsyncFedFogSimulator:
+    """Event-driven engine wrapping (and sharing code with) the sync one.
+
+    Composition: ``self.sim`` is a ``FedFogSimulator(defer_state=True)``
+    providing ``init_state`` / ``_histograms`` / ``_participation`` /
+    ``_local_deltas`` / ``_eval_accuracy`` and the shared
+    ``RoundCostModel`` — the async engine adds only the event mechanics.
+    """
+
+    def __init__(self, cfg: SimulatorConfig, async_cfg: AsyncConfig | None = None):
+        self.cfg = cfg
+        self.acfg = async_cfg or AsyncConfig()
+        if self.acfg.dispatch_mode not in ("on_flush", "interval"):
+            raise ValueError(f"unknown dispatch_mode {self.acfg.dispatch_mode!r}")
+        self.sim = FedFogSimulator(cfg, defer_state=True)
+        n = cfg.num_clients
+        self.max_dispatches = int(self.acfg.max_dispatches or cfg.rounds)
+        self.capacity = int(self.acfg.queue_capacity or n + 8)
+        # One dispatch pops 1 event and enqueues ≤ N completions; flushes
+        # are inline (not events). So D·(N+1)+2 pops always drain the run.
+        self.max_events = int(
+            self.acfg.max_events or self.max_dispatches * (n + 1) + 2
+        )
+        self.max_flushes = self.max_events  # flushes ≤ dispatches+completions
+        self._scan_jit = jax.jit(self._scan_events)
+
+    # ------------------------------------------------------------------ #
+    def init_state(self, seed) -> AsyncState:
+        """Functional, seed-traceable initial state (vmappable)."""
+        cfg, n = self.cfg, self.cfg.num_clients
+        env, params, sched, tel = self.sim.init_state(seed)
+        key = jax.random.PRNGKey(jnp.asarray(seed, jnp.int32) + 100)
+        online = init_online(
+            self.acfg.churn, n, jax.random.fold_in(key, 2718)
+        )
+        queue = push_event(make_queue(self.capacity), 0.0, -1, KIND_DISPATCH)
+        pending = jax.tree.map(
+            lambda p: jnp.zeros((n,) + p.shape, p.dtype), params
+        )
+        zero = jnp.zeros((), jnp.float32)
+        zi = jnp.zeros((), jnp.int32)
+        return AsyncState(
+            queue=queue,
+            t_ms=zero,
+            key=key,
+            env=env,
+            params=params,
+            sched=sched,
+            tel=tel,
+            online=online,
+            version=zi,
+            dispatch_idx=zi,
+            flush_idx=zi,
+            completions=zi,
+            lost_inflight=zi,
+            busy=jnp.zeros((n,), bool),
+            buf=jnp.zeros((n,), bool),
+            pending=pending,
+            pend_version=jnp.zeros((n,), jnp.int32),
+            pend_energy=jnp.zeros((n,), jnp.float32),
+            pend_t=jnp.zeros((n,), jnp.float32),
+            last_disp_t=zero,
+            last_cold=zi,
+            k_dp=key,
+            k_tel=key,
+            k_eval=key,
+            key_uses=zi,
+            m_flush={
+                k: jnp.zeros((self.max_flushes,), jnp.float32)
+                for k in _FLUSH_METRICS + ("valid",)
+            },
+            m_dispatch={
+                k: jnp.zeros((self.max_dispatches,), jnp.float32)
+                for k in _DISPATCH_METRICS
+            },
+        )
+
+    # ------------------------------------------------------------------ #
+    def _data_cfg(self, state):
+        return dataclasses.replace(
+            self.sim.data_cfg, seed=state.env["data_seed"]
+        )
+
+    def _more_dispatches(self, state, t_next):
+        """Whether another DISPATCH may be scheduled at ``t_next``."""
+        more = state.dispatch_idx < self.max_dispatches
+        if self.acfg.horizon_ms is not None:
+            more = more & (t_next <= self.acfg.horizon_ms)
+        return more
+
+    def _flush(self, state: AsyncState) -> AsyncState:
+        """Aggregate the buffer into the global model (one server step).
+
+        Mirrors the tail of the sync round: staleness-generalized Eq. 6,
+        optional DP noise, server step, Eq. 10 energy accounting,
+        telemetry step, eval — consuming the keys captured at the latest
+        dispatch so the cohort configuration reproduces ``_round``.
+        """
+        cfg, acfg = self.cfg, self.acfg
+        buf = state.buf
+        staleness = (state.version - state.pend_version).astype(jnp.float32)
+        agg = async_aggregate(
+            state.pending, buf, state.env["data_sizes"], staleness,
+            acfg.staleness_exponent,
+        )
+        # The first flush after a dispatch consumes that dispatch's keys
+        # verbatim (this is what makes cohort mode reproduce the sync
+        # round); repeat flushes before the next dispatch fold in the use
+        # count so DP noise / telemetry / eval draws stay independent.
+        uses = state.key_uses
+
+        def fresh(k):
+            return jnp.where(uses == 0, k, jax.random.fold_in(k, uses))
+
+        if cfg.dp_sigma > 0:
+            agg = privacy_mod.gaussian_mechanism(
+                agg,
+                fresh(state.k_dp),
+                privacy_mod.DPConfig(
+                    sigma=cfg.dp_sigma, sensitivity=cfg.clip_norm or 1.0
+                ),
+            )
+        params = jax.tree.map(
+            lambda p, a: p + cfg.server_lr * a, state.params, agg
+        )
+        energy = state.pend_energy * buf
+        sched = account_energy(state.sched, energy, cfg.scheduler)
+        tel = step_telemetry(
+            self.sim.tel_cfg, state.tel, buf, energy, state.env["profiles"],
+            fresh(state.k_tel),
+        )
+        acc = self.sim._eval_accuracy(
+            self._data_cfg(state), params, fresh(state.k_eval)
+        )
+
+        count = jnp.sum(buf.astype(jnp.float32))
+        f = state.flush_idx
+        vals = {
+            "t_ms": state.t_ms,
+            "accuracy": acc,
+            "num_aggregated": count,
+            "mean_staleness": jnp.sum(staleness * buf) / jnp.maximum(count, 1.0),
+            "energy_j": jnp.sum(energy),
+            "update_latency_ms": jnp.max(
+                jnp.where(buf, state.t_ms - state.pend_t, 0.0)
+            ),
+            "cold_starts": state.last_cold.astype(jnp.float32),
+            "valid": jnp.ones((), jnp.float32),
+        }
+        m_flush = {
+            k: v.at[f].set(jnp.asarray(vals[k], jnp.float32), mode="drop")
+            for k, v in state.m_flush.items()
+        }
+        queue = state.queue
+        if acfg.dispatch_mode == "on_flush":
+            # Next cohort starts when this one is aggregated — unless a
+            # DISPATCH is already queued (possible under buffer_k flushes).
+            queued = jnp.any(
+                queue.valid & (queue.kind == KIND_DISPATCH)
+            )
+            queue = push_event(
+                queue, state.t_ms, -1, KIND_DISPATCH,
+                enable=self._more_dispatches(state, state.t_ms) & ~queued,
+            )
+        return state._replace(
+            queue=queue,
+            params=params,
+            sched=sched,
+            tel=tel,
+            version=state.version + 1,
+            flush_idx=f + 1,
+            key_uses=uses + 1,
+            buf=jnp.zeros_like(buf),
+            m_flush=m_flush,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _on_dispatch(self, state: AsyncState, ev) -> AsyncState:
+        cfg, acfg = self.cfg, self.acfg
+        n = cfg.num_clients
+        d = state.dispatch_idx
+
+        # Key chain mirrors the sync engine exactly: the same six per-round
+        # subkeys, with engine-only keys derived via fold_in so they do not
+        # perturb the shared streams.
+        key, k = jax.random.split(state.key)
+        k_sel, k_data, k_attack, k_dp, k_tel, k_eval = jax.random.split(k, 6)
+        k_churn = jax.random.fold_in(k, 101)
+        k_strag = jax.random.fold_in(k, 102)
+
+        # --- churn & availability (between-events process) ------------- #
+        online = step_churn(
+            acfg.churn, state.online, state.t_ms - state.last_disp_t, k_churn
+        )
+        avail = available_mask(acfg.churn, online, state.tel.batt)
+        lost = state.busy & ~avail  # stragglers that will never report
+        queue = cancel_events(state.queue, lost, KIND_COMPLETE)
+        busy = state.busy & ~lost
+
+        # --- scheduler gating + policy participation (shared code) ----- #
+        data_cfg = self._data_cfg(state)
+        hist = self.sim._histograms(data_cfg, d)
+        decision = schedule_round(state.sched, state.tel, hist, cfg.scheduler)
+        mask = self.sim._participation(decision, state.tel, k_sel)
+        admitted = mask & avail & ~busy & ~state.buf
+        deltas, admitted = self.sim._local_deltas(
+            data_cfg, state.params, d, admitted, state.env["malicious"],
+            k_data, k_attack,
+        )
+
+        # --- per-client arrival times (shared cost model + tail) ------- #
+        workload, up_bytes, down_bytes = self.sim._round_workload()
+        warm = state.sched.warm
+        if cfg.policy in ("fogfaas",):
+            warm = jnp.zeros_like(warm)
+        costs = self.sim.cost_model.round_costs(
+            state.env["profiles"], admitted, warm, workload, up_bytes,
+            down_bytes,
+            policy="fedfog" if cfg.policy in ("fedfog", "rcs", "vanilla")
+            else "fogfaas",
+        )
+        per_client_ms = costs.per_client_ms
+        if acfg.straggler_sigma > 0:
+            per_client_ms = per_client_ms * jnp.exp(
+                acfg.straggler_sigma * jax.random.normal(k_strag, (n,))
+            )
+        queue = push_events(
+            queue,
+            state.t_ms + per_client_ms,
+            jnp.arange(n),
+            jnp.full((n,), KIND_COMPLETE),
+            jnp.full((n,), state.t_ms),
+            admitted,
+        )
+
+        # --- stash in-flight work -------------------------------------- #
+        def keep(old, new):
+            m = admitted.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        pending = jax.tree.map(keep, state.pending, deltas)
+        state = state._replace(
+            queue=queue,
+            key=key,
+            sched=decision.new_state,
+            online=online,
+            busy=busy | admitted,
+            pending=pending,
+            pend_version=jnp.where(admitted, state.version, state.pend_version),
+            pend_energy=jnp.where(admitted, costs.energy_j, state.pend_energy),
+            pend_t=jnp.where(admitted, state.t_ms, state.pend_t),
+            lost_inflight=state.lost_inflight
+            + jnp.sum(lost.astype(jnp.int32)),
+            last_disp_t=state.t_ms,
+            last_cold=costs.cold_starts,
+            dispatch_idx=d + 1,
+            k_dp=k_dp,
+            k_tel=k_tel,
+            k_eval=k_eval,
+            key_uses=jnp.zeros((), jnp.int32),
+        )
+
+        n_admitted = jnp.sum(admitted.astype(jnp.float32))
+        vals = {
+            "t_ms": state.t_ms,
+            "num_admitted": n_admitted,
+            "num_available": jnp.sum(avail.astype(jnp.float32)),
+            "cold_starts": costs.cold_starts.astype(jnp.float32),
+        }
+        state = state._replace(
+            m_dispatch={
+                k: v.at[d].set(vals[k], mode="drop")
+                for k, v in state.m_dispatch.items()
+            }
+        )
+
+        if acfg.dispatch_mode == "interval":
+            t_next = state.t_ms + acfg.dispatch_interval_ms
+            state = state._replace(
+                queue=push_event(
+                    state.queue, t_next, -1, KIND_DISPATCH,
+                    enable=self._more_dispatches(state, t_next),
+                )
+            )
+        else:
+            # Empty cohort: nothing will ever complete, so the round's
+            # server step (eval / telemetry / DP — exactly what the sync
+            # round does with an empty mask) happens right here, and it
+            # schedules the next dispatch.
+            state = jax.lax.cond(
+                n_admitted == 0, self._flush, lambda s: s, state
+            )
+        return state
+
+    def _on_complete(self, state: AsyncState, ev) -> AsyncState:
+        acfg = self.acfg
+        c = jnp.clip(ev.client, 0, self.cfg.num_clients - 1)
+        is_c = jnp.arange(self.cfg.num_clients) == c
+        arrived = state.busy[c]  # stale events were cancelled, but be safe
+        busy = state.busy & ~(is_c & arrived)
+        buf = state.buf | (is_c & arrived)
+        state = state._replace(
+            busy=busy,
+            buf=buf,
+            completions=state.completions + arrived.astype(jnp.int32),
+        )
+        count = jnp.sum(buf.astype(jnp.int32))
+        flush_now = jnp.zeros((), bool)
+        if acfg.buffer_k is not None:
+            flush_now = flush_now | (count >= acfg.buffer_k)
+        if acfg.flush_on_idle:
+            flush_now = flush_now | (~jnp.any(busy) & (count > 0))
+        return jax.lax.cond(flush_now, self._flush, lambda s: s, state)
+
+    # ------------------------------------------------------------------ #
+    def _scan_events(self, state: AsyncState) -> AsyncState:
+        """The whole experiment: ``max_events`` queue pops in one scan."""
+
+        def step(state, _):
+            ev, q = pop_event(state.queue)
+            state = state._replace(
+                queue=q,
+                t_ms=jnp.where(
+                    ev.valid, jnp.maximum(ev.time, state.t_ms), state.t_ms
+                ),
+            )
+            branch = jnp.where(
+                ev.valid,
+                jnp.where(ev.kind == KIND_DISPATCH, 1, 2),
+                0,
+            )
+            state = jax.lax.switch(
+                branch,
+                [lambda s, e: s, self._on_dispatch, self._on_complete],
+                state,
+                ev,
+            )
+            return state, None
+
+        state, _ = jax.lax.scan(step, state, None, length=self.max_events)
+        return state
+
+    def metrics_for_seed(self, seed):
+        """Traceable seed → stacked flush-metric arrays (the sweep hook).
+
+        Includes a ``queue_dropped`` scalar so the sweep layer can raise
+        on queue overflow the same way ``run()`` does.
+        """
+        final = self._scan_events(self.init_state(seed))
+        return {**final.m_flush, "queue_dropped": final.queue.dropped}
+
+    # ------------------------------------------------------------------ #
+    def run(self, seed: int | None = None) -> dict[str, Any]:
+        """Execute one async experiment; returns a history dict.
+
+        Per-flush metric lists (trimmed to the actual flush count) plus
+        per-dispatch lists (``dispatch_*``) and summary scalars.
+        """
+        state = self.init_state(self.cfg.seed if seed is None else seed)
+        final = self._scan_jit(state)
+        host = jax.device_get(
+            (final.m_flush, final.m_dispatch,
+             final.flush_idx, final.dispatch_idx, final.t_ms,
+             final.completions, final.lost_inflight, final.queue.dropped)
+        )
+        m_flush, m_disp, n_f, n_d, t_ms, n_c, n_lost, dropped = host
+        n_f, n_d = int(n_f), int(n_d)
+        if int(dropped):
+            raise RuntimeError(
+                f"event queue overflowed ({int(dropped)} dropped); raise "
+                f"AsyncConfig.queue_capacity above {self.capacity}"
+            )
+        history: dict[str, Any] = {
+            k: [float(x) for x in v[:n_f]] for k, v in m_flush.items()
+            if k != "valid"
+        }
+        for k, v in m_disp.items():
+            history[f"dispatch_{k}"] = [float(x) for x in v[:n_d]]
+        history["num_dispatches"] = n_d
+        history["num_flushes"] = n_f
+        history["num_completions"] = int(n_c)
+        history["lost_inflight"] = int(n_lost)
+        history["virtual_time_ms"] = float(t_ms)
+        acc = history["accuracy"]
+        history["final_accuracy"] = acc[-1] if acc else 0.0
+        history["peak_accuracy"] = max(acc) if acc else 0.0
+        history["total_energy_j"] = sum(history["energy_j"])
+        return history
+
+
+def _smoke(argv=None) -> None:
+    """CLI smoke: a short virtual-horizon async run (used by scripts/ci.sh)."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--horizon-ms", type=float, default=2000.0)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--buffer-k", type=int, default=4)
+    ap.add_argument("--interval-ms", type=float, default=250.0)
+    args = ap.parse_args(argv)
+
+    sim = AsyncFedFogSimulator(
+        SimulatorConfig(
+            task="emnist", num_clients=args.clients, rounds=64, top_k=8,
+            hidden=(32,), seed=0,
+        ),
+        AsyncConfig.fedbuff(
+            args.buffer_k,
+            dispatch_interval_ms=args.interval_ms,
+            horizon_ms=args.horizon_ms,
+            straggler_sigma=0.3,
+            churn=ChurnConfig(arrival_rate=0.05, departure_rate=0.05),
+        ),
+    )
+    h = sim.run()
+    print(
+        f"async smoke: horizon={args.horizon_ms:.0f}ms "
+        f"dispatches={h['num_dispatches']} flushes={h['num_flushes']} "
+        f"completions={h['num_completions']} lost={h['lost_inflight']} "
+        f"final_acc={h['final_accuracy']:.3f} "
+        f"virtual_t={h['virtual_time_ms']:.0f}ms"
+    )
+    assert h["num_flushes"] > 0 and h["num_dispatches"] > 0
+
+
+if __name__ == "__main__":
+    _smoke()

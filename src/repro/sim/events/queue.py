@@ -1,0 +1,170 @@
+"""Fixed-capacity masked event queue for jit/scan-compiled DES loops.
+
+A priority queue keyed on virtual time, stored as parallel arrays of a
+static capacity ``C`` so every operation is shape-static and therefore
+legal inside ``jax.lax.scan`` / ``while_loop`` bodies:
+
+    time    (C,) float32 — event firing time (virtual ms); +inf when free
+    client  (C,) int32   — client id (-1 for server-side events)
+    kind    (C,) int32   — event kind (KIND_DISPATCH / KIND_COMPLETE / ...)
+    payload (C,) float32 — one scalar of event data (e.g. dispatch time)
+    valid   (C,) bool    — slot occupancy mask
+    dropped () int32     — events lost to capacity overflow (should be 0
+                           when capacity is sized to the workload)
+
+``push_event`` writes into the first free slot (``argmin(valid)``);
+``pop_event`` removes the earliest valid event (``argmin`` over masked
+times — ties break on the lowest slot index, so pop order is fully
+deterministic). Both are pure: they return a new ``EventQueue``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Event kinds understood by the async engine. Extra kinds are fine — the
+# queue itself is agnostic; only the engine's `lax.switch` cares.
+KIND_DISPATCH = 0  # server admits a cohort through the scheduler gate
+KIND_COMPLETE = 1  # one client's update arrives at the server
+
+
+class EventQueue(NamedTuple):
+    """Pytree of parallel event arrays (see module docstring)."""
+
+    time: Array  # (C,) f32
+    client: Array  # (C,) i32
+    kind: Array  # (C,) i32
+    payload: Array  # (C,) f32
+    valid: Array  # (C,) bool
+    dropped: Array  # () i32
+
+    @property
+    def capacity(self) -> int:
+        return self.time.shape[0]
+
+
+class Event(NamedTuple):
+    """One popped event. ``valid`` is False when the queue was empty —
+    the other fields are then meaningless and the caller must no-op."""
+
+    time: Array  # () f32
+    client: Array  # () i32
+    kind: Array  # () i32
+    payload: Array  # () f32
+    valid: Array  # () bool
+
+
+def make_queue(capacity: int) -> EventQueue:
+    """An empty queue with ``capacity`` slots."""
+    return EventQueue(
+        time=jnp.full((capacity,), jnp.inf, jnp.float32),
+        client=jnp.full((capacity,), -1, jnp.int32),
+        kind=jnp.full((capacity,), -1, jnp.int32),
+        payload=jnp.zeros((capacity,), jnp.float32),
+        valid=jnp.zeros((capacity,), bool),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def push_event(
+    q: EventQueue,
+    time: Array | float,
+    client: Array | int,
+    kind: Array | int,
+    payload: Array | float = 0.0,
+    enable: Array | bool = True,
+) -> EventQueue:
+    """Insert one event (no-op when ``enable`` is False).
+
+    Shape-static: writes the first free slot. A full queue drops the event
+    and increments ``dropped`` rather than erroring — capacity should be
+    sized so this never fires (the engine asserts on it host-side).
+    """
+    enable = jnp.asarray(enable, bool)
+    free = ~q.valid
+    has_free = jnp.any(free)
+    slot = jnp.argmin(q.valid)  # first False (free) slot; 0 if full
+    do = enable & has_free
+    sel = jnp.arange(q.capacity) == slot
+
+    def put(arr, val):
+        return jnp.where(sel & do, jnp.asarray(val, arr.dtype), arr)
+
+    return EventQueue(
+        time=put(q.time, time),
+        client=put(q.client, client),
+        kind=put(q.kind, kind),
+        payload=put(q.payload, payload),
+        valid=q.valid | (sel & do),
+        dropped=q.dropped + (enable & ~has_free).astype(jnp.int32),
+    )
+
+
+def push_events(
+    q: EventQueue,
+    times: Array,  # (N,) f32
+    clients: Array,  # (N,) i32
+    kinds: Array,  # (N,) i32
+    payloads: Array,  # (N,) f32
+    mask: Array,  # (N,) bool — which of the N candidates to push
+) -> EventQueue:
+    """Masked batch push (a ``lax.scan`` of ``push_event`` over N slots)."""
+
+    def body(q, ev):
+        t, c, k, p, m = ev
+        return push_event(q, t, c, k, p, m), None
+
+    q, _ = jax.lax.scan(
+        body,
+        q,
+        (
+            jnp.asarray(times, jnp.float32),
+            jnp.asarray(clients, jnp.int32),
+            jnp.asarray(kinds, jnp.int32),
+            jnp.asarray(payloads, jnp.float32),
+            jnp.asarray(mask, bool),
+        ),
+    )
+    return q
+
+
+def peek_time(q: EventQueue) -> Array:
+    """Earliest valid event time; +inf when empty."""
+    return jnp.min(jnp.where(q.valid, q.time, jnp.inf))
+
+
+def pop_event(q: EventQueue) -> tuple[Event, EventQueue]:
+    """Remove and return the earliest event (time order, then slot order).
+
+    On an empty queue returns ``Event(valid=False)`` and the queue
+    unchanged — scan bodies branch on ``event.valid``.
+    """
+    keyed = jnp.where(q.valid, q.time, jnp.inf)
+    slot = jnp.argmin(keyed)
+    has = jnp.any(q.valid)
+    ev = Event(
+        time=q.time[slot],
+        client=q.client[slot],
+        kind=q.kind[slot],
+        payload=q.payload[slot],
+        valid=has,
+    )
+    sel = (jnp.arange(q.capacity) == slot) & has
+    return ev, q._replace(valid=q.valid & ~sel)
+
+
+def cancel_events(q: EventQueue, client_mask: Array, kind: Array | int) -> EventQueue:
+    """Invalidate every queued event of ``kind`` whose client is in
+    ``client_mask`` (N,-bool over the client registry) — e.g. kill the
+    pending COMPLETE of a client that churned out mid-flight."""
+    hit = (
+        q.valid
+        & (q.kind == jnp.asarray(kind, jnp.int32))
+        & (q.client >= 0)
+        & client_mask[jnp.clip(q.client, 0, client_mask.shape[0] - 1)]
+    )
+    return q._replace(valid=q.valid & ~hit)

@@ -77,8 +77,22 @@ class SweepResult:
         return self.history[name]
 
     def final(self, name: str) -> np.ndarray:
-        """(G, S) last-round value of a metric."""
-        return self.history[name][..., -1]
+        """(G, S) last-round value of a metric.
+
+        Async-engine histories are padded to a static flush capacity and
+        carry a ``valid`` 0/1 channel; when present, "last" means the
+        last *valid* flush per run, not the padded tail.
+        """
+        h = self.history[name]
+        if "valid" in self.history:
+            v = self.history["valid"] > 0
+            idx = np.where(
+                v.any(axis=-1),
+                v.shape[-1] - 1 - np.argmax(v[..., ::-1], axis=-1),
+                0,
+            )
+            return np.take_along_axis(h, idx[..., None], axis=-1)[..., 0]
+        return h[..., -1]
 
     # -- reductions ---------------------------------------------------- #
     def mean_ci(self, name: str, z: float = 1.96) -> tuple[np.ndarray, np.ndarray]:
@@ -87,6 +101,10 @@ class SweepResult:
         SEM uses the sample std (ddof=1); with a single seed there is no
         uncertainty estimate and the half-width is NaN rather than a
         misleading ±0.
+
+        Only meaningful for round-aligned (sync-engine) histories: async
+        flush histories are padded and per-seed flush times differ, so
+        reduce those with ``final()`` / the ``valid`` mask instead.
         """
         h = self.history[name]
         mean = h.mean(axis=1)
@@ -116,7 +134,7 @@ class SweepResult:
         ``FedFogSimulator.run()`` appends, each shaped (S,)."""
         h = {k: v[g] for k, v in self.history.items()}
         return {
-            "final_accuracy": h["accuracy"][:, -1],
+            "final_accuracy": self.final("accuracy")[g],
             "peak_accuracy": h["accuracy"].max(axis=-1),
             "total_energy_j": h["energy_j"].sum(axis=-1),
             "mean_latency_ms": h["round_latency_ms"].mean(axis=-1),
@@ -131,6 +149,8 @@ def run_sweep(
     cases: Sequence[Mapping[str, Any]] | None = None,
     rounds: int | None = None,
     devices: int | Sequence[Any] | None = None,
+    engine: str = "scan",
+    async_cfg: Any | None = None,
 ) -> SweepResult:
     """Run a (config grid) × (seed batch) × (rounds) sweep.
 
@@ -146,22 +166,33 @@ def run_sweep(
       seeds: the seed batch (vmapped axis).
       axes: cartesian-product grid, e.g. ``{"policy": [...], "top_k": [...]}``.
       cases: explicit list of override dicts (non-product grids); wins
-        over ``axes``.
-      rounds: override ``cfg.rounds``.
+        over ``axes``. With ``engine="async"``, override keys naming
+        ``AsyncConfig`` fields (e.g. ``buffer_k``, ``dispatch_mode``)
+        are routed to the async config instead of ``SimulatorConfig``.
+      rounds: override ``cfg.rounds`` (for ``engine="async"``: the
+        dispatch budget, ``AsyncConfig.max_dispatches``).
       devices: shard the vmapped seed batch across local devices — an int
         (first N of ``jax.devices()``) or an explicit device sequence.
         Each device then runs |seeds|/N independent simulations of every
         grid point in parallel (seeds are padded to a multiple of N and
         the pad rows dropped). Per-seed results are unchanged. None/0/1
         keeps the single-device layout.
+      engine: ``"scan"`` (synchronous scan-compiled rounds) or
+        ``"async"`` (event-driven ``AsyncFedFogSimulator``; histories are
+        then per-*flush* arrays padded to the engine's static flush
+        capacity, with a ``valid`` 0/1 channel marking real entries).
+      async_cfg: base ``AsyncConfig`` for ``engine="async"``.
 
     Returns:
       SweepResult with ``(G, S, R)`` histories.
     """
+    rounds_arg = rounds
     rounds = int(rounds or cfg.rounds)
     seeds_arr = jnp.asarray(list(seeds), jnp.int32)
     if seeds_arr.ndim != 1 or seeds_arr.shape[0] == 0:
         raise ValueError("seeds must be a non-empty 1-D collection of ints")
+    if engine not in ("scan", "async"):
+        raise ValueError(f"unknown engine {engine!r}")
     grid = _grid(axes, cases)
 
     n_seeds = int(seeds_arr.shape[0])
@@ -184,21 +215,45 @@ def run_sweep(
 
     stacked_per_g = []
     for overrides in grid:
-        # defer_state: per-seed state is built inside the compiled program,
-        # so the eager default-seed init would be dead work.
-        sim = FedFogSimulator(
-            dataclasses.replace(cfg, **overrides), defer_state=True
-        )
+        if engine == "async":
+            # Lazy import: events.engine imports repro.fl.simulator, which
+            # itself imports repro.sim.des — keep that cycle out of the
+            # repro.sim package import.
+            from repro.sim.events.engine import AsyncConfig, AsyncFedFogSimulator
 
-        def per_seed(seed, sim=sim):
-            env, params, sched, tel = sim.init_state(seed)
-            key = jax.random.PRNGKey(seed + 100)
-            _, _, _, stacked = sim._scan_rounds(
-                env, params, sched, tel, key, rounds=rounds
+            a_fields = {f.name for f in dataclasses.fields(AsyncConfig)}
+            sim_ov = {k: v for k, v in overrides.items() if k not in a_fields}
+            a_ov = {k: v for k, v in overrides.items() if k in a_fields}
+            # Dispatch budget precedence: explicit rounds= argument, else
+            # the async_cfg's own max_dispatches, else cfg.rounds.
+            base_a = async_cfg or AsyncConfig()
+            budget = (
+                int(rounds_arg) if rounds_arg
+                else int(base_a.max_dispatches or cfg.rounds)
             )
-            return stacked
+            asim = AsyncFedFogSimulator(
+                dataclasses.replace(cfg, **sim_ov),
+                dataclasses.replace(
+                    base_a, **{"max_dispatches": budget, **a_ov}
+                ),
+            )
+            fn = jax.vmap(asim.metrics_for_seed)
+        else:
+            # defer_state: per-seed state is built inside the compiled
+            # program, so the eager default-seed init would be dead work.
+            sim = FedFogSimulator(
+                dataclasses.replace(cfg, **overrides), defer_state=True
+            )
 
-        fn = jax.vmap(per_seed)
+            def per_seed(seed, sim=sim):
+                env, params, sched, tel = sim.init_state(seed)
+                key = jax.random.PRNGKey(seed + 100)
+                _, _, _, stacked = sim._scan_rounds(
+                    env, params, sched, tel, key, rounds=rounds
+                )
+                return stacked
+
+            fn = jax.vmap(per_seed)
         jitted = (
             jax.jit(fn, in_shardings=(seed_sharding,))
             if seed_sharding is not None
@@ -208,6 +263,18 @@ def run_sweep(
         if seeds_in.shape[0] != n_seeds:
             stacked = jax.tree.map(lambda x: x[:n_seeds], stacked)
         stacked_per_g.append(jax.device_get(stacked))  # one transfer / point
+
+    if engine == "async":
+        # Surface queue overflow the same way AsyncFedFogSimulator.run()
+        # does — silent drops would corrupt the flush histories.
+        for overrides, h in zip(grid, stacked_per_g):
+            dropped = np.asarray(h.pop("queue_dropped"))
+            if dropped.any():
+                raise RuntimeError(
+                    f"async event queue overflowed for grid point "
+                    f"{overrides} (max {int(dropped.max())} dropped); "
+                    f"raise AsyncConfig.queue_capacity"
+                )
 
     history = {
         name: np.stack([np.asarray(h[name], np.float64) for h in stacked_per_g])

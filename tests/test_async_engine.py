@@ -1,0 +1,462 @@
+"""Event-driven async engine: queue ordering, sync equivalence, sweeps,
+staleness weighting, and churn.
+
+Acceptance contracts (ISSUE 3):
+  (a) the event queue pops in time order under random push/pop sequences
+      inside jit;
+  (b) an async run with an unbounded buffer, no churn, and zero staleness
+      discount matches the ``run_scanned()`` accuracy trajectory to float
+      tolerance;
+  (c) ``run_sweep(engine="async")`` is deterministic per seed, and seed s
+      of a sweep reproduces a standalone async run.
+Plus hypothesis property tests for the staleness-discounted Eq. 6
+generalization (weights in (0,1], monotone non-increasing, exact FedAvg
+reduction at zero staleness).
+"""
+import dataclasses
+import heapq
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import fedavg_stacked
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.sim import run_sweep
+from repro.sim.events import (
+    AsyncConfig,
+    AsyncFedFogSimulator,
+    ChurnConfig,
+    KIND_COMPLETE,
+    async_aggregate,
+    available_mask,
+    make_queue,
+    pop_event,
+    push_event,
+    push_events,
+    stale_discount,
+    staleness_weights,
+    step_churn,
+)
+from repro.sim.events.queue import cancel_events
+
+
+def _cfg(**kw) -> SimulatorConfig:
+    base = dict(
+        task="emnist", num_clients=8, rounds=4, top_k=4, hidden=(16,), seed=0
+    )
+    base.update(kw)
+    return SimulatorConfig(**base)
+
+
+# --------------------------------------------------------------------- #
+# (a) event queue: time-ordered pops inside jit
+# --------------------------------------------------------------------- #
+def test_queue_pops_sorted_inside_jit():
+    """Push a random batch inside one jitted program, pop everything:
+    pop order must be ascending in time and a permutation of the input."""
+    rng = np.random.RandomState(0)
+    times = rng.uniform(0, 100, size=24).astype(np.float32)
+
+    @jax.jit
+    def run(times):
+        q = make_queue(32)
+        q = push_events(
+            q, times, jnp.arange(24), jnp.zeros(24, jnp.int32),
+            jnp.zeros(24), jnp.ones(24, bool),
+        )
+
+        def body(q, _):
+            ev, q = pop_event(q)
+            return q, (ev.time, ev.client, ev.valid)
+
+        _, (t, c, v) = jax.lax.scan(body, q, None, length=32)
+        return t, c, v
+
+    t, c, v = jax.device_get(run(jnp.asarray(times)))
+    assert v[:24].all() and not v[24:].any()
+    assert (np.diff(t[:24]) >= 0).all(), "pops must be time-ordered"
+    np.testing.assert_allclose(np.sort(times), t[:24], rtol=1e-6)
+    # client ids rode along with their times
+    np.testing.assert_array_equal(np.argsort(times, kind="stable"), c[:24])
+
+
+def test_queue_random_interleaved_push_pop_matches_heapq():
+    """Random interleaving of jitted push/pop tracks a reference heap."""
+    push_j = jax.jit(push_event)
+    pop_j = jax.jit(pop_event)
+    rng = np.random.RandomState(1)
+    q, heap, counter = make_queue(64), [], 0
+    for _ in range(200):
+        if heap and rng.rand() < 0.45:
+            ev, q = pop_j(q)
+            t_ref, _, c_ref = heapq.heappop(heap)
+            assert bool(ev.valid)
+            np.testing.assert_allclose(float(ev.time), t_ref, rtol=1e-6)
+            assert int(ev.client) == c_ref
+        else:
+            t = float(np.float32(rng.uniform(0, 1000)))
+            q = push_j(q, t, counter, 0, 0.0, True)
+            # heap tie-break mirrors the queue: FIFO among equal times
+            heapq.heappush(heap, (t, counter, counter))
+            counter += 1
+    ev, q = pop_j(q)  # drain check: remaining pops still ordered
+    while heap:
+        t_ref, _, c_ref = heapq.heappop(heap)
+        np.testing.assert_allclose(float(ev.time), t_ref, rtol=1e-6)
+        ev, q = pop_j(q)
+    assert not bool(ev.valid)  # empty queue pops invalid
+
+
+def test_queue_overflow_counts_drops():
+    q = make_queue(4)
+    for i in range(6):
+        q = push_event(q, float(i), i, 0)
+    assert int(q.dropped) == 2
+    assert int(jnp.sum(q.valid)) == 4
+
+
+def test_queue_cancel_events():
+    q = make_queue(8)
+    q = push_events(
+        q, jnp.arange(4.0), jnp.arange(4), jnp.full(4, KIND_COMPLETE),
+        jnp.zeros(4), jnp.ones(4, bool),
+    )
+    kill = jnp.asarray([False, True, False, True])
+    q = cancel_events(q, kill, KIND_COMPLETE)
+    ev0, q = pop_event(q)
+    ev1, q = pop_event(q)
+    ev2, _ = pop_event(q)
+    assert (int(ev0.client), int(ev1.client)) == (0, 2)
+    assert not bool(ev2.valid)
+
+
+# --------------------------------------------------------------------- #
+# (b) sync recovery: cohort-mode async == scan-compiled sync engine
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("policy", ("fedfog", "fogfaas"))
+def test_async_cohort_mode_matches_run_scanned(policy):
+    cfg = _cfg(policy=policy, rounds=5)
+    h_sync = FedFogSimulator(cfg).run_scanned()
+    h_async = AsyncFedFogSimulator(
+        cfg,
+        AsyncConfig(staleness_exponent=0.0),  # unbounded buffer, no churn
+    ).run()
+    assert h_async["num_flushes"] == cfg.rounds
+    np.testing.assert_allclose(
+        h_async["accuracy"], h_sync["accuracy"], rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        h_async["update_latency_ms"], h_sync["round_latency_ms"],
+        rtol=1e-5, atol=1e-3,
+    )
+    np.testing.assert_allclose(
+        h_async["energy_j"], h_sync["energy_j"], rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        h_async["cold_starts"], h_sync["cold_starts"], atol=0
+    )
+    np.testing.assert_allclose(
+        h_async["num_aggregated"], h_sync["num_selected"], atol=0
+    )
+    assert all(s == 0.0 for s in h_async["mean_staleness"])
+
+
+def test_async_buffer_k_registry_sized_still_matches_sync():
+    """buffer_k = N never count-triggers (cohorts are top_k < N), so the
+    idle flush carries it — identical to the unbounded-buffer config."""
+    cfg = _cfg(rounds=4)
+    h_sync = FedFogSimulator(cfg).run_scanned()
+    h_async = AsyncFedFogSimulator(
+        cfg,
+        AsyncConfig(buffer_k=cfg.num_clients, staleness_exponent=0.0),
+    ).run()
+    np.testing.assert_allclose(
+        h_async["accuracy"], h_sync["accuracy"], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_async_interval_mode_accrues_staleness():
+    """Overlapping cohorts (fast dispatch cadence + straggler tail) must
+    produce genuinely stale aggregations — the thing sync cannot model."""
+    sim = AsyncFedFogSimulator(
+        _cfg(rounds=12),
+        AsyncConfig.fedasync(
+            dispatch_interval_ms=200.0, straggler_sigma=0.5
+        ),
+    )
+    h = sim.run()
+    assert h["num_flushes"] > 0
+    assert max(h["mean_staleness"]) > 0, "no staleness under overlap?"
+    assert all(s >= 0 for s in h["mean_staleness"])
+
+
+def test_async_fedbuff_flush_sizes():
+    k = 3
+    h = AsyncFedFogSimulator(
+        _cfg(rounds=8, top_k=6),
+        AsyncConfig.fedbuff(k, dispatch_interval_ms=500.0),
+    ).run()
+    sizes = h["num_aggregated"]
+    assert sizes, "no flushes"
+    # count-triggered flushes hold exactly k; idle flushes hold < k
+    assert all(s <= k for s in sizes)
+    assert any(s == k for s in sizes)
+    assert sum(sizes) == h["num_completions"]
+
+
+# --------------------------------------------------------------------- #
+# (c) async sweeps: deterministic, seed-sliced == standalone
+# --------------------------------------------------------------------- #
+def test_async_sweep_deterministic_and_matches_standalone():
+    cfg = _cfg(rounds=3)
+    acfg = AsyncConfig.fedbuff(2, dispatch_interval_ms=800.0,
+                               straggler_sigma=0.2)
+    seeds = [0, 2]
+    kw = dict(engine="async", async_cfg=acfg, axes={"buffer_k": [1, 2]})
+    r1 = run_sweep(cfg, seeds=seeds, **kw)
+    r2 = run_sweep(cfg, seeds=seeds, **kw)
+    for name in r1.history:
+        np.testing.assert_array_equal(r1.history[name], r2.history[name])
+    # different seeds genuinely differ
+    assert not np.array_equal(
+        r1.metric("accuracy")[:, 0], r1.metric("accuracy")[:, 1]
+    )
+    for g, overrides in enumerate(r1.configs):
+        for si, s in enumerate(seeds):
+            h = AsyncFedFogSimulator(
+                dataclasses.replace(cfg, seed=s),
+                dataclasses.replace(
+                    acfg, max_dispatches=cfg.rounds, **overrides
+                ),
+            ).run()
+            nf = h["num_flushes"]
+            valid = r1.metric("valid")[g, si]
+            assert valid[:nf].all() and not valid[nf:].any()
+            for name in ("accuracy", "t_ms", "num_aggregated", "energy_j",
+                         "mean_staleness"):
+                np.testing.assert_allclose(
+                    r1.metric(name)[g, si, :nf],
+                    np.asarray(h[name]),
+                    rtol=1e-5, atol=1e-5,
+                    err_msg=f"{overrides}/seed{s}/{name}",
+                )
+            # final() must be valid-aware: last real flush, not padding
+            np.testing.assert_allclose(
+                r1.final("accuracy")[g, si], h["accuracy"][-1],
+                rtol=1e-5, atol=1e-5,
+            )
+
+
+def test_async_sweep_surfaces_queue_overflow():
+    cfg = _cfg(num_clients=6, rounds=3, top_k=6, hidden=(8,))
+    with pytest.raises(RuntimeError, match="overflow"):
+        run_sweep(
+            cfg, seeds=[0], engine="async",
+            async_cfg=AsyncConfig(queue_capacity=2),
+        )
+
+
+def test_async_sweep_respects_async_cfg_dispatch_budget():
+    """async_cfg.max_dispatches wins when no rounds= argument is given."""
+    cfg = _cfg(rounds=6)
+    res = run_sweep(
+        cfg, seeds=[0], engine="async",
+        async_cfg=AsyncConfig(max_dispatches=2),
+    )
+    assert int((res.metric("valid")[0, 0] > 0).sum()) == 2
+    # explicit rounds= still overrides
+    res2 = run_sweep(
+        cfg, seeds=[0], rounds=3, engine="async",
+        async_cfg=AsyncConfig(max_dispatches=2),
+    )
+    assert int((res2.metric("valid")[0, 0] > 0).sum()) == 3
+
+
+def test_flush_keys_decorrelate_repeat_flushes():
+    """DP noise must be an independent draw per flush between dispatches
+    (FedAsync flushes once per completion): with lr=0 the client deltas
+    are exactly zero, so each flush's param change IS its DP noise draw —
+    drive the handlers eagerly and require different draws."""
+    cfg = _cfg(rounds=2, lr=0.0, dp_sigma=0.5, clip_norm=1.0)
+    sim = AsyncFedFogSimulator(
+        cfg, AsyncConfig.fedasync(dispatch_interval_ms=1e9)
+    )
+    state = sim.init_state(0)
+
+    def pop_and_handle(state, handler):
+        ev, q = pop_event(state.queue)
+        assert bool(ev.valid)
+        state = state._replace(
+            queue=q, t_ms=jnp.maximum(ev.time, state.t_ms)
+        )
+        return handler(state, ev)
+
+    state = pop_and_handle(state, sim._on_dispatch)
+    assert int(jnp.sum(state.busy)) >= 2, "need >=2 in-flight updates"
+    p0 = state.params
+    state = pop_and_handle(state, sim._on_complete)  # flush 1
+    p1 = state.params
+    state = pop_and_handle(state, sim._on_complete)  # flush 2
+    p2 = state.params
+    assert int(state.flush_idx) == 2
+    noise1 = np.concatenate(
+        [np.ravel(b - a) for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1))]
+    )
+    noise2 = np.concatenate(
+        [np.ravel(b - a) for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))]
+    )
+    assert np.abs(noise1).max() > 0 and np.abs(noise2).max() > 0
+    assert not np.allclose(noise1, noise2), (
+        "repeat flushes reused the dispatch's DP key"
+    )
+
+
+# --------------------------------------------------------------------- #
+# staleness weighting (satellite: hypothesis property tests)
+# --------------------------------------------------------------------- #
+def _weights_case(rng, n=12):
+    mask = jnp.asarray(rng.rand(n) < 0.7)
+    sizes = jnp.asarray(rng.uniform(1.0, 500.0, n).astype(np.float32))
+    stal = jnp.asarray(rng.randint(0, 10, n).astype(np.float32))
+    return mask, sizes, stal
+
+
+def test_zero_staleness_full_buffer_is_exactly_fedavg():
+    """Required exact (bitwise) reduction: full-registry buffer, zero
+    staleness → the async rule IS Eq. 6."""
+    rng = np.random.RandomState(0)
+    n = 10
+    updates = [
+        {"w": jnp.asarray(rng.randn(n, 6, 4).astype(np.float32)),
+         "b": jnp.asarray(rng.randn(n, 4).astype(np.float32))}
+    ]
+    mask = jnp.ones((n,), bool)
+    sizes = jnp.asarray(rng.uniform(1.0, 300.0, n).astype(np.float32))
+    ref = fedavg_stacked(updates, mask, sizes)
+    out = async_aggregate(updates, mask, sizes, jnp.zeros((n,)), 0.5)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # exponent 0 (discount disabled) is also exact, even with staleness
+    out0 = async_aggregate(
+        updates, mask, sizes, jnp.asarray(rng.randint(0, 9, n), jnp.float32), 0.0
+    )
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fedasync_single_update_steps_by_discounted_delta():
+    n = 6
+    delta = [jnp.zeros((n, 3)).at[2].set(jnp.asarray([1.0, -2.0, 3.0]))]
+    mask = jnp.zeros((n,), bool).at[2].set(True)
+    sizes = jnp.full((n,), 100.0)
+    for s, a in ((0.0, 0.5), (3.0, 0.5), (7.0, 1.0)):
+        out = async_aggregate(
+            delta, mask, sizes, jnp.full((n,), np.float32(s)), a
+        )
+        expect = float(stale_discount(jnp.asarray(s), a))
+        np.testing.assert_allclose(
+            np.asarray(out[0]),  # client axis reduced away
+            expect * np.asarray([1.0, -2.0, 3.0]),
+            rtol=1e-4,
+        )
+
+
+# Hypothesis property tests (dev dep — mirrors tests/test_core_properties.py)
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        s=st.floats(0.0, 1e4),
+        ds=st.floats(0.0, 100.0),
+        a=st.floats(0.0, 4.0),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_hyp_discount_in_unit_interval_and_monotone(s, a, ds):
+        d0 = float(stale_discount(jnp.asarray(s, jnp.float32), a))
+        d1 = float(stale_discount(jnp.asarray(s + ds, jnp.float32), a))
+        assert 0.0 < d0 <= 1.0
+        assert d1 <= d0 + 1e-6, "discount must be non-increasing in staleness"
+        assert float(stale_discount(jnp.zeros(()), a)) == 1.0
+
+    @given(
+        seed=st.integers(0, 2**16),
+        a=st.floats(0.0, 3.0),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hyp_staleness_weights_normalized_and_bounded(seed, a):
+        rng = np.random.RandomState(seed)
+        mask, sizes, stal = _weights_case(rng)
+        w, scale = staleness_weights(mask, sizes, stal, a)
+        w = np.asarray(w)
+        assert (w >= 0).all() and (w <= 1.0 + 1e-6).all()
+        assert (w[~np.asarray(mask)] == 0).all()
+        if np.asarray(mask).any():
+            np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-4)
+        assert 0.0 < float(scale) <= 1.0 + 1e-6
+
+    @given(seed=st.integers(0, 2**16), a=st.floats(0.05, 3.0))
+    @settings(max_examples=25, deadline=None)
+    def test_hyp_weights_monotone_in_staleness(seed, a):
+        """Raising one client's staleness cannot raise its weight."""
+        rng = np.random.RandomState(seed)
+        mask, sizes, stal = _weights_case(rng)
+        if not np.asarray(mask).any():
+            return
+        i = int(np.flatnonzero(np.asarray(mask))[0])
+        w0, _ = staleness_weights(mask, sizes, stal, a)
+        w1, _ = staleness_weights(mask, sizes, stal.at[i].add(5.0), a)
+        assert float(w1[i]) <= float(w0[i]) + 1e-6
+
+
+# --------------------------------------------------------------------- #
+# churn & availability
+# --------------------------------------------------------------------- #
+def test_churn_zero_rates_is_identity():
+    cfg = ChurnConfig()
+    online = jnp.asarray([True, False, True, True])
+    out = step_churn(cfg, online, jnp.asarray(1e5), jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(online))
+
+
+def test_churn_rates_move_population():
+    key = jax.random.PRNGKey(0)
+    n = 512
+    # heavy departure over a long dt: nearly everyone leaves
+    out = step_churn(
+        ChurnConfig(departure_rate=5.0), jnp.ones(n, bool), 10_000.0, key
+    )
+    assert int(jnp.sum(out)) < n // 4
+    # heavy arrival: most of the offline mass comes back
+    back = step_churn(
+        ChurnConfig(arrival_rate=5.0), jnp.zeros(n, bool), 10_000.0, key
+    )
+    assert int(jnp.sum(back)) > 3 * n // 4
+
+
+def test_available_mask_battery_death():
+    cfg = ChurnConfig(death_batt=0.1)
+    online = jnp.asarray([True, True, False])
+    batt = jnp.asarray([0.5, 0.05, 0.9])
+    np.testing.assert_array_equal(
+        np.asarray(available_mask(cfg, online, batt)), [True, False, False]
+    )
+
+
+def test_engine_churn_drops_inflight_updates():
+    h = AsyncFedFogSimulator(
+        _cfg(rounds=10, num_clients=16, top_k=12),
+        AsyncConfig.fedbuff(
+            4, dispatch_interval_ms=300.0, straggler_sigma=0.4,
+            churn=ChurnConfig(arrival_rate=0.2, departure_rate=0.8),
+        ),
+    ).run()
+    assert h["lost_inflight"] > 0, "heavy churn should kill in-flight work"
+    assert h["num_flushes"] > 0  # training still makes progress
