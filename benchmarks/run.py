@@ -5,6 +5,13 @@ REPRO_BENCH_SCALE=quick|default|full. Select suites with
 ``python -m benchmarks.run [suite ...]``. ``--json out.json`` additionally
 records the rows (plus scale/timings) as JSON — used by scripts/ci.sh to
 keep a ``BENCH_simulator.json`` perf baseline across PRs.
+
+``--compare baseline.json`` prints per-row ``us_per_call`` deltas vs a
+previously recorded baseline and exits non-zero when any row regresses
+more than the tolerance (default 25%, override with
+``--compare-tolerance PCT``). Baselines are machine-specific: compare
+against numbers recorded on the same class of machine, and re-record
+with ``--json`` when the workload definition changes.
 """
 from __future__ import annotations
 
@@ -34,18 +41,62 @@ SUITES = [
 ]
 
 
+def compare_to_baseline(records, baseline_path, tolerance_pct=25.0) -> int:
+    """Print per-row deltas vs a recorded baseline; return the number of
+    rows that regressed (slowed down) by more than ``tolerance_pct``.
+
+    Rows are matched by ``name``; rows missing on either side and rows
+    with a zero baseline (summary rows) are reported but never counted
+    as regressions.
+    """
+    with open(baseline_path) as f:
+        base_rows = {
+            r["name"]: r for r in json.load(f).get("rows", [])
+            if "us_per_call" in r
+        }
+    regressions = 0
+    print(f"# compare vs {baseline_path} (tolerance {tolerance_pct:.0f}%)")
+    for rec in records:
+        name = rec.get("name")
+        if "us_per_call" not in rec:
+            continue
+        base = base_rows.pop(name, None)
+        if base is None:
+            print(f"{name}: NEW (no baseline row)")
+            continue
+        old, new = base["us_per_call"], rec["us_per_call"]
+        if old <= 0.0:
+            continue  # summary rows carry their data in `derived`
+        delta = (new - old) / old * 100.0
+        flag = ""
+        if delta > tolerance_pct:
+            flag = "  << REGRESSION"
+            regressions += 1
+        print(f"{name}: {old:.0f} -> {new:.0f} us/call ({delta:+.1f}%){flag}")
+    for name in base_rows:
+        print(f"{name}: MISSING (baseline row not produced)")
+    return regressions
+
+
 def main() -> None:
     import importlib
 
     argv = list(sys.argv[1:])
-    json_out = None
-    if "--json" in argv:
-        i = argv.index("--json")
+
+    def take_flag(flag):
+        if flag not in argv:
+            return None
+        i = argv.index(flag)
         try:
-            json_out = argv[i + 1]
+            value = argv[i + 1]
         except IndexError:
-            sys.exit("--json requires an output path")
+            sys.exit(f"{flag} requires an argument")
         del argv[i : i + 2]
+        return value
+
+    json_out = take_flag("--json")
+    compare_path = take_flag("--compare")
+    tolerance = float(take_flag("--compare-tolerance") or 25.0)
 
     wanted = argv or SUITES
     print("name,us_per_call,derived")
@@ -76,7 +127,18 @@ def main() -> None:
         )
         if records and "wall_s" not in records[-1]:
             records[-1]["wall_s"] = round(time.time() - t0, 2)
-    if json_out:
+    regressions = 0
+    if compare_path:
+        # Compare BEFORE --json possibly rewrites the same baseline file.
+        regressions = compare_to_baseline(records, compare_path, tolerance)
+    if json_out and regressions:
+        # Never replace a baseline with the run that just failed against
+        # it — that would reset the perf ratchet to the regressed numbers.
+        print(
+            f"# NOT writing {json_out}: run regressed vs {compare_path}",
+            file=sys.stderr,
+        )
+    elif json_out:
         payload = {
             "scale": os.environ.get("REPRO_BENCH_SCALE", "default"),
             "suites": wanted,
@@ -86,7 +148,12 @@ def main() -> None:
         with open(json_out, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {json_out}", file=sys.stderr)
-    if failures:
+    if regressions:
+        print(
+            f"# {regressions} row(s) regressed > {tolerance:.0f}%",
+            file=sys.stderr,
+        )
+    if failures or regressions:
         sys.exit(1)
 
 

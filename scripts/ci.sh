@@ -22,9 +22,21 @@ echo "=== async event engine smoke (2 virtual seconds) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.sim.events.engine --horizon-ms 2000
 
-echo "=== simulator perf baseline (looped/scanned/sweep/async -> BENCH_simulator.json) ==="
+echo "=== simulator perf gate (looped/scanned/sweep/async vs BENCH_simulator.json) ==="
+# Gate-only against the committed baseline (exit non-zero on a >25%
+# per-row regression). The baseline is NOT rewritten on ordinary runs —
+# re-basing every pass would let sub-threshold regressions compound
+# silently. Re-record deliberately with REPRO_BENCH_RECORD=1 (e.g. when
+# the workload definition changes or on a new machine class); skip the
+# gate entirely with REPRO_BENCH_COMPARE=0.
+BENCH_ARGS="--compare BENCH_simulator.json"
+if [[ "${REPRO_BENCH_RECORD:-0}" == 1 || ! -f BENCH_simulator.json ]]; then
+  BENCH_ARGS="--json BENCH_simulator.json"
+elif [[ "${REPRO_BENCH_COMPARE:-1}" != 1 ]]; then
+  BENCH_ARGS=""
+fi
 REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python -m benchmarks.run simulator_engine --json BENCH_simulator.json
+  python -m benchmarks.run simulator_engine $BENCH_ARGS
 
 echo "=== dryrun smoke (1 reduced cell on the 512-fake-device mesh) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

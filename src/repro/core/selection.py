@@ -34,11 +34,14 @@ def threshold_mask(
 def topk_mask(utility: Array, eligible: Array, k: int | None) -> Array:
     """Keep at most ``k`` eligible clients, preferring higher utility.
 
-    ``k=None`` (or k >= N) keeps every eligible client. Implemented with a
-    rank-compare rather than a scatter so it stays O(N log N) and
-    shard-friendly.
+    ``k=None`` (or k >= N) keeps every eligible client. ``k`` may be a
+    traced int32 scalar (the sweep layer lifts ``top_k`` grids into data
+    so every grid point shares one compiled program); the rank-compare
+    below is already k-agnostic, only the static short-circuit needs the
+    concrete-int guard. Implemented with a rank-compare rather than a
+    scatter so it stays O(N log N) and shard-friendly.
     """
-    if k is None or k >= utility.shape[0]:
+    if k is None or (isinstance(k, int) and k >= utility.shape[0]):
         return eligible
     # Push ineligible clients to -inf so they never crowd out eligible ones.
     masked_u = jnp.where(eligible, utility, -jnp.inf)

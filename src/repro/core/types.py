@@ -15,6 +15,30 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+def static_on(x) -> bool:
+    """Static truthiness of a config scalar that gates a Python branch.
+
+    The sweep layer (``repro.sim.sweep``) lifts *numeric* config fields
+    into traced data so a whole grid shares one compiled program — but it
+    only lifts a branch-gating field when the gate is ACTIVE for every
+    grid point in the group (the gate's truthiness is part of the
+    structural signature). Inside the trace such a field is a tracer,
+    and "is the gate on?" must then answer True without calling
+    ``bool()`` on it. Concrete values answer ``value > 0`` as before.
+    """
+    if isinstance(x, jax.core.Tracer):
+        return True
+    return x is not None and bool(x > 0)
+
+
+def static_zero(x) -> bool:
+    """Static ``x == 0`` for config scalars (False for tracers) — the
+    complement of ``static_on`` for identity-shortcut branches."""
+    if isinstance(x, jax.core.Tracer):
+        return False
+    return bool(x == 0)
+
+
 def _pytree_dataclass(cls):
     """Register a frozen dataclass as a JAX pytree node."""
     cls = dataclasses.dataclass(frozen=True)(cls)

@@ -33,6 +33,7 @@ from repro.core.selection import random_selection_mask
 from repro.fl import attacks as attacks_mod
 from repro.fl.compression import apply_compression, wire_bytes_per_param
 from repro.fl.state import FLConfig, FLState
+from repro.kernels.fedavg import fedavg_apply
 from repro.models.transformer import Runtime
 from repro.optim import adamw, apply_updates, clip_by_global_norm, sgdm
 from repro.sim.des import RoundCostModel
@@ -46,6 +47,35 @@ class AttackConfig:
     fraction: float = 0.0  # fraction of malicious slots
     noise_scale: float = 0.5
     replacement_scale: float = 10.0
+
+
+def _fuse_clients(tree):
+    """Concat every (C, ...)-stacked leaf into ONE (C, P) f32 buffer.
+
+    Returns the buffer and the inverse for an aggregated/applied (P,)
+    vector (split + reshape + cast back to each leaf's dtype). The
+    sharded round wraps this with its client-axis sharding constraint;
+    the Pallas-fused aggregation feeds the buffer straight to the kernel
+    so the whole Eq. 6 + server apply is one pass over (C, P).
+    """
+    flat, treedef = jax.tree.flatten(tree)
+    shapes = [x.shape[1:] for x in flat]
+    dtypes = [x.dtype for x in flat]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    cat = jnp.concatenate(
+        [x.reshape((x.shape[0], -1)).astype(jnp.float32) for x in flat],
+        axis=1,
+    )
+
+    def unfuse(vec):
+        parts = jnp.split(vec, list(np.cumsum(sizes)[:-1]))
+        leaves = [
+            p.reshape(s).astype(dt)
+            for p, s, dt in zip(parts, shapes, dtypes)
+        ]
+        return jax.tree.unflatten(treedef, leaves)
+
+    return cat, unfuse
 
 
 def _inner_optimizer(fl_cfg: FLConfig):
@@ -103,6 +133,19 @@ def make_round_fn(
     # §IV.F cost accounting shared with the paper-scale simulator — both
     # engines derive energy/cold-start semantics from the same model.
     cost_model = RoundCostModel.from_scheduler(fl_cfg.scheduler)
+    # Pallas-fused Eq. 6: aggregate + server apply in one HBM pass over
+    # the fused (C, P) buffer. Only on the single-host path (under mesh
+    # rules the aggregation must stay the one sharded all-reduce) with
+    # plain FedAvg semantics — anything that needs the aggregated delta
+    # as a separate tensor (DP noise, server momentum, robust
+    # aggregators) keeps the reference path.
+    use_pallas = (
+        fl_cfg.use_pallas_agg
+        and rules is None
+        and fl_cfg.aggregator == "fedavg"
+        and fl_cfg.dp_sigma == 0
+        and fl_cfg.server_optimizer == "fedavg"
+    )
 
     # Pod-scale sharding constraints: pin the slot-stacked replicas to the
     # client axis (and moments to the ZeRO axis) instead of trusting GSPMD
@@ -134,28 +177,12 @@ def make_round_fn(
             paper's one-collective-per-round contract, asserted by
             dist.hlo_analysis on the compiled round. Returns the buffer
             and the inverse (split + reshape + cast back)."""
-            flat, treedef = jax.tree.flatten(tree)
-            shapes = [x.shape[1:] for x in flat]
-            dtypes = [x.dtype for x in flat]
-            sizes = [int(np.prod(s)) if s else 1 for s in shapes]
-            cat = jnp.concatenate(
-                [x.reshape((x.shape[0], -1)).astype(jnp.float32) for x in flat],
-                axis=1,
-            )
+            cat, unfuse = _fuse_clients(tree)
             p_total = cat.shape[1]
             z_ent = _zero_ent if p_total % max(_zero_size, 1) == 0 else None
             cat = jax.lax.with_sharding_constraint(
                 cat, NamedSharding(rules.mesh, P(_client_ent, z_ent))
             )
-
-            def unfuse(vec):
-                parts = jnp.split(vec, list(np.cumsum(sizes)[:-1]))
-                leaves = [
-                    p.reshape(s).astype(dt)
-                    for p, s, dt in zip(parts, shapes, dtypes)
-                ]
-                return jax.tree.unflatten(treedef, leaves)
-
             return cat, unfuse
 
         def constrain_batch(tree):
@@ -318,32 +345,49 @@ def make_round_fn(
             deltas, fl_cfg.compression, fl_cfg.topk_fraction
         )
 
-        # ---- 4. aggregate (Eq. 6) — the inter-client collective -------- #
-        # On the pod-scale path the leaves are fused into one (C, P)
-        # buffer first, so ALL the cross-client traffic of the round is a
-        # single all-reduce instead of one per parameter tensor.
-        agg_in, unfuse = (
-            fuse_deltas(deltas) if fuse_deltas is not None else (deltas, None)
-        )
-        if fl_cfg.aggregator == "median":
-            agg = agg_mod.median_aggregate(agg_in, slot_mask)
-        elif fl_cfg.aggregator == "trimmed":
-            agg = agg_mod.trimmed_mean_aggregate(agg_in, slot_mask)
-        else:
-            agg = agg_mod.fedavg_stacked(agg_in, slot_mask, slot_sizes)
-        if unfuse is not None:
-            agg = unfuse(agg)
-        if fl_cfg.dp_sigma > 0:
-            dp = privacy_mod.DPConfig(
-                sigma=fl_cfg.dp_sigma,
-                sensitivity=fl_cfg.clip_norm or 1.0,
+        # ---- 4+5. aggregate (Eq. 6) + server update -------------------- #
+        if use_pallas:
+            # Fused kernel path: normalize/weight/reduce/apply in ONE
+            # pass over the fused (C, P) buffer — the memory-bound Eq. 6
+            # never re-reads the delta stack from HBM.
+            cat_d, unfuse = _fuse_clients(deltas)
+            base_flat = jnp.concatenate(
+                [
+                    x.reshape(-1).astype(jnp.float32)
+                    for x in jax.tree.leaves(params0)
+                ]
             )
-            agg = privacy_mod.gaussian_mechanism(agg, k_dp, dp)
-
-        # ---- 5. server update ------------------------------------------ #
-        new_params, new_mu, new_count = _server_update(
-            fl_cfg, params0, agg, state.server_mu, state.server_count
-        )
+            new_flat = fedavg_apply(
+                cat_d, base_flat, slot_mask, slot_sizes,
+                lr=fl_cfg.server_lr,
+            )
+            new_params = unfuse(new_flat)
+            new_mu, new_count = state.server_mu, state.server_count + 1
+        else:
+            # On the pod-scale path the leaves are fused into one (C, P)
+            # buffer first, so ALL the cross-client traffic of the round
+            # is a single all-reduce instead of one per parameter tensor.
+            agg_in, unfuse = (
+                fuse_deltas(deltas) if fuse_deltas is not None
+                else (deltas, None)
+            )
+            if fl_cfg.aggregator == "median":
+                agg = agg_mod.median_aggregate(agg_in, slot_mask)
+            elif fl_cfg.aggregator == "trimmed":
+                agg = agg_mod.trimmed_mean_aggregate(agg_in, slot_mask)
+            else:
+                agg = agg_mod.fedavg_stacked(agg_in, slot_mask, slot_sizes)
+            if unfuse is not None:
+                agg = unfuse(agg)
+            if fl_cfg.dp_sigma > 0:
+                dp = privacy_mod.DPConfig(
+                    sigma=fl_cfg.dp_sigma,
+                    sensitivity=fl_cfg.clip_norm or 1.0,
+                )
+                agg = privacy_mod.gaussian_mechanism(agg, k_dp, dp)
+            new_params, new_mu, new_count = _server_update(
+                fl_cfg, params0, agg, state.server_mu, state.server_count
+            )
 
         # ---- 6. energy / cold-start / drift bookkeeping ---------------- #
         # Per-LOGICAL-client energy: compute ∝ FLOPs for selected clients,

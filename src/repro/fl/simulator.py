@@ -40,7 +40,7 @@ from repro.core import aggregation as agg_mod
 from repro.core import privacy as privacy_mod
 from repro.core.scheduler import SchedulerConfig, account_energy, schedule_round
 from repro.core.selection import random_selection_mask, topk_mask
-from repro.core.types import init_scheduler_state
+from repro.core.types import init_scheduler_state, static_on
 from repro.data import emnist_like, har_like
 from repro.data.telemetry import (
     TelemetryConfig,
@@ -113,6 +113,12 @@ class SimulatorConfig:
     dp_sigma: float = 0.0
     clip_norm: float = 0.0
     server_lr: float = 1.0
+    # Route Eq. 6 aggregation + server apply through the fused Pallas
+    # kernel (kernels/fedavg): one HBM pass over the (N, P) delta stack
+    # instead of three. Interpret-mode fallback off-TPU; ignored (falls
+    # back to the reference path) when DP noise must land between
+    # aggregate and apply.
+    use_pallas_agg: bool = False
     hidden: tuple[int, ...] = (128, 64)
     seed: int = 0
 
@@ -151,8 +157,16 @@ class FedFogSimulator:
         self.env = self.params = self.sched_state = self.telemetry = None
         if not defer_state:
             self._ensure_state()
-        self._round_jit = jax.jit(self._round)
-        self._scan_jit = jax.jit(self._scan_rounds, static_argnames=("rounds",))
+        # params/sched/telemetry are the scan carry: donate them so the
+        # runtime reuses their buffers for the advanced state (CPU has no
+        # donation support and warns, so gate on the backend). env is NOT
+        # donated — it is reused across runs.
+        donate = (1, 2, 3) if jax.default_backend() != "cpu" else ()
+        self._round_jit = jax.jit(self._round, donate_argnums=donate)
+        self._scan_jit = jax.jit(
+            self._scan_rounds, static_argnames=("rounds",),
+            donate_argnums=donate,
+        )
 
     def _ensure_state(self):
         if self.env is None:
@@ -260,9 +274,9 @@ class FedFogSimulator:
             if cfg.top_k is not None:
                 mask = topk_mask(decision.selection.utility, mask, cfg.top_k)
         elif cfg.policy == "rcs":
-            mask = random_selection_mask(
-                k_sel, cfg.num_clients, cfg.top_k or cfg.num_clients
-            )
+            # `is None` (not `or`): top_k may be a traced int32 scalar.
+            k = cfg.top_k if cfg.top_k is not None else cfg.num_clients
+            mask = random_selection_mask(k_sel, cfg.num_clients, k)
         else:  # fogfaas / vanilla: everyone alive participates
             mask = telemetry.batt > 0.05
         return mask
@@ -334,18 +348,29 @@ class FedFogSimulator:
             data_cfg, params, round_idx, mask, malicious, k_data, k_attack
         )
 
-        agg = agg_mod.fedavg_stacked(deltas, mask, env["data_sizes"])
-        if cfg.dp_sigma > 0:
-            agg = privacy_mod.gaussian_mechanism(
-                agg,
-                k_dp,
-                privacy_mod.DPConfig(
-                    sigma=cfg.dp_sigma, sensitivity=cfg.clip_norm or 1.0
-                ),
+        if cfg.use_pallas_agg and not static_on(cfg.dp_sigma):
+            # Fused aggregate+apply: one pass over the (N, P) delta stack
+            # (same normalized Eq. 6 weights as fedavg_stacked). DP noise
+            # must land between aggregate and apply, so the fused path is
+            # only taken without it.
+            from repro.kernels.fedavg import fedavg_apply_tree
+
+            new_params = fedavg_apply_tree(
+                deltas, params, mask, env["data_sizes"], lr=cfg.server_lr
             )
-        new_params = jax.tree.map(
-            lambda p, a: p + cfg.server_lr * a, params, agg
-        )
+        else:
+            agg = agg_mod.fedavg_stacked(deltas, mask, env["data_sizes"])
+            if static_on(cfg.dp_sigma):
+                agg = privacy_mod.gaussian_mechanism(
+                    agg,
+                    k_dp,
+                    privacy_mod.DPConfig(
+                        sigma=cfg.dp_sigma, sensitivity=cfg.clip_norm or 1.0
+                    ),
+                )
+            new_params = jax.tree.map(
+                lambda p, a: p + cfg.server_lr * a, params, agg
+            )
 
         # --- DES: latency + energy (§IV.F, shared RoundCostModel) ----- #
         workload, up_bytes, down_bytes = self._round_workload()

@@ -27,25 +27,25 @@ from repro.kernels.pallas_compat import CompilerParams
 DEFAULT_BLOCK_D = 2048
 
 
-def _fedavg_kernel(wn_ref, upd_ref, base_ref, out_ref, *, lr: float):
-    wn = wn_ref[0, :].astype(jnp.float32)  # (N,) normalized weights
+def _fedavg_kernel(wn_ref, upd_ref, base_ref, out_ref):
+    wn = wn_ref[0, :].astype(jnp.float32)  # (N,) lr-scaled normalized weights
     upd = upd_ref[...].astype(jnp.float32)  # (N, bd)
     agg = jax.lax.dot_general(
         wn[None, :], upd, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # (1, bd)
     out_ref[...] = (
-        base_ref[...].astype(jnp.float32) + lr * agg[0]
+        base_ref[...].astype(jnp.float32) + agg[0]
     ).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("lr", "block_d", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def fedavg_apply(
     updates: jax.Array,  # (N, D)
     base: jax.Array,  # (D,)
     mask: jax.Array,  # (N,) bool
     weights: jax.Array,  # (N,) |D_i|
-    lr: float = 1.0,
+    lr: jax.Array | float = 1.0,
     block_d: int = DEFAULT_BLOCK_D,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -53,7 +53,10 @@ def fedavg_apply(
         interpret = jax.default_backend() != "tpu"
     n, d = updates.shape
     wn = mask.astype(jnp.float32) * weights.astype(jnp.float32)
-    wn = (wn / (jnp.sum(wn) + 1e-12))[None, :]  # (1, N)
+    # lr rides in the tiny (1, N) weight vector rather than as a kernel
+    # compile-time constant, so a traced server_lr (sweep-lifted config
+    # data) does not force a recompile per grid point.
+    wn = (jnp.asarray(lr, jnp.float32) * wn / (jnp.sum(wn) + 1e-12))[None, :]
 
     block_d = min(block_d, d)
     pad = (-d) % block_d
@@ -64,7 +67,7 @@ def fedavg_apply(
     grid = (dp // block_d,)
 
     out = pl.pallas_call(
-        functools.partial(_fedavg_kernel, lr=lr),
+        _fedavg_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (0, 0)),
@@ -81,7 +84,7 @@ def fedavg_apply(
     return out[:d]
 
 
-def fedavg_apply_tree(updates_tree, base_tree, mask, weights, lr: float = 1.0):
+def fedavg_apply_tree(updates_tree, base_tree, mask, weights, lr=1.0):
     """Apply the kernel leaf-wise over parameter pytrees.
 
     updates_tree leaves: (N, ...) stacked client deltas; base_tree: (...)."""

@@ -17,7 +17,12 @@ Layering (see each module's docstring):
 """
 from repro.sim.des import FaasSimConfig, RoundCostModel, RoundCosts
 from repro.sim.faas import round_energy_j, round_times_ms
-from repro.sim.sweep import SweepResult, run_sweep
+from repro.sim.sweep import (
+    SweepResult,
+    clear_compile_cache,
+    compile_cache_size,
+    run_sweep,
+)
 
 __all__ = [
     "FaasSimConfig",
@@ -26,5 +31,7 @@ __all__ = [
     "round_energy_j",
     "round_times_ms",
     "SweepResult",
+    "clear_compile_cache",
+    "compile_cache_size",
     "run_sweep",
 ]

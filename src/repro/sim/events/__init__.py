@@ -24,7 +24,9 @@ from repro.sim.events.queue import (
     KIND_DISPATCH,
     EventQueue,
     make_queue,
+    pop_batch,
     pop_event,
+    pop_order_rank,
     push_event,
     push_events,
 )
@@ -44,7 +46,9 @@ __all__ = [
     "async_aggregate",
     "available_mask",
     "make_queue",
+    "pop_batch",
     "pop_event",
+    "pop_order_rank",
     "push_event",
     "push_events",
     "stale_discount",

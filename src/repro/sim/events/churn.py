@@ -24,6 +24,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import static_zero
+
 Array = jax.Array
 
 
@@ -43,8 +45,13 @@ def init_online(cfg: ChurnConfig, num_clients: int, key: Array) -> Array:
 
 
 def step_churn(cfg: ChurnConfig, online: Array, dt_ms: Array, key: Array) -> Array:
-    """Advance the presence process by ``dt_ms`` virtual milliseconds."""
-    if cfg.arrival_rate == 0.0 and cfg.departure_rate == 0.0:
+    """Advance the presence process by ``dt_ms`` virtual milliseconds.
+
+    Rates may be traced scalars (sweep-lifted config data); the identity
+    shortcut then stays off, and the math path is itself an exact
+    identity at zero rates (``u >= 0`` / ``u < 0`` on uniform draws).
+    """
+    if static_zero(cfg.arrival_rate) and static_zero(cfg.departure_rate):
         return online
     dt_s = jnp.maximum(jnp.asarray(dt_ms, jnp.float32), 0.0) * 1e-3
     p_depart = 1.0 - jnp.exp(-cfg.departure_rate * dt_s)

@@ -21,9 +21,21 @@ queue (``queue.py``):
     between events; a client that becomes unavailable mid-flight never
     reports (its COMPLETE event is cancelled).
 
-The whole loop is one ``lax.scan`` over ``max_events`` queue pops with a
-``lax.switch`` on the event kind — jit-compiled once, vmappable over
-seeds (``repro.sim.sweep.run_sweep(engine="async")``).
+The loop executes with **coalesced stepping** (``AsyncConfig.coalesce``,
+default on): each step pops EITHER one DISPATCH or the whole run of
+COMPLETE events that precede the next DISPATCH in pop order (capped at
+the ``buffer_k`` count-flush boundary so no flush could have fired
+mid-run), processes the completions as one masked buffer-fill, and runs
+inside a ``lax.while_loop`` that exits as soon as the queue drains.
+This matters because the loop is vmapped over seeds
+(``repro.sim.sweep.run_sweep(engine="async")``) and batched
+``lax.switch``/``cond`` execute ALL branches — one-pop-per-step pays the
+full dispatch+flush computation ``D·(N+1)`` times; coalesced stepping
+pays it ~``2·D`` times. ``coalesce=False`` keeps the original
+one-pop-per-step ``lax.scan``/``lax.switch`` engine, which the
+equivalence tests use as the oracle: trajectories agree **bit-for-bit**
+(the batch-pop frees exactly the slots the sequential pops would, so
+even same-timestamp tie-breaks and push-slot assignment are preserved).
 
 Sync recovery: with ``dispatch_mode="on_flush"``, no churn, no straggler
 tail, ``buffer_k=None`` (flush when the cohort drains) and
@@ -42,6 +54,7 @@ import jax.numpy as jnp
 
 from repro.core import privacy as privacy_mod
 from repro.core.scheduler import account_energy, schedule_round
+from repro.core.types import static_on
 from repro.data.telemetry import step_telemetry
 from repro.fl.simulator import FedFogSimulator, SimulatorConfig
 from repro.sim.events.churn import (
@@ -55,7 +68,9 @@ from repro.sim.events.queue import (
     KIND_DISPATCH,
     cancel_events,
     make_queue,
+    pop_batch,
     pop_event,
+    pop_order_rank,
     push_event,
     push_events,
 )
@@ -97,6 +112,7 @@ class AsyncConfig:
     churn: ChurnConfig = dataclasses.field(default_factory=ChurnConfig)
     queue_capacity: int | None = None  # default: num_clients + 8
     max_events: int | None = None  # default: max_dispatches*(N+1)+2
+    coalesce: bool = True  # batched event stepping (False = one pop/step)
 
     @classmethod
     def fedasync(cls, **kw) -> "AsyncConfig":
@@ -136,7 +152,7 @@ class AsyncState(NamedTuple):
     pend_energy: Array  # (N,) Joules of the in-flight update
     pend_t: Array  # (N,) dispatch time of the in-flight update
     last_disp_t: Array  # () time of the latest dispatch
-    last_cold: Array  # () cold starts of the latest dispatch
+    last_cold: Array  # () cold starts accrued since the last flush
     k_dp: Array  # keys captured at the latest dispatch, consumed at flush
     k_tel: Array
     k_eval: Array
@@ -169,7 +185,12 @@ class AsyncFedFogSimulator:
             self.acfg.max_events or self.max_dispatches * (n + 1) + 2
         )
         self.max_flushes = self.max_events  # flushes ≤ dispatches+completions
-        self._scan_jit = jax.jit(self._scan_events)
+        # The AsyncState argument IS the event loop's scan carry — donate
+        # it so the runtime reuses its buffers for the result instead of
+        # holding both alive. CPU does not implement donation and would
+        # warn on every call, so gate on the backend.
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._scan_jit = jax.jit(self._scan_events, donate_argnums=donate)
 
     # ------------------------------------------------------------------ #
     def init_state(self, seed) -> AsyncState:
@@ -259,7 +280,7 @@ class AsyncFedFogSimulator:
         def fresh(k):
             return jnp.where(uses == 0, k, jax.random.fold_in(k, uses))
 
-        if cfg.dp_sigma > 0:
+        if static_on(cfg.dp_sigma):
             agg = privacy_mod.gaussian_mechanism(
                 agg,
                 fresh(state.k_dp),
@@ -318,6 +339,10 @@ class AsyncFedFogSimulator:
             flush_idx=f + 1,
             key_uses=uses + 1,
             buf=jnp.zeros_like(buf),
+            # Cold starts are consumed by the flush that reports them, so
+            # repeat flushes between dispatches (FedAsync) cannot re-count
+            # the same dispatch's cold starts: Σ flush == Σ dispatch.
+            last_cold=jnp.zeros_like(state.last_cold),
             m_flush=m_flush,
         )
 
@@ -367,7 +392,7 @@ class AsyncFedFogSimulator:
             else "fogfaas",
         )
         per_client_ms = costs.per_client_ms
-        if acfg.straggler_sigma > 0:
+        if static_on(acfg.straggler_sigma):
             per_client_ms = per_client_ms * jnp.exp(
                 acfg.straggler_sigma * jax.random.normal(k_strag, (n,))
             )
@@ -399,7 +424,7 @@ class AsyncFedFogSimulator:
             lost_inflight=state.lost_inflight
             + jnp.sum(lost.astype(jnp.int32)),
             last_disp_t=state.t_ms,
-            last_cold=costs.cold_starts,
+            last_cold=state.last_cold + costs.cold_starts,
             dispatch_idx=d + 1,
             k_dp=k_dp,
             k_tel=k_tel,
@@ -439,8 +464,23 @@ class AsyncFedFogSimulator:
             )
         return state
 
-    def _on_complete(self, state: AsyncState, ev) -> AsyncState:
+    def _flush_rule(self, busy: Array, buf: Array) -> Array:
+        """Whether the server flushes after absorbing completions — THE
+        single definition of the count-trigger (``buffer_k``) and
+        idle-trigger (``flush_on_idle``) rules. Shared by the single-pop
+        handler and the coalesced batch step: keeping it in one place is
+        what guarantees the two engines apply identical flush decisions
+        (their bit-for-bit equivalence contract)."""
         acfg = self.acfg
+        count = jnp.sum(buf.astype(jnp.int32))
+        flush_now = jnp.zeros((), bool)
+        if acfg.buffer_k is not None:
+            flush_now = flush_now | (count >= acfg.buffer_k)
+        if acfg.flush_on_idle:
+            flush_now = flush_now | (~jnp.any(busy) & (count > 0))
+        return flush_now
+
+    def _on_complete(self, state: AsyncState, ev) -> AsyncState:
         c = jnp.clip(ev.client, 0, self.cfg.num_clients - 1)
         is_c = jnp.arange(self.cfg.num_clients) == c
         arrived = state.busy[c]  # stale events were cancelled, but be safe
@@ -451,17 +491,98 @@ class AsyncFedFogSimulator:
             buf=buf,
             completions=state.completions + arrived.astype(jnp.int32),
         )
-        count = jnp.sum(buf.astype(jnp.int32))
-        flush_now = jnp.zeros((), bool)
-        if acfg.buffer_k is not None:
-            flush_now = flush_now | (count >= acfg.buffer_k)
-        if acfg.flush_on_idle:
-            flush_now = flush_now | (~jnp.any(busy) & (count > 0))
-        return jax.lax.cond(flush_now, self._flush, lambda s: s, state)
+        return jax.lax.cond(
+            self._flush_rule(busy, buf), self._flush, lambda s: s, state
+        )
 
     # ------------------------------------------------------------------ #
+    def _coalesced_step(self, state: AsyncState) -> AsyncState:
+        """One batched event step — exactly equivalent to a run of
+        single pops (see module docstring for the bit-for-bit argument).
+
+        If the earliest event is a DISPATCH: pop and handle just it.
+        Otherwise pop the whole run of COMPLETE events preceding the
+        first DISPATCH in pop order — capped at the ``buffer_k``
+        count-flush boundary, so the single-pop engine could not have
+        flushed (or observed an idle buffer) anywhere inside the run —
+        fill the server buffer with one masked update, and apply the
+        flush rule once at the end of the run.
+        """
+        acfg, n = self.acfg, self.cfg.num_clients
+        q = state.queue
+        rank = pop_order_rank(q)
+        has = jnp.any(q.valid)
+        first_slot = jnp.argmin(rank)
+        first_is_dispatch = q.kind[first_slot] == KIND_DISPATCH
+        # COMPLETEs preceding the first queued DISPATCH in pop order.
+        is_d = q.valid & (q.kind == KIND_DISPATCH)
+        n_before = jnp.min(jnp.where(is_d, rank, q.capacity))
+        if acfg.buffer_k is not None:
+            # Count-flush boundary: the single-pop engine flushes as soon
+            # as the buffer reaches K, so a batch may only absorb the
+            # room that is left (≥ 1 keeps the loop making progress).
+            room = jnp.maximum(
+                jnp.asarray(acfg.buffer_k, jnp.int32)
+                - jnp.sum(state.buf.astype(jnp.int32)),
+                1,
+            )
+            n_take = jnp.minimum(n_before, room)
+        else:
+            n_take = n_before
+
+        def do_dispatch(state):
+            ev, q2 = pop_event(state.queue)
+            state = state._replace(
+                queue=q2, t_ms=jnp.maximum(ev.time, state.t_ms)
+            )
+            return self._on_dispatch(state, ev)
+
+        def do_completes(state):
+            popped, t_last, q2 = pop_batch(state.queue, n_take, rank)
+            cids = jnp.clip(state.queue.client, 0, n - 1)
+            arrived = jnp.zeros((n,), bool).at[cids].max(popped)
+            arrived = arrived & state.busy  # mirror _on_complete's guard
+            state = state._replace(
+                queue=q2,
+                t_ms=jnp.maximum(state.t_ms, t_last),
+                busy=state.busy & ~arrived,
+                buf=state.buf | arrived,
+                completions=state.completions
+                + jnp.sum(arrived.astype(jnp.int32)),
+            )
+            return jax.lax.cond(
+                self._flush_rule(state.busy, state.buf),
+                self._flush, lambda s: s, state,
+            )
+
+        branch = jnp.where(has, jnp.where(first_is_dispatch, 1, 2), 0)
+        return jax.lax.switch(
+            branch, [lambda s: s, do_dispatch, do_completes], state
+        )
+
     def _scan_events(self, state: AsyncState) -> AsyncState:
-        """The whole experiment: ``max_events`` queue pops in one scan."""
+        """The whole experiment in one compiled loop.
+
+        Coalesced (default): a ``lax.while_loop`` over batched steps that
+        exits as soon as the queue drains (``max_events`` stays a safety
+        bound). Single-pop (``coalesce=False``): the original
+        ``lax.scan`` of ``max_events`` one-event pops — kept as the
+        bit-for-bit oracle for the coalesced path.
+        """
+        if self.acfg.coalesce:
+
+            def cond(carry):
+                state, i = carry
+                return jnp.any(state.queue.valid) & (i < self.max_events)
+
+            def body(carry):
+                state, i = carry
+                return self._coalesced_step(state), i + 1
+
+            state, _ = jax.lax.while_loop(
+                cond, body, (state, jnp.zeros((), jnp.int32))
+            )
+            return state
 
         def step(state, _):
             ev, q = pop_event(state.queue)

@@ -157,6 +157,49 @@ def pop_event(q: EventQueue) -> tuple[Event, EventQueue]:
     return ev, q._replace(valid=q.valid & ~sel)
 
 
+def pop_order_rank(q: EventQueue) -> Array:
+    """(C,) pop-order rank of every slot under the queue's deterministic
+    ordering — ascending ``(time, slot)`` over valid slots only.
+
+    ``rank[i]`` = number of valid events that ``pop_event`` would return
+    before slot ``i``. Invalid slots get rank ``C`` (never popped). O(C²)
+    pairwise comparison, which is cheap at queue capacities (N + 8) and
+    keeps the ordering definition in ONE place next to ``pop_event``.
+    """
+    c = q.capacity
+    idx = jnp.arange(c)
+    t_i = jnp.where(q.valid, q.time, jnp.inf)
+    lex_before = (t_i[None, :] < t_i[:, None]) | (
+        (t_i[None, :] == t_i[:, None]) & (idx[None, :] < idx[:, None])
+    )
+    rank = jnp.sum(q.valid[None, :] & lex_before, axis=1)
+    return jnp.where(q.valid, rank, c)
+
+
+def pop_batch(
+    q: EventQueue, take: Array, rank: Array | None = None
+) -> tuple[Array, Array, EventQueue]:
+    """Masked batch-pop: remove the first ``take`` events in pop order.
+
+    Returns ``(popped (C,) bool slot mask, t_last (), queue)`` where
+    ``t_last`` is the time of the LAST popped event (-inf when ``take``
+    selects nothing) — i.e. where the virtual clock lands after popping
+    the batch one event at a time. Exactly equivalent to ``take``
+    successive ``pop_event`` calls (same slots, same final queue), which
+    is what the coalesced engine's bit-for-bit contract relies on.
+
+    ``rank`` may pass a precomputed ``pop_order_rank(q)`` so callers in
+    hot loop bodies (the coalesced engine step sits inside a switch
+    branch, which XLA cannot CSE against the enclosing computation)
+    don't pay the O(C²) ranking twice.
+    """
+    if rank is None:
+        rank = pop_order_rank(q)
+    popped = q.valid & (rank < jnp.asarray(take, rank.dtype))
+    t_last = jnp.max(jnp.where(popped, q.time, -jnp.inf))
+    return popped, t_last, q._replace(valid=q.valid & ~popped)
+
+
 def cancel_events(q: EventQueue, client_mask: Array, kind: Array | int) -> EventQueue:
     """Invalidate every queued event of ``kind`` whose client is in
     ``client_mask`` (N,-bool over the client registry) — e.g. kill the

@@ -117,6 +117,35 @@ def test_queue_overflow_counts_drops():
     assert int(jnp.sum(q.valid)) == 4
 
 
+def test_pop_batch_matches_sequential_pops():
+    """``pop_batch(q, k)`` must free exactly the slots ``k`` successive
+    ``pop_event`` calls would — including duplicate-time tie-breaks —
+    and report the last popped event's time."""
+    from repro.sim.events.queue import pop_batch
+
+    rng = np.random.RandomState(7)
+    times = rng.choice([1.0, 2.0, 2.0, 3.0, 5.0, 5.0, 5.0, 8.0], 20)
+    q = make_queue(32)
+    q = push_events(
+        q, jnp.asarray(times, jnp.float32), jnp.arange(20),
+        jnp.zeros(20, jnp.int32), jnp.zeros(20), jnp.ones(20, bool),
+    )
+    for take in (1, 3, 7, 20, 25):
+        popped, t_last, q2 = pop_batch(q, take)
+        qs, last_t = q, None
+        for _ in range(min(take, 20)):
+            ev, qs = pop_event(qs)
+            assert bool(ev.valid)
+            last_t = float(ev.time)
+        np.testing.assert_array_equal(
+            np.asarray(q2.valid), np.asarray(qs.valid), err_msg=f"take={take}"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(popped), np.asarray(q.valid) & ~np.asarray(qs.valid)
+        )
+        assert float(t_last) == last_t
+
+
 def test_queue_cancel_events():
     q = make_queue(8)
     q = push_events(
@@ -204,6 +233,53 @@ def test_async_fedbuff_flush_sizes():
     assert all(s <= k for s in sizes)
     assert any(s == k for s in sizes)
     assert sum(sizes) == h["num_completions"]
+
+
+@pytest.mark.parametrize(
+    "acfg",
+    [
+        AsyncConfig(staleness_exponent=0.0),  # cohort / sync-recovery
+        AsyncConfig.fedasync(dispatch_interval_ms=200.0, straggler_sigma=0.5),
+        AsyncConfig.fedbuff(
+            3, dispatch_interval_ms=300.0, straggler_sigma=0.4,
+            churn=ChurnConfig(arrival_rate=0.2, departure_rate=0.8),
+        ),
+    ],
+    ids=("cohort", "fedasync", "fedbuff-churn"),
+)
+def test_coalesced_matches_single_pop_bitwise(acfg):
+    """Coalesced batched stepping is a pure execution-strategy change:
+    trajectories must match the one-pop-per-step oracle BITWISE — same
+    flush metrics, same queue-drop counters — in every server mode,
+    including same-timestamp tie-breaks (slot order) and mid-batch
+    ``buffer_k`` flush boundaries."""
+    import jax
+
+    cfg = _cfg(rounds=4)
+    fast = AsyncFedFogSimulator(cfg, dataclasses.replace(acfg, coalesce=True))
+    oracle = AsyncFedFogSimulator(cfg, dataclasses.replace(acfg, coalesce=False))
+    out_f = jax.device_get(jax.jit(fast.metrics_for_seed)(0))
+    out_o = jax.device_get(jax.jit(oracle.metrics_for_seed)(0))
+    assert set(out_f) == set(out_o)
+    for name in out_f:
+        np.testing.assert_array_equal(
+            np.asarray(out_f[name]), np.asarray(out_o[name]), err_msg=name
+        )
+
+
+def test_flush_cold_starts_conserved():
+    """Regression: flush metrics must not re-attribute a dispatch's cold
+    starts to every flush it feeds (FedAsync flushes once per completion,
+    so the old `last_cold` snapshot was counted up to top_k times).
+    Cold starts are consumed by the first flush after the dispatch:
+    Σ flush cold_starts == Σ dispatch cold_starts."""
+    h = AsyncFedFogSimulator(
+        _cfg(rounds=6, top_k=6),
+        AsyncConfig.fedasync(dispatch_interval_ms=1e9),  # sequential cohorts
+    ).run()
+    assert h["num_flushes"] > h["num_dispatches"], "need repeat flushes"
+    assert sum(h["dispatch_cold_starts"]) > 0
+    assert sum(h["cold_starts"]) == sum(h["dispatch_cold_starts"])
 
 
 # --------------------------------------------------------------------- #

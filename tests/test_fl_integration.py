@@ -90,6 +90,36 @@ def test_aggregators_run():
         assert np.isfinite(hist[-1]["loss"])
 
 
+def test_pod_round_pallas_agg_matches_reference():
+    """use_pallas_agg fuses Eq. 6 + server apply over the (C, P) buffer;
+    the resulting params must match the reference fedavg_stacked +
+    _server_update path to the params dtype's precision (bf16 → 1 ulp)."""
+    model = build_model(TINY)
+    outs = {}
+    for pallas in (False, True):
+        fl = FLConfig(
+            num_clients=8, slots=4, server_optimizer="fedavg",
+            use_pallas_agg=pallas,
+        )
+        state = init_fl_state(model, fl, KEY)
+        fn = jax.jit(make_round_fn(model, fl, flops_per_client_round=1e9))
+        state, metrics = fn(state, _mk_batch(KEY, fl))
+        outs[pallas] = (state, metrics)
+    ref_leaves = jax.tree.leaves(outs[False][0].params)
+    pal_leaves = jax.tree.leaves(outs[True][0].params)
+    for a, b in zip(ref_leaves, pal_leaves):
+        assert a.dtype == b.dtype
+        tol = 1e-3 if a.dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=tol
+        )
+    assert int(outs[True][0].server_count) == int(outs[False][0].server_count)
+    np.testing.assert_allclose(
+        float(outs[True][1]["loss"]), float(outs[False][1]["loss"]),
+        rtol=1e-6,
+    )
+
+
 def test_dp_and_compression_run():
     fl = FLConfig(
         num_clients=8, slots=4, clip_norm=1.0, dp_sigma=0.01, compression="int8"

@@ -144,6 +144,91 @@ print("OK")
     )
 
 
+def test_grouped_sweep_bitwise_matches_per_point():
+    """Compile-once grouping is a pure execution-strategy change: on a
+    mixed structural×numeric grid (policies change the trace; lr / top_k
+    / Eq. 3 thresholds are lifted to vmapped data) the grouped sweep must
+    reproduce the per-grid-point sweep BITWISE."""
+    from repro.core.scheduler import SchedulerConfig
+
+    cfg = _cfg(rounds=3)
+    cases = [
+        {"policy": "fedfog", "lr": 0.03},
+        {"policy": "fedfog", "lr": 0.07},
+        {"policy": "fedfog", "lr": 0.03, "top_k": 2},
+        {"policy": "rcs", "lr": 0.05},
+        {"scheduler": SchedulerConfig(theta_h=0.5, theta_e=0.4)},
+        {"scheduler": SchedulerConfig(theta_h=0.7, theta_e=0.6)},
+    ]
+    from repro.sim import clear_compile_cache
+
+    clear_compile_cache()  # count this call's compiles, not stale hits
+    tm: dict = {}
+    grouped = run_sweep(cfg, seeds=[0, 1], cases=cases, timings=tm)
+    per_point = run_sweep(cfg, seeds=[0, 1], cases=cases, group=False)
+    # fedfog cases (lr/top_k/theta lifted) collapse into one group, rcs
+    # into another — strictly fewer compiled programs than grid points
+    assert tm["n_compiles"] < len(cases)
+    assert tm["cache_hits"] == 0
+    assert grouped.configs == per_point.configs
+    for name in grouped.history:
+        np.testing.assert_array_equal(
+            grouped.history[name], per_point.history[name], err_msg=name
+        )
+
+
+def test_sweep_compile_cache_reuse():
+    """A structurally-identical second sweep replays cached executables:
+    zero new compiles, bit-identical histories."""
+    from repro.sim import clear_compile_cache
+
+    cfg = _cfg(rounds=3)
+    axes = {"lr": [0.02, 0.05, 0.08]}
+    clear_compile_cache()
+    tm1: dict = {}
+    r1 = run_sweep(cfg, seeds=[0, 1], axes=axes, timings=tm1)
+    tm2: dict = {}
+    r2 = run_sweep(cfg, seeds=[0, 1], axes=axes, timings=tm2)
+    assert tm1["n_compiles"] == 1  # one structural group for the lr grid
+    assert tm2["n_compiles"] == 0 and tm2["cache_hits"] == 1
+    assert tm2["compile_s"] == 0.0
+    for name in r1.history:
+        np.testing.assert_array_equal(r1.history[name], r2.history[name])
+
+
+def test_round_pallas_agg_matches_reference():
+    """use_pallas_agg routes Eq. 6 + server apply through the fused
+    kernel (interpret mode on CPU); a full multi-round run must agree
+    with the reference fedavg_stacked path to float tolerance, and the
+    kernel itself must agree with fedavg_apply_ref on round-shaped
+    inputs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.fedavg import fedavg_apply, fedavg_apply_ref
+
+    cfg = _cfg(rounds=3)
+    h_ref = FedFogSimulator(cfg).run_scanned()
+    h_pal = FedFogSimulator(
+        dataclasses.replace(cfg, use_pallas_agg=True)
+    ).run_scanned()
+    for name in h_ref:
+        np.testing.assert_allclose(
+            np.asarray(h_ref[name]), np.asarray(h_pal[name]),
+            rtol=1e-5, atol=1e-5, err_msg=name,
+        )
+    # direct kernel-vs-oracle cross-check at simulator shapes
+    key = jax.random.PRNGKey(3)
+    upd = jax.random.normal(key, (cfg.num_clients, 16 * 62))
+    base = jax.random.normal(jax.random.fold_in(key, 1), (16 * 62,))
+    mask = jnp.arange(cfg.num_clients) < 4
+    sizes = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2),
+                                      (cfg.num_clients,))) * 100
+    out = fedavg_apply(upd, base, mask, sizes, lr=0.7)
+    ref = fedavg_apply_ref(upd, base, mask, sizes, lr=0.7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
 def test_sweep_reductions_shapes():
     cfg = _cfg(rounds=3)
     res = run_sweep(cfg, seeds=[0, 1, 2])
