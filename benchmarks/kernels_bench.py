@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, fmt
+from repro.kernels.delta_pipeline import delta_pipeline_ref
 from repro.kernels.fedavg import fedavg_apply, fedavg_apply_ref
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.wkv6.ref import wkv6_ref
@@ -73,4 +74,63 @@ def run() -> list[Row]:
         jax.jit(lambda *a: fedavg_apply_ref(*a)), upd, base, mask, wts
     )
     rows.append(Row("kernels/fedavg_32x64k", t_ref, fmt(oracle_us=t_ref)))
+
+    # delta pipeline: fused single-buffer pass vs the unfused per-stage
+    # per-leaf chain (per-client clip → staleness-discounted Eq. 6
+    # aggregate → DP → momentum apply over a 5-leaf tree). Both are the
+    # CPU (XLA) oracle implementations — the Pallas kernel itself is a
+    # TPU path; its interpret mode is a correctness tool, not perf.
+    from repro.core.aggregation import fedavg_stacked
+    from repro.optim import clip_by_global_norm
+
+    seg_sizes = (1 << 15, 1 << 14, 1 << 14, 1 << 13, 1 << 13)
+    p_total = sum(seg_sizes)
+    c = 32
+    upd = jax.random.normal(key, (c, p_total))
+    base = jax.random.normal(key, (p_total,))
+    mu = jnp.zeros((p_total,))
+    noise = 0.1 * jax.random.normal(key, (p_total,))
+    mask = jnp.ones((c,), bool)
+    wts = jnp.ones((c,))
+    stal = jnp.arange(c, dtype=jnp.float32) % 4
+    kw = dict(
+        lr=0.9, dp_noise=noise, momentum=mu, clip_norm=1.0,
+        staleness=stal, staleness_exponent=0.5,
+        server_optimizer="fedavgm",
+    )
+    t_fused = _time(
+        jax.jit(
+            lambda u, b, m, w: delta_pipeline_ref(u, b, m, w, **kw)[0]
+        ),
+        upd, base, mask, wts,
+    )
+    offs = [0]
+    for s in seg_sizes:
+        offs.append(offs[-1] + s)
+
+    def unfused(u, b, m, w):
+        tree = {
+            f"l{i}": u[:, offs[i]:offs[i + 1]]
+            for i in range(len(seg_sizes))
+        }
+        tree = jax.vmap(lambda d: clip_by_global_norm(d, 1.0)[0])(tree)
+        disc = (1.0 + stal) ** -0.5
+        agg = fedavg_stacked(tree, m, w * disc)
+        sized = m * w
+        scale = (jnp.sum(sized * disc) + 1e-12) / (jnp.sum(sized) + 1e-12)
+        cat = jnp.concatenate(
+            [agg[f"l{i}"] for i in range(len(seg_sizes))]
+        ) * scale
+        mu2 = 0.9 * mu + (cat + noise)
+        return b + 0.9 * mu2
+
+    t_unfused = _time(jax.jit(unfused), upd, base, mask, wts)
+    rows.append(
+        Row(
+            "kernels/delta_pipeline_32x96k",
+            t_fused,
+            fmt(fused_us=t_fused, unfused_us=t_unfused,
+                speedup=t_unfused / max(t_fused, 1e-9)),
+        )
+    )
     return rows

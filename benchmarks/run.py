@@ -45,15 +45,23 @@ def compare_to_baseline(records, baseline_path, tolerance_pct=25.0) -> int:
     """Print per-row deltas vs a recorded baseline; return the number of
     rows that regressed (slowed down) by more than ``tolerance_pct``.
 
-    Rows are matched by ``name``; rows missing on either side and rows
-    with a zero baseline (summary rows) are reported but never counted
-    as regressions.
+    Rows are matched by ``name``. The compare is tolerant of shape drift
+    in the row set — only SHARED rows can regress:
+
+      * current rows with no baseline entry print ``NEW``;
+      * baseline rows the current run did not produce (a renamed or
+        removed row in a suite that DID run) warn and are skipped;
+      * baseline rows belonging to suites that were not part of this run
+        at all (a subset invocation) are ignored silently;
+      * zero-baseline rows (summary rows) are skipped — their data lives
+        in ``derived``.
     """
     with open(baseline_path) as f:
         base_rows = {
             r["name"]: r for r in json.load(f).get("rows", [])
             if "us_per_call" in r
         }
+    run_suites = {rec.get("suite") for rec in records}
     regressions = 0
     print(f"# compare vs {baseline_path} (tolerance {tolerance_pct:.0f}%)")
     for rec in records:
@@ -73,8 +81,13 @@ def compare_to_baseline(records, baseline_path, tolerance_pct=25.0) -> int:
             flag = "  << REGRESSION"
             regressions += 1
         print(f"{name}: {old:.0f} -> {new:.0f} us/call ({delta:+.1f}%){flag}")
-    for name in base_rows:
-        print(f"{name}: MISSING (baseline row not produced)")
+    for name, base in base_rows.items():
+        if base.get("suite") not in run_suites:
+            continue  # suite not part of this invocation: not comparable
+        print(
+            f"{name}: skipped (baseline row not produced by this run — "
+            f"renamed or removed? re-record with REPRO_BENCH_RECORD=1)"
+        )
     return regressions
 
 

@@ -25,6 +25,18 @@ grid (G learning rates) × S seeds × R rounds — run four ways:
            pre-coalescing baselines (whose ``events_per_sec`` was
            wall-based) — compare each only against its own definition.
 
+Two additional WARM-START rows measure the persistent compile cache
+(``REPRO_COMPILE_CACHE_DIR``; a temp dir is used when unset):
+
+  sweep_warm / async_events_warm : the same sweep/async workloads
+           replayed after clearing the IN-PROCESS cache, so every
+           executable comes back through disk deserialization — the
+           cost a second process running the same grid pays
+           (``n_compiles=0``, wall → exec). ``REPRO_BENCH_WARM=1``
+           emits ONLY these rows (no cold engines), which is how
+           scripts/ci.sh's second pass asserts a fresh process actually
+           warm-starts from the first pass's cache.
+
 Wall-clock per row still includes compilation — that is the honest
 end-to-end cost a cold benchmark suite pays; the compile_s/exec_s split
 shows where it goes, and the compile-once cache is exactly what the
@@ -33,13 +45,15 @@ accuracy-history deviation between engines as a correctness cross-check.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import numpy as np
 
 from benchmarks.common import Row, SCALE, fmt, preset
 from repro.fl.simulator import FedFogSimulator, SimulatorConfig
-from repro.sim import run_sweep
+from repro.sim import clear_compile_cache, run_sweep
 
 N_SEEDS = {"quick": 2, "default": 4, "full": 8}
 # Numeric grid: G points that share one structural signature, so the
@@ -50,8 +64,6 @@ LR_GRID = {"quick": [0.03, 0.04, 0.05, 0.06],
 
 
 def run() -> list[Row]:
-    import dataclasses
-
     p = preset()
     n_seeds = N_SEEDS[SCALE]
     rounds = p["rounds"]
@@ -62,6 +74,39 @@ def run() -> list[Row]:
     )
     base_rounds = n_seeds * rounds  # single-config sim-rounds
     grid_rounds = g * base_rounds  # grid-workload sim-rounds
+
+    # Persistent warm-start cache: honor the caller's directory (the CI
+    # cold→warm double pass shares one), else a private temp dir so the
+    # warm rows below still measure the disk round trip. A self-created
+    # temp dir is torn back down afterwards — env var, the global jax
+    # compilation-cache config and the directory itself — so suites
+    # running after this one in the same harness process are untouched.
+    own_tmp = None
+    if not os.environ.get("REPRO_COMPILE_CACHE_DIR"):
+        own_tmp = tempfile.mkdtemp(prefix="repro-compile-cache-")
+        os.environ["REPRO_COMPILE_CACHE_DIR"] = own_tmp
+    try:
+        if os.environ.get("REPRO_BENCH_WARM", "0") == "1":
+            return _warm_rows(base, lrs, n_seeds, rounds, p, grid_rounds)
+        return _cold_and_warm_rows(base, lrs, n_seeds, rounds, p,
+                                   grid_rounds, g)
+    finally:
+        if own_tmp is not None:
+            import shutil
+
+            from repro.sim.sweep import disable_xla_cache
+
+            os.environ.pop("REPRO_COMPILE_CACHE_DIR", None)
+            disable_xla_cache()
+            shutil.rmtree(own_tmp, ignore_errors=True)
+
+
+def _cold_and_warm_rows(
+    base, lrs, n_seeds, rounds, p, grid_rounds, g
+) -> list[Row]:
+    import dataclasses
+
+    base_rounds = n_seeds * rounds  # single-config sim-rounds
 
     # --- seed-style Python loop over the grid (fresh sim per run) ------ #
     t0 = time.time()
@@ -124,6 +169,13 @@ def run() -> list[Row]:
     dev_sweep = float(np.abs(acc_loop - acc_sweep).max())
     dev_async = float(np.abs(acc_loop[base_g] - acc_async).max())
 
+    warm_rows = _warm_rows(
+        base, lrs, n_seeds, rounds, p, grid_rounds,
+        cold_acc=acc_sweep, cold_acc_async=np.asarray(
+            res_async.metric("accuracy")
+        ),
+    )
+
     shape = fmt(grid=g, seeds=n_seeds, rounds=rounds, clients=p["clients"])
     return [
         Row(
@@ -180,5 +232,79 @@ def run() -> list[Row]:
                 events_per_sec_exec=ev_exec,
                 events_per_sec_wall=ev_wall,
             ),
+        ),
+    ] + warm_rows
+
+
+def _warm_rows(
+    base, lrs, n_seeds, rounds, p, grid_rounds,
+    cold_acc=None, cold_acc_async=None,
+) -> list[Row]:
+    """Warm-start rows: replay the sweep + async workloads through the
+    persistent compile cache (in-process cache cleared first, so every
+    executable deserializes from REPRO_COMPILE_CACHE_DIR — the cost a
+    SECOND process running the same grid pays)."""
+    from repro.sim.events import AsyncConfig
+
+    base_rounds = n_seeds * rounds
+
+    clear_compile_cache()
+    tm: dict = {}
+    t0 = time.time()
+    res = run_sweep(
+        base, seeds=range(n_seeds), axes={"lr": lrs}, rounds=rounds,
+        timings=tm,
+    )
+    t_sweep = time.time() - t0
+
+    clear_compile_cache()
+    tm_a: dict = {}
+    t0 = time.time()
+    res_a = run_sweep(
+        base, seeds=range(n_seeds), rounds=rounds,
+        engine="async", async_cfg=AsyncConfig(staleness_exponent=0.0),
+        timings=tm_a,
+    )
+    t_async = time.time() - t0
+    sim_events = int((res_a.metric("valid") > 0).sum()) + n_seeds * rounds * (
+        p["topk"] + 1
+    )
+    ev_exec = sim_events / max(tm_a.get("exec_s", 0.0), 1e-9)
+    ev_wall = sim_events / max(t_async, 1e-9)
+
+    # replaying a serialized executable is exact — flag any drift
+    dev = dev_a = ""
+    if cold_acc is not None:
+        d = float(np.abs(np.asarray(res.metric("accuracy")) - cold_acc).max())
+        dev = f"max_acc_dev={d:.2g};"
+    if cold_acc_async is not None:
+        d = float(
+            np.abs(np.asarray(res_a.metric("accuracy")) - cold_acc_async).max()
+        )
+        dev_a = f"max_acc_dev={d:.2g};"
+
+    return [
+        Row(
+            "simulator_engine/sweep_warm",
+            t_sweep / grid_rounds * 1e6,
+            f"wall_s={t_sweep:.2f};"
+            f"load_s={tm.get('load_s', 0.0):.2f};"
+            f"exec_s={tm.get('exec_s', 0.0):.2f};"
+            f"n_compiles={tm.get('n_compiles', 0)};"
+            f"disk_hits={tm.get('disk_hits', 0)};{dev}"
+            + fmt(grid=len(lrs), seeds=n_seeds, rounds=rounds,
+                  clients=p["clients"]),
+        ),
+        Row(
+            "simulator_engine/async_events_warm",
+            t_async / base_rounds * 1e6,
+            f"wall_s={t_async:.2f};"
+            f"load_s={tm_a.get('load_s', 0.0):.2f};"
+            f"exec_s={tm_a.get('exec_s', 0.0):.2f};"
+            f"n_compiles={tm_a.get('n_compiles', 0)};"
+            f"disk_hits={tm_a.get('disk_hits', 0)};{dev_a}"
+            f"events_per_sec_exec={ev_exec:.0f};"
+            f"events_per_sec_wall={ev_wall:.1f};"
+            + fmt(seeds=n_seeds, rounds=rounds, clients=p["clients"]),
         ),
     ]

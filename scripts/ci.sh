@@ -35,8 +35,26 @@ if [[ "${REPRO_BENCH_RECORD:-0}" == 1 || ! -f BENCH_simulator.json ]]; then
 elif [[ "${REPRO_BENCH_COMPARE:-1}" != 1 ]]; then
   BENCH_ARGS=""
 fi
-REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+# The cold pass populates a persistent compile cache
+# (REPRO_COMPILE_CACHE_DIR) that the warm pass below — a FRESH process —
+# must hit: serialized sweep executables make the second process skip
+# tracing and XLA compilation entirely (n_compiles=0).
+CACHE_DIR="${REPRO_COMPILE_CACHE_DIR:-$(mktemp -d)}"
+REPRO_COMPILE_CACHE_DIR="$CACHE_DIR" \
+  REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run simulator_engine $BENCH_ARGS
+
+echo "=== warm-start pass (fresh process, persistent cache at $CACHE_DIR) ==="
+WARM_LOG="$(mktemp)"
+REPRO_BENCH_WARM=1 REPRO_COMPILE_CACHE_DIR="$CACHE_DIR" \
+  REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.run simulator_engine | tee "$WARM_LOG"
+for row in sweep_warm async_events_warm; do
+  grep "simulator_engine/$row" "$WARM_LOG" | grep -q "n_compiles=0" || {
+    echo "ci.sh: warm pass MISSED the persistent compile cache ($row)"
+    exit 1
+  }
+done
 
 echo "=== dryrun smoke (1 reduced cell on the 512-fake-device mesh) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -7,11 +7,26 @@ paper's energy model rewards: TX bytes enter Eq. E_i = Σ C_cpu·CPU + C_tx·TX)
 Both are simulate-and-dequantize: the aggregation math stays fp32, while
 ``wire_bytes_per_param`` feeds the DES energy/latency model and the
 collective-bytes accounting in the roofline.
+
+Execution strategies (``apply_compression(..., fused=)``):
+
+  * ``fused=True`` (default): ONE pass over the fused ``(C, P)`` buffer
+    (``fl.fuse.fuse_clients``). The per-(client, leaf) reductions — int8
+    max-abs via a segment scatter-max, top-k thresholds via static leaf
+    slices (``lax.top_k`` needs the per-leaf ``k``) — write only tiny
+    ``(C, L)`` tables; the quantize/dequantize or threshold-mask
+    transform then runs as a single fused elementwise pass instead of
+    one XLA kernel chain per leaf.
+  * ``fused=False``: the original per-leaf ``jax.tree`` loop — kept as
+    the tested reference. The two paths agree BITWISE (same reduction
+    elements, same elementwise ops; tests/test_delta_pipeline.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.fl.fuse import fuse_clients, segment_ids, stacked_leaf_sizes
 
 
 def compress_int8(deltas):
@@ -40,9 +55,40 @@ def compress_topk(deltas, fraction: float):
     return jax.tree.map(one, deltas)
 
 
-def apply_compression(deltas, kind: str, topk_fraction: float = 0.05):
+def _compress_fused(deltas, kind: str, fraction: float):
+    """One fused (C, P) buffer pass; bitwise-equal to the per-leaf path.
+
+    The (C, L) scale/threshold tables come from the SAME
+    ``kernels.delta_pipeline.segment_table`` the Pallas pipeline uses
+    (a segment scatter-max IS the per-leaf max; a static leaf slice of
+    the concat IS the leaf), and the elementwise transform applies
+    identical ops per element — so fusing changes the kernel count, not
+    a single bit of the output.
+    """
+    from repro.kernels.delta_pipeline import segment_table
+
+    cat, unfuse = fuse_clients(deltas)
+    sizes = stacked_leaf_sizes(deltas)
+    seg = segment_ids(sizes)
+    tab = segment_table(cat, kind, fraction, sizes)
+    if kind == "int8":
+        scale = tab[:, seg]  # (C, P) gather, fused into the consumer
+        q = jnp.clip(jnp.round(cat / scale), -127, 127).astype(jnp.int8)
+        return unfuse(q.astype(jnp.float32) * scale)
+    # topk: the buffer-wide mask+multiply is the single fused pass.
+    thresh = tab[:, seg]  # (C, P)
+    return unfuse(cat * (jnp.abs(cat) >= thresh))
+
+
+def apply_compression(
+    deltas, kind: str, topk_fraction: float = 0.05, *, fused: bool = True
+):
     if kind == "none":
         return deltas
+    if fused and len(jax.tree.leaves(deltas)) > 1:
+        if kind in ("int8", "topk"):
+            return _compress_fused(deltas, kind, topk_fraction)
+        raise ValueError(f"unknown compression {kind!r}")
     if kind == "int8":
         return compress_int8(deltas)
     if kind == "topk":

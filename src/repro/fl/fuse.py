@@ -1,0 +1,128 @@
+"""Fused (C, P) client-delta buffers — the delta pipeline's data layout.
+
+Every server-side pass over the per-client updates (clip, compression
+emulation, DP noise, staleness weighting, Eq. 6 aggregation, server
+apply) is memory-bound: it touches each of the C·P delta floats once.
+Keeping the deltas as a parameter pytree forces one XLA kernel per leaf
+per stage; concatenating the leaves into ONE ``(C, P)`` f32 buffer lets
+a whole stage run as a single fused pass — and feeds the Pallas
+``kernels.delta_pipeline`` kernel directly.
+
+``fuse_clients`` was born in ``fl/round.py`` for the one-all-reduce
+sharding contract (PR 2); it now lives here so ``fl/round.py``,
+``fl/simulator.py``, ``fl/compression.py`` and the async event engine
+can all share it without import cycles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fuse_clients(tree):
+    """Concat every (C, ...)-stacked leaf into ONE (C, P) f32 buffer.
+
+    Returns the buffer and the inverse, which accepts either an
+    aggregated/applied ``(P,)`` vector or a still-stacked ``(C, P)``
+    buffer (split along the last axis + reshape + cast back to each
+    leaf's dtype). The sharded round wraps this with its client-axis
+    sharding constraint; the Pallas-fused delta pipeline feeds the
+    buffer straight to the kernel so the whole clip→compress→aggregate→
+    apply chain is one pass over (C, P).
+    """
+    flat, treedef = jax.tree.flatten(tree)
+    shapes = [x.shape[1:] for x in flat]
+    dtypes = [x.dtype for x in flat]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    cat = jnp.concatenate(
+        [x.reshape((x.shape[0], -1)).astype(jnp.float32) for x in flat],
+        axis=1,
+    )
+
+    def unfuse(vec):
+        parts = jnp.split(vec, list(np.cumsum(sizes)[:-1]), axis=-1)
+        leaves = [
+            p.reshape(p.shape[:-1] + s).astype(dt)
+            for p, s, dt in zip(parts, shapes, dtypes)
+        ]
+        return jax.tree.unflatten(treedef, leaves)
+
+    return cat, unfuse
+
+
+def fuse_vector(tree):
+    """Concat an UNstacked parameter pytree into one (P,) f32 vector.
+
+    Returns the vector and the inverse (split + reshape + cast back) —
+    the ``base``/``mu`` companion of ``fuse_clients`` for the server
+    side of the pipeline.
+    """
+    flat, treedef = jax.tree.flatten(tree)
+    shapes = [x.shape for x in flat]
+    dtypes = [x.dtype for x in flat]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    cat = jnp.concatenate(
+        [x.reshape(-1).astype(jnp.float32) for x in flat]
+    )
+
+    def unfuse(vec):
+        parts = jnp.split(vec, list(np.cumsum(sizes)[:-1]))
+        leaves = [
+            p.reshape(s).astype(dt)
+            for p, s, dt in zip(parts, shapes, dtypes)
+        ]
+        return jax.tree.unflatten(treedef, leaves)
+
+    return cat, unfuse
+
+
+def leaf_sizes(tree) -> tuple[int, ...]:
+    """Static per-leaf flat sizes of an UNstacked pytree — the segment
+    lengths of the fused (C, P) buffer, in ``jax.tree.flatten`` order.
+    For a (C, ...)-stacked tree, pass one client's slice or divide by C.
+    """
+    return tuple(
+        int(np.prod(x.shape)) if x.shape else 1
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def stacked_leaf_sizes(tree) -> tuple[int, ...]:
+    """Segment lengths of ``fuse_clients(tree)`` — per-leaf flat sizes
+    with the leading client axis excluded."""
+    return tuple(
+        int(np.prod(x.shape[1:])) if x.shape[1:] else 1
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def segment_ids(sizes: tuple[int, ...]) -> jnp.ndarray:
+    """(P,) int32 leaf-segment id per fused-buffer column (static)."""
+    return jnp.asarray(
+        np.repeat(np.arange(len(sizes)), sizes), jnp.int32
+    )
+
+
+def fused_gaussian_noise(key, std, sizes: tuple[int, ...], shapes=None):
+    """(P,) DP noise vector matching ``core.privacy.gaussian_mechanism``.
+
+    The reference mechanism splits ``key`` once per pytree leaf and
+    draws ``normal(k_i, leaf.shape)``; building the fused vector from
+    the SAME per-leaf keys and shapes keeps the fused pipeline's noise
+    draws identical to the per-leaf reference path (JAX random bits are
+    generated from the flat element count, so ``normal(k, shape)``
+    reshaped to 1-D equals ``normal(k, (size,))``).
+
+    ``shapes``: optional per-leaf shapes (defaults to 1-D ``(size,)``).
+    """
+    keys = jax.random.split(key, len(sizes))
+    std = jnp.asarray(std, jnp.float32)
+    if shapes is None:
+        shapes = [(s,) for s in sizes]
+    return jnp.concatenate(
+        [
+            (std * jax.random.normal(k, shp, dtype=jnp.float32)).reshape(-1)
+            for k, shp in zip(keys, shapes)
+        ]
+    )

@@ -24,7 +24,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import aggregation as agg_mod
 from repro.core import privacy as privacy_mod
@@ -32,8 +31,14 @@ from repro.core.scheduler import account_energy, schedule_round
 from repro.core.selection import random_selection_mask
 from repro.fl import attacks as attacks_mod
 from repro.fl.compression import apply_compression, wire_bytes_per_param
+from repro.fl.fuse import (
+    fuse_clients,
+    fuse_vector,
+    fused_gaussian_noise,
+    stacked_leaf_sizes,
+)
 from repro.fl.state import FLConfig, FLState
-from repro.kernels.fedavg import fedavg_apply
+from repro.kernels.delta_pipeline import delta_pipeline_apply
 from repro.models.transformer import Runtime
 from repro.optim import adamw, apply_updates, clip_by_global_norm, sgdm
 from repro.sim.des import RoundCostModel
@@ -49,33 +54,10 @@ class AttackConfig:
     replacement_scale: float = 10.0
 
 
-def _fuse_clients(tree):
-    """Concat every (C, ...)-stacked leaf into ONE (C, P) f32 buffer.
-
-    Returns the buffer and the inverse for an aggregated/applied (P,)
-    vector (split + reshape + cast back to each leaf's dtype). The
-    sharded round wraps this with its client-axis sharding constraint;
-    the Pallas-fused aggregation feeds the buffer straight to the kernel
-    so the whole Eq. 6 + server apply is one pass over (C, P).
-    """
-    flat, treedef = jax.tree.flatten(tree)
-    shapes = [x.shape[1:] for x in flat]
-    dtypes = [x.dtype for x in flat]
-    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
-    cat = jnp.concatenate(
-        [x.reshape((x.shape[0], -1)).astype(jnp.float32) for x in flat],
-        axis=1,
-    )
-
-    def unfuse(vec):
-        parts = jnp.split(vec, list(np.cumsum(sizes)[:-1]))
-        leaves = [
-            p.reshape(s).astype(dt)
-            for p, s, dt in zip(parts, shapes, dtypes)
-        ]
-        return jax.tree.unflatten(treedef, leaves)
-
-    return cat, unfuse
+# Fused (C, P) buffer helpers now live in fl/fuse.py (shared with the
+# simulator, compression and the async event engine); the name is kept
+# for the sharded-round plumbing below.
+_fuse_clients = fuse_clients
 
 
 def _inner_optimizer(fl_cfg: FLConfig):
@@ -133,18 +115,19 @@ def make_round_fn(
     # §IV.F cost accounting shared with the paper-scale simulator — both
     # engines derive energy/cold-start semantics from the same model.
     cost_model = RoundCostModel.from_scheduler(fl_cfg.scheduler)
-    # Pallas-fused Eq. 6: aggregate + server apply in one HBM pass over
-    # the fused (C, P) buffer. Only on the single-host path (under mesh
-    # rules the aggregation must stay the one sharded all-reduce) with
-    # plain FedAvg semantics — anything that needs the aggregated delta
-    # as a separate tensor (DP noise, server momentum, robust
-    # aggregators) keeps the reference path.
+    # Pallas-fused delta pipeline: clip → compression emulation → Eq. 6
+    # aggregate → DP noise → server momentum → apply, in ONE HBM pass
+    # over the fused (C, P) buffer (plus a norm-reduction pass when
+    # clipping — kernels/delta_pipeline). Only on the single-host path
+    # (under mesh rules the aggregation must stay the one sharded
+    # all-reduce) with FedAvg-family semantics; robust aggregators
+    # (median/trimmed) and attack evaluation configs (the attack lands
+    # between clip and compress) keep the reference path.
     use_pallas = (
         fl_cfg.use_pallas_agg
         and rules is None
         and fl_cfg.aggregator == "fedavg"
-        and fl_cfg.dp_sigma == 0
-        and fl_cfg.server_optimizer == "fedavg"
+        and attack.kind == "none"
     )
 
     # Pod-scale sharding constraints: pin the slot-stacked replicas to the
@@ -330,39 +313,69 @@ def make_round_fn(
             params_stacked,
             params0,
         )
-        if fl_cfg.clip_norm > 0:
-            deltas = jax.vmap(
-                lambda d: clip_by_global_norm(d, fl_cfg.clip_norm)[0]
-            )(deltas)
-        if attack.kind not in ("none", "label_flip"):
-            deltas = attacks_mod.corrupt_deltas(
-                deltas, malicious, attack.kind, k_attack,
-                noise_scale=attack.noise_scale,
-                replacement_scale=attack.replacement_scale,
+        if not use_pallas:
+            # Reference pipeline: one XLA pass per stage per leaf. On
+            # the fused path these stages all fold into the kernel call
+            # below (the attack gate guarantees nothing lands between
+            # clip and compress there).
+            if fl_cfg.clip_norm > 0:
+                deltas = jax.vmap(
+                    lambda d: clip_by_global_norm(d, fl_cfg.clip_norm)[0]
+                )(deltas)
+            if attack.kind not in ("none", "label_flip"):
+                deltas = attacks_mod.corrupt_deltas(
+                    deltas, malicious, attack.kind, k_attack,
+                    noise_scale=attack.noise_scale,
+                    replacement_scale=attack.replacement_scale,
+                )
+                slot_mask = attacks_mod.dropout_mask(
+                    slot_mask, malicious, attack.kind
+                )
+            deltas = apply_compression(
+                deltas, fl_cfg.compression, fl_cfg.topk_fraction
             )
-            slot_mask = attacks_mod.dropout_mask(slot_mask, malicious, attack.kind)
-        deltas = apply_compression(
-            deltas, fl_cfg.compression, fl_cfg.topk_fraction
-        )
 
         # ---- 4+5. aggregate (Eq. 6) + server update -------------------- #
         if use_pallas:
-            # Fused kernel path: normalize/weight/reduce/apply in ONE
-            # pass over the fused (C, P) buffer — the memory-bound Eq. 6
-            # never re-reads the delta stack from HBM.
-            cat_d, unfuse = _fuse_clients(deltas)
-            base_flat = jnp.concatenate(
-                [
-                    x.reshape(-1).astype(jnp.float32)
-                    for x in jax.tree.leaves(params0)
-                ]
-            )
-            new_flat = fedavg_apply(
+            # Fused delta-pipeline kernel: clip, compression emulation,
+            # weighting/reduction, DP noise, server momentum and the
+            # apply all happen in one pass over the fused (C, P) buffer
+            # — the memory-bound pipeline never re-reads the delta stack
+            # from HBM (clipping adds one norm-reduction pass).
+            cat_d, _ = _fuse_clients(deltas)
+            base_flat, unfuse_vec = fuse_vector(params0)
+            seg = stacked_leaf_sizes(deltas)
+            noise = None
+            if fl_cfg.dp_sigma > 0:
+                noise = fused_gaussian_noise(
+                    k_dp,
+                    fl_cfg.dp_sigma * (fl_cfg.clip_norm or 1.0),
+                    seg,
+                    [x.shape for x in jax.tree.leaves(params0)],
+                )
+            mu_flat = unfuse_mu = None
+            if (
+                fl_cfg.server_optimizer in ("fedavgm", "fedadam")
+                and state.server_mu is not None
+            ):
+                mu_flat, unfuse_mu = fuse_vector(state.server_mu)
+            outs = delta_pipeline_apply(
                 cat_d, base_flat, slot_mask, slot_sizes,
-                lr=fl_cfg.server_lr,
+                lr=fl_cfg.server_lr, dp_noise=noise, momentum=mu_flat,
+                clip_norm=fl_cfg.clip_norm,
+                compression=fl_cfg.compression,
+                topk_fraction=fl_cfg.topk_fraction,
+                seg_sizes=seg,
+                server_optimizer=fl_cfg.server_optimizer,
+                server_momentum=fl_cfg.server_momentum,
             )
-            new_params = unfuse(new_flat)
-            new_mu, new_count = state.server_mu, state.server_count + 1
+            if mu_flat is not None:
+                new_flat, new_mu_flat = outs
+                new_mu = unfuse_mu(new_mu_flat)
+            else:
+                new_flat, new_mu = outs, state.server_mu
+            new_params = unfuse_vec(new_flat)
+            new_count = state.server_count + 1
         else:
             # On the pod-scale path the leaves are fused into one (C, P)
             # buffer first, so ALL the cross-client traffic of the round

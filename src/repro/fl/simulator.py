@@ -50,6 +50,12 @@ from repro.data.telemetry import (
 )
 from repro.fl import attacks as attacks_mod
 from repro.fl.compression import apply_compression, wire_bytes_per_param
+from repro.fl.fuse import (
+    fuse_clients,
+    fuse_vector,
+    fused_gaussian_noise,
+    stacked_leaf_sizes,
+)
 from repro.optim import clip_by_global_norm
 from repro.sim.des import FaasSimConfig, RoundCostModel
 
@@ -113,11 +119,12 @@ class SimulatorConfig:
     dp_sigma: float = 0.0
     clip_norm: float = 0.0
     server_lr: float = 1.0
-    # Route Eq. 6 aggregation + server apply through the fused Pallas
-    # kernel (kernels/fedavg): one HBM pass over the (N, P) delta stack
-    # instead of three. Interpret-mode fallback off-TPU; ignored (falls
-    # back to the reference path) when DP noise must land between
-    # aggregate and apply.
+    # Route Eq. 6 aggregation + DP noise + server apply through the
+    # fused Pallas delta-pipeline kernel (kernels/delta_pipeline): one
+    # HBM pass over the (N, P) delta stack instead of one per stage per
+    # leaf. Also engages on the async engine's flush path (staleness
+    # discounting included). Interpret-mode fallback off-TPU — a
+    # correctness tool, slow on CPU, hence default off.
     use_pallas_agg: bool = False
     hidden: tuple[int, ...] = (128, 64)
     seed: int = 0
@@ -348,16 +355,30 @@ class FedFogSimulator:
             data_cfg, params, round_idx, mask, malicious, k_data, k_attack
         )
 
-        if cfg.use_pallas_agg and not static_on(cfg.dp_sigma):
-            # Fused aggregate+apply: one pass over the (N, P) delta stack
-            # (same normalized Eq. 6 weights as fedavg_stacked). DP noise
-            # must land between aggregate and apply, so the fused path is
-            # only taken without it.
-            from repro.kernels.fedavg import fedavg_apply_tree
+        if cfg.use_pallas_agg:
+            # Fused delta-pipeline kernel: Eq. 6 weighting + reduction +
+            # DP noise + apply in ONE pass over the fused (N, P) delta
+            # stack (clip/compression already happened in _local_deltas,
+            # shared with the async engine). The DP noise vector is
+            # built with the reference per-leaf key recipe, so enabling
+            # the kernel does not change the noise draws.
+            from repro.kernels.delta_pipeline import delta_pipeline_apply
 
-            new_params = fedavg_apply_tree(
-                deltas, params, mask, env["data_sizes"], lr=cfg.server_lr
+            cat_d, _ = fuse_clients(deltas)
+            base_flat, unfuse_vec = fuse_vector(params)
+            noise = None
+            if static_on(cfg.dp_sigma):
+                noise = fused_gaussian_noise(
+                    k_dp,
+                    cfg.dp_sigma * (cfg.clip_norm or 1.0),
+                    stacked_leaf_sizes(deltas),
+                    [x.shape for x in jax.tree.leaves(params)],
+                )
+            new_flat = delta_pipeline_apply(
+                cat_d, base_flat, mask, env["data_sizes"],
+                lr=cfg.server_lr, dp_noise=noise,
             )
+            new_params = unfuse_vec(new_flat)
         else:
             agg = agg_mod.fedavg_stacked(deltas, mask, env["data_sizes"])
             if static_on(cfg.dp_sigma):

@@ -56,11 +56,14 @@ class FLConfig:
     dp_sigma: float = 0.0  # central DP noise scale (0 = off)
     compression: str = "none"  # "none" | "int8" | "topk"
     topk_fraction: float = 0.05
-    # Fuse Eq. 6 aggregation + server apply into the Pallas kernel
-    # (kernels/fedavg): one HBM pass over the fused (C, P) delta buffer.
-    # Applies on the single-host path with plain FedAvg and no DP noise;
-    # otherwise (mesh rules / robust aggregators / momentum / DP) the
-    # round silently keeps the reference path, preserving the
+    # Fuse the whole server-side delta pipeline — clip, top-k/int8
+    # compression emulation, Eq. 6 aggregation, DP noise, server
+    # momentum, apply — into the Pallas kernel family
+    # (kernels/delta_pipeline): one HBM pass over the fused (C, P)
+    # delta buffer (clipping adds a norm-reduction pass). Applies on
+    # the single-host path with the FedAvg aggregator and no attack;
+    # otherwise (mesh rules / median / trimmed / attacks) the round
+    # silently keeps the reference path, preserving the
     # one-inter-client-all-reduce HLO contract.
     use_pallas_agg: bool = False
 

@@ -1,0 +1,13 @@
+from repro.kernels.delta_pipeline.ops import (
+    delta_pipeline_apply,
+    delta_sq_norms,
+    segment_table,
+)
+from repro.kernels.delta_pipeline.ref import delta_pipeline_ref
+
+__all__ = [
+    "delta_pipeline_apply",
+    "delta_sq_norms",
+    "delta_pipeline_ref",
+    "segment_table",
+]

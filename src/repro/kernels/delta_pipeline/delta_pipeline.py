@@ -1,0 +1,339 @@
+"""Pallas TPU kernel family: the fused FedFog delta pipeline.
+
+The server side of a FedFog round (paper §IV, Fig. 1 tail) is a chain of
+memory-bound passes over the ``(C, P)`` stacked client-delta buffer:
+
+    clip-by-global-norm → compression emulation (top-k / int8) →
+    staleness-discounted Eq. 6 weighting → aggregate → DP noise →
+    server momentum (FedAvgM / FedAdam) → apply to the global model
+
+XLA lowers the reference composition as one kernel per stage per leaf —
+up to ~6 reads of the C·P delta floats from HBM. This family fuses the
+whole chain into at most TWO passes over the delta stack:
+
+  * ``delta_sq_norms`` — the norm reduction (only when clipping is on):
+    grid over D-tiles, accumulating per-client Σx² into a (C,) output.
+  * ``delta_pipeline_apply`` — everything else in ONE pass: each D-tile
+    is read once, transformed in VMEM (clip scale, quant/dequant or
+    top-k threshold mask), reduced with a single (1,C)×(C,bd) MXU
+    matmul, and combined with the (P,)-sized server-state tiles (base,
+    momentum, DP noise) that ride along at 1/C of the delta traffic.
+
+Per-client scalars (clip scales, staleness discounts, Eq. 6 weights)
+travel in tiny (1, C) vectors; per-(client, leaf) compression scales /
+thresholds travel in a (C, L) table plus a (P,) segment-id row — inside
+the kernel the table is expanded per tile with a static ``L``-way select
+chain (no gather, VPU-friendly). ``lr`` rides as a (1, 1) SMEM-style
+scalar input so a sweep-lifted ``server_lr`` stays data.
+
+The top-k threshold and int8 max-abs reductions themselves are computed
+by the caller-side wrapper in XLA (``lax.top_k`` needs a sort); they
+read the buffer once more when compression is enabled but write only
+(C, L) scalars.
+
+Reference oracle: ``ref.py::delta_pipeline_ref`` (same op order on the
+fused buffer, built from the repo's per-stage reference semantics).
+Bitwise-equal at disabled gates; tolerance-bounded at enabled ones.
+Interpret-mode fallback off-TPU, like the other kernels in the package.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_compat import CompilerParams
+
+DEFAULT_BLOCK_D = 2048
+_EPS = 1e-12  # matches core.aggregation._EPS / sim.events.staleness
+
+
+# --------------------------------------------------------------------- #
+# pass 1: per-client squared norms (the clip reduction)
+# --------------------------------------------------------------------- #
+def _sq_norms_kernel(upd_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = upd_ref[...].astype(jnp.float32)
+    out_ref[...] = out_ref[...] + jnp.sum(x * x, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def delta_sq_norms(
+    updates: jax.Array,  # (C, P)
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-client Σx² over the fused delta buffer — one HBM pass."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c, d = updates.shape
+    block_d = min(block_d, d)
+    pad = (-d) % block_d
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    grid = ((d + pad) // block_d,)
+    return pl.pallas_call(
+        _sq_norms_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((c, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((c,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(updates)
+
+
+# --------------------------------------------------------------------- #
+# pass 2: the fused transform + aggregate + server update
+# --------------------------------------------------------------------- #
+def _make_pipeline_kernel(
+    n_leaves: int,
+    has_pre: bool,
+    compression: str,
+    has_dp: bool,
+    has_mu: bool,
+    server_optimizer: str,
+    server_momentum: float,
+):
+    def kernel(*refs):
+        it = iter(refs)
+        wn_ref = next(it)
+        lr_ref = next(it)
+        upd_ref = next(it)
+        base_ref = next(it)
+        pre_ref = next(it) if has_pre else None
+        seg_ref = next(it) if compression != "none" else None
+        tab_ref = next(it) if compression != "none" else None
+        noise_ref = next(it) if has_dp else None
+        mu_ref = next(it) if has_mu else None
+        out_ref = next(it)
+        new_mu_ref = next(it) if has_mu else None
+
+        x = upd_ref[...].astype(jnp.float32)  # (C, bd)
+        if has_pre:
+            x = x * pre_ref[0, :][:, None]
+        if compression != "none":
+            # Expand the (C, L) per-leaf table to per-column values with
+            # a static L-way select chain — no dynamic gather, so the
+            # tile stays VPU-only on TPU.
+            seg = seg_ref[...]  # (bd,) int32 leaf-segment ids
+            tab = tab_ref[...].astype(jnp.float32)  # (C, L)
+            col = jnp.ones(x.shape, jnp.float32)  # pad columns: benign 1.0
+            for l in range(n_leaves):
+                col = jnp.where((seg == l)[None, :], tab[:, l][:, None], col)
+            if compression == "int8":
+                q = jnp.clip(jnp.round(x / col), -127.0, 127.0)
+                x = q * col
+            else:  # topk: col holds the kth-largest |x| per (client, leaf)
+                x = x * (jnp.abs(x) >= col).astype(jnp.float32)
+
+        agg = jax.lax.dot_general(
+            wn_ref[0, :][None, :].astype(jnp.float32), x,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[0]  # (bd,)
+        if has_dp:
+            agg = agg + noise_ref[...].astype(jnp.float32)
+        lr = lr_ref[0, 0].astype(jnp.float32)
+        if has_mu:
+            mu2 = server_momentum * mu_ref[...].astype(jnp.float32) + agg
+            new_mu_ref[...] = mu2.astype(new_mu_ref.dtype)
+            if server_optimizer == "fedadam":
+                step = lr * mu2 / (jnp.sqrt(jnp.square(agg)) + 1e-3)
+            else:  # fedavgm
+                step = lr * mu2
+        else:
+            step = lr * agg
+        out_ref[...] = (
+            base_ref[...].astype(jnp.float32) + step
+        ).astype(out_ref.dtype)
+
+    return kernel
+
+
+def segment_table(updates, compression, topk_fraction, seg_sizes, pre=None):
+    """(C, L) compression table: int8 dequant scales or top-k thresholds.
+
+    THE single definition of the per-(client, leaf) reduction — the
+    fused ``fl.compression.apply_compression`` path and the Pallas
+    pipeline both consume it, so the epsilon / k-rounding rules cannot
+    drift apart. The int8 scale is the per-leaf reference
+    ``max|x|/127 + 1e-12`` via a segment scatter-max; the top-k
+    threshold is the per-leaf kth-largest |x| from static leaf slices
+    (``lax.top_k`` needs the static per-leaf ``k``).
+
+    ``pre``: optional (C,) positive clip scales. The table is computed
+    on the RAW deltas and rescaled — for a positive per-client scale s,
+    ``max|s·x| = s·max|x|`` and the kth largest of ``|s·x|`` is
+    ``s·(kth largest |x|)`` bitwise, so this equals computing the table
+    on the clipped values without a second elementwise pass (the int8
+    epsilon lands after the rescale, within the enabled-gate tolerance).
+    """
+    c = updates.shape[0]
+    n_leaves = len(seg_sizes)
+    if compression == "int8":
+        seg = jnp.asarray(
+            np.repeat(np.arange(n_leaves), seg_sizes), jnp.int32
+        )
+        tab = (
+            jnp.zeros((c, n_leaves), jnp.float32)
+            .at[:, seg].max(jnp.abs(updates))
+        )
+        if pre is not None:
+            tab = tab * pre[:, None]
+        return tab / 127.0 + 1e-12
+    # topk: kth-largest |x| per (client, leaf); k is static per leaf.
+    offs = np.concatenate(([0], np.cumsum(seg_sizes)))
+    cols = []
+    for l, sz in enumerate(seg_sizes):
+        k = max(1, int(sz * topk_fraction))
+        sl = jnp.abs(updates[:, int(offs[l]):int(offs[l + 1])])
+        cols.append(jax.lax.top_k(sl, k)[0][:, -1:])
+    tab = jnp.concatenate(cols, axis=1)
+    if pre is not None:
+        tab = tab * pre[:, None]
+    return tab
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "clip_norm", "compression", "topk_fraction", "seg_sizes",
+        "server_optimizer", "server_momentum", "block_d", "interpret",
+    ),
+)
+def delta_pipeline_apply(
+    updates: jax.Array,  # (C, P) fused client deltas
+    base: jax.Array,  # (P,) fused global model
+    mask: jax.Array,  # (C,) bool participation
+    weights: jax.Array,  # (C,) |D_i| dataset sizes
+    lr: jax.Array | float = 1.0,  # server lr (traced-safe)
+    staleness: jax.Array | None = None,  # (C,) staleness counts
+    staleness_exponent: jax.Array | float = 0.0,  # a in (1+s)^-a
+    dp_noise: jax.Array | None = None,  # (P,) pre-scaled Gaussian noise
+    momentum: jax.Array | None = None,  # (P,) fused server momentum
+    *,
+    clip_norm: float = 0.0,  # static gate: per-client delta clip (0 = off)
+    compression: str = "none",  # static: none | int8 | topk
+    topk_fraction: float = 0.05,
+    seg_sizes: tuple[int, ...] | None = None,  # fused-buffer leaf sizes
+    server_optimizer: str = "fedavg",  # fedavg | fedavgm | fedadam
+    server_momentum: float = 0.9,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool | None = None,
+):
+    """One-pass fused delta pipeline over the (C, P) buffer.
+
+    Returns the updated (P,) model — or ``(model, new_mu)`` when a
+    ``momentum`` buffer is supplied with a momentum server optimizer.
+
+    Gate semantics mirror the per-stage reference paths exactly:
+    ``clip_norm > 0`` → ``optim.clip_by_global_norm`` per client;
+    ``compression`` → ``fl.compression.apply_compression``;
+    ``staleness`` → ``sim.events.staleness.async_aggregate`` weighting
+    (discount + global damping); ``dp_noise`` → noise added to the
+    aggregate BEFORE the momentum/apply step (``core.privacy``);
+    ``momentum`` → ``fl.round._server_update``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c, d = updates.shape
+    block_d = min(block_d, d)
+    pad = (-d) % block_d
+    if compression not in ("none", "int8", "topk"):
+        raise ValueError(f"unknown compression {compression!r}")
+    if compression != "none" and seg_sizes is None:
+        raise ValueError("compression requires seg_sizes (fused leaf sizes)")
+    if compression != "none" and int(sum(seg_sizes)) != d:
+        raise ValueError(f"seg_sizes sum {sum(seg_sizes)} != P {d}")
+    has_mu = momentum is not None and server_optimizer in (
+        "fedavgm", "fedadam"
+    )
+    has_dp = dp_noise is not None
+
+    # -- per-client scalars: Eq. 6 weights, staleness, clip scales ------ #
+    m = mask.astype(jnp.float32) * weights.astype(jnp.float32)
+    if staleness is not None:
+        # (1+s)^-a discount + global damping — the async_aggregate rule,
+        # bitwise ``fedavg_stacked`` at zero staleness (damping == 1.0).
+        s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
+        disc = (1.0 + s) ** (-jnp.asarray(staleness_exponent, jnp.float32))
+        dm = m * disc
+        wn = dm / (jnp.sum(dm) + _EPS)
+        wn = wn * ((jnp.sum(dm) + _EPS) / (jnp.sum(m) + _EPS))
+    else:
+        wn = m / (jnp.sum(m) + _EPS)
+
+    pre = None
+    if clip_norm and clip_norm > 0:
+        norm = jnp.sqrt(delta_sq_norms(updates, block_d, interpret))
+        pre = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+
+    def padded(x):  # pad the P axis out to a block multiple
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+
+    inputs = [
+        wn[None, :],
+        jnp.asarray(lr, jnp.float32).reshape(1, 1),
+        padded(updates),
+        padded(base),
+    ]
+    in_specs = [
+        pl.BlockSpec((1, c), lambda i: (0, 0)),
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        pl.BlockSpec((c, block_d), lambda i: (0, i)),
+        pl.BlockSpec((block_d,), lambda i: (i,)),
+    ]
+    n_leaves = len(seg_sizes) if seg_sizes else 0
+    if pre is not None:
+        inputs.append(pre[None, :])
+        in_specs.append(pl.BlockSpec((1, c), lambda i: (0, 0)))
+    if compression != "none":
+        seg = jnp.asarray(
+            np.repeat(np.arange(n_leaves), seg_sizes), jnp.int32
+        )
+        tab = segment_table(
+            updates, compression, topk_fraction, seg_sizes, pre=pre
+        )
+        inputs += [padded(seg), tab]
+        in_specs += [
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((c, n_leaves), lambda i: (0, 0)),
+        ]
+    if has_dp:
+        inputs.append(padded(dp_noise))
+        in_specs.append(pl.BlockSpec((block_d,), lambda i: (i,)))
+    if has_mu:
+        inputs.append(padded(momentum))
+        in_specs.append(pl.BlockSpec((block_d,), lambda i: (i,)))
+
+    dp_total = d + pad
+    grid = (dp_total // block_d,)
+    out_shape = [jax.ShapeDtypeStruct((dp_total,), base.dtype)]
+    out_specs = [pl.BlockSpec((block_d,), lambda i: (i,))]
+    if has_mu:
+        out_shape.append(jax.ShapeDtypeStruct((dp_total,), momentum.dtype))
+        out_specs.append(pl.BlockSpec((block_d,), lambda i: (i,)))
+
+    kernel = _make_pipeline_kernel(
+        n_leaves, pre is not None, compression, has_dp, has_mu,
+        server_optimizer, float(server_momentum),
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs if has_mu else out_specs[0],
+        out_shape=out_shape if has_mu else out_shape[0],
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(*inputs)
+    if has_mu:
+        return outs[0][:d], outs[1][:d]
+    return outs[:d]

@@ -1,0 +1,8 @@
+"""Public wrappers for the fused delta-pipeline kernel family."""
+from repro.kernels.delta_pipeline.delta_pipeline import (
+    delta_pipeline_apply,
+    delta_sq_norms,
+    segment_table,
+)
+
+__all__ = ["delta_pipeline_apply", "delta_sq_norms", "segment_table"]

@@ -52,11 +52,17 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import privacy as privacy_mod
 from repro.core.scheduler import account_energy, schedule_round
 from repro.core.types import static_on
 from repro.data.telemetry import step_telemetry
+from repro.fl.fuse import (
+    fuse_clients,
+    fuse_vector,
+    fused_gaussian_noise,
+    leaf_sizes,
+)
 from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.kernels.delta_pipeline import delta_pipeline_apply
 from repro.sim.events.churn import (
     ChurnConfig,
     available_mask,
@@ -147,7 +153,7 @@ class AsyncState(NamedTuple):
     lost_inflight: Array  # () in-flight updates killed by churn
     busy: Array  # (N,) update in flight
     buf: Array  # (N,) completed, awaiting aggregation
-    pending: Any  # (N, ...) delta stored at dispatch time
+    pending: Array  # (N, P) FUSED delta buffer stored at dispatch time
     pend_version: Array  # (N,) model version the delta was computed at
     pend_energy: Array  # (N,) Joules of the in-flight update
     pend_t: Array  # (N,) dispatch time of the in-flight update
@@ -202,9 +208,13 @@ class AsyncFedFogSimulator:
             self.acfg.churn, n, jax.random.fold_in(key, 2718)
         )
         queue = push_event(make_queue(self.capacity), 0.0, -1, KIND_DISPATCH)
-        pending = jax.tree.map(
-            lambda p: jnp.zeros((n,) + p.shape, p.dtype), params
-        )
+        # The in-flight delta stash is carried FUSED as one (N, P) f32
+        # buffer rather than a (N, ...)-stacked pytree: one carry leaf
+        # instead of one per parameter tensor (a real trace/compile-time
+        # cut on the event loop, whose carry dominates the jaxpr), one
+        # masked `where` per dispatch, and the flush feeds it straight
+        # to async_aggregate / the Pallas delta-pipeline kernel.
+        pending = jnp.zeros((n, sum(leaf_sizes(params))), jnp.float32)
         zero = jnp.zeros((), jnp.float32)
         zi = jnp.zeros((), jnp.int32)
         return AsyncState(
@@ -267,10 +277,6 @@ class AsyncFedFogSimulator:
         cfg, acfg = self.cfg, self.acfg
         buf = state.buf
         staleness = (state.version - state.pend_version).astype(jnp.float32)
-        agg = async_aggregate(
-            state.pending, buf, state.env["data_sizes"], staleness,
-            acfg.staleness_exponent,
-        )
         # The first flush after a dispatch consumes that dispatch's keys
         # verbatim (this is what makes cohort mode reproduce the sync
         # round); repeat flushes before the next dispatch fold in the use
@@ -280,17 +286,39 @@ class AsyncFedFogSimulator:
         def fresh(k):
             return jnp.where(uses == 0, k, jax.random.fold_in(k, uses))
 
+        # ``pending`` is already the fused (N, P) buffer; the server step
+        # runs on flat vectors and unfuses once for eval/telemetry. The
+        # DP noise vector uses the reference per-leaf key recipe
+        # (core.privacy.gaussian_mechanism draws), so fusing does not
+        # change the noise stream.
+        base_flat, unfuse_vec = fuse_vector(state.params)
+        noise = None
         if static_on(cfg.dp_sigma):
-            agg = privacy_mod.gaussian_mechanism(
-                agg,
+            noise = fused_gaussian_noise(
                 fresh(state.k_dp),
-                privacy_mod.DPConfig(
-                    sigma=cfg.dp_sigma, sensitivity=cfg.clip_norm or 1.0
-                ),
+                cfg.dp_sigma * (cfg.clip_norm or 1.0),
+                leaf_sizes(state.params),
+                [x.shape for x in jax.tree.leaves(state.params)],
             )
-        params = jax.tree.map(
-            lambda p, a: p + cfg.server_lr * a, state.params, agg
-        )
+        if cfg.use_pallas_agg:
+            # Fused delta-pipeline kernel: staleness-discounted Eq. 6
+            # weighting + reduction + DP noise + apply in ONE pass over
+            # the (N, P) buffer.
+            new_flat = delta_pipeline_apply(
+                state.pending, base_flat, buf, state.env["data_sizes"],
+                lr=cfg.server_lr, staleness=staleness,
+                staleness_exponent=acfg.staleness_exponent,
+                dp_noise=noise,
+            )
+        else:
+            agg = async_aggregate(
+                state.pending, buf, state.env["data_sizes"], staleness,
+                acfg.staleness_exponent,
+            )
+            if noise is not None:
+                agg = agg + noise
+            new_flat = base_flat + cfg.server_lr * agg
+        params = unfuse_vec(new_flat)
         energy = state.pend_energy * buf
         sched = account_energy(state.sched, energy, cfg.scheduler)
         tel = step_telemetry(
@@ -348,6 +376,20 @@ class AsyncFedFogSimulator:
 
     # ------------------------------------------------------------------ #
     def _on_dispatch(self, state: AsyncState, ev) -> AsyncState:
+        """Dispatch handler for the single-pop oracle engine: the core
+        plus the (possible) empty-cohort flush applied in place."""
+        state, want_flush = self._dispatch_core(state, ev)
+        if self.acfg.dispatch_mode == "interval":
+            return state  # want_flush is statically never set
+        return jax.lax.cond(want_flush, self._flush, lambda s: s, state)
+
+    def _dispatch_core(self, state: AsyncState, ev):
+        """The dispatch mechanics WITHOUT the trailing flush ``cond`` —
+        returns ``(state, want_flush)`` so the coalesced step can apply
+        ONE shared flush conditional after the event switch instead of
+        tracing the whole flush graph (aggregation + server step + eval)
+        once per branch. The single-pop oracle wraps it back into
+        ``_on_dispatch`` — values are identical either way."""
         cfg, acfg = self.cfg, self.acfg
         n = cfg.num_clients
         d = state.dispatch_idx
@@ -405,12 +447,9 @@ class AsyncFedFogSimulator:
             admitted,
         )
 
-        # --- stash in-flight work -------------------------------------- #
-        def keep(old, new):
-            m = admitted.reshape((-1,) + (1,) * (new.ndim - 1))
-            return jnp.where(m, new, old)
-
-        pending = jax.tree.map(keep, state.pending, deltas)
+        # --- stash in-flight work (fused (N, P) buffer, one `where`) --- #
+        deltas_cat, _ = fuse_clients(deltas)
+        pending = jnp.where(admitted[:, None], deltas_cat, state.pending)
         state = state._replace(
             queue=queue,
             key=key,
@@ -454,15 +493,14 @@ class AsyncFedFogSimulator:
                     enable=self._more_dispatches(state, t_next),
                 )
             )
+            want_flush = jnp.zeros((), bool)
         else:
             # Empty cohort: nothing will ever complete, so the round's
             # server step (eval / telemetry / DP — exactly what the sync
-            # round does with an empty mask) happens right here, and it
-            # schedules the next dispatch.
-            state = jax.lax.cond(
-                n_admitted == 0, self._flush, lambda s: s, state
-            )
-        return state
+            # round does with an empty mask) happens right after this
+            # dispatch, and it schedules the next dispatch.
+            want_flush = n_admitted == 0
+        return state, want_flush
 
     def _flush_rule(self, busy: Array, buf: Array) -> Array:
         """Whether the server flushes after absorbing completions — THE
@@ -535,7 +573,7 @@ class AsyncFedFogSimulator:
             state = state._replace(
                 queue=q2, t_ms=jnp.maximum(ev.time, state.t_ms)
             )
-            return self._on_dispatch(state, ev)
+            return self._dispatch_core(state, ev)
 
         def do_completes(state):
             popped, t_last, q2 = pop_batch(state.queue, n_take, rank)
@@ -550,15 +588,22 @@ class AsyncFedFogSimulator:
                 completions=state.completions
                 + jnp.sum(arrived.astype(jnp.int32)),
             )
-            return jax.lax.cond(
-                self._flush_rule(state.busy, state.buf),
-                self._flush, lambda s: s, state,
-            )
+            return state, self._flush_rule(state.busy, state.buf)
+
+        def noop(state):
+            return state, jnp.zeros((), bool)
 
         branch = jnp.where(has, jnp.where(first_is_dispatch, 1, 2), 0)
-        return jax.lax.switch(
-            branch, [lambda s: s, do_dispatch, do_completes], state
+        # ONE shared flush conditional after the switch: the branches
+        # only compute *whether* to flush, so the flush graph (staleness
+        # aggregation + server step + telemetry + eval — the bulk of the
+        # loop body's jaxpr) is traced once per step instead of once per
+        # branch. Values are identical to flushing inside each branch,
+        # since nothing runs between the branch tail and the cond.
+        state, want_flush = jax.lax.switch(
+            branch, [noop, do_dispatch, do_completes], state
         )
+        return jax.lax.cond(want_flush, self._flush, lambda s: s, state)
 
     def _scan_events(self, state: AsyncState) -> AsyncState:
         """The whole experiment in one compiled loop.

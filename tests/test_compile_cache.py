@@ -1,0 +1,114 @@
+"""Persistent warm-start compile cache + benchmark-compare plumbing.
+
+The contract of ``REPRO_COMPILE_CACHE_DIR``: a SECOND PROCESS running a
+structurally identical sweep deserializes the first process's AOT
+executables — zero traces, zero compiles (``n_compiles=0``,
+``disk_hits>0``) — and reproduces its histories bit-for-bit.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SWEEP_SCRIPT = """
+import json, sys
+import numpy as np
+from repro.fl.simulator import SimulatorConfig
+from repro.sim import run_sweep
+
+cfg = SimulatorConfig(task="emnist", num_clients=4, rounds=2, top_k=2,
+                      hidden=(8,), seed=0)
+tm = {}
+res = run_sweep(cfg, seeds=[0, 1], axes={"lr": [0.03, 0.05]}, timings=tm)
+out = {k: tm[k] for k in ("n_compiles", "cache_hits", "disk_hits")}
+out["accuracy"] = np.asarray(res.metric("accuracy")).tolist()
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def _run_sweep_process(cache_dir, engine_script=_SWEEP_SCRIPT):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    env["REPRO_COMPILE_CACHE_DIR"] = str(cache_dir)
+    proc = subprocess.run(
+        [sys.executable, "-c", engine_script], capture_output=True,
+        text=True, env=env, cwd=REPO, timeout=900,
+    )
+    assert proc.returncode == 0, (proc.stdout[-2000:], proc.stderr[-2000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout[-2000:]
+    return json.loads(line[-1][len("RESULT:"):])
+
+
+def test_second_process_warm_starts_with_zero_compiles(tmp_path):
+    cold = _run_sweep_process(tmp_path)
+    assert cold["n_compiles"] == 1 and cold["disk_hits"] == 0
+    assert any(f.endswith(".jaxexe") for f in os.listdir(tmp_path))
+    warm = _run_sweep_process(tmp_path)
+    assert warm["n_compiles"] == 0, warm
+    assert warm["disk_hits"] == 1 and warm["cache_hits"] == 1, warm
+    # replaying the serialized executable is exact
+    np.testing.assert_array_equal(
+        np.asarray(cold["accuracy"]), np.asarray(warm["accuracy"])
+    )
+
+
+def test_corrupt_disk_entry_falls_back_to_compile(tmp_path):
+    cold = _run_sweep_process(tmp_path)
+    assert cold["n_compiles"] == 1
+    for f in os.listdir(tmp_path):
+        if f.endswith(".jaxexe"):
+            with open(os.path.join(tmp_path, f), "wb") as fh:
+                fh.write(b"not an executable")
+    recovered = _run_sweep_process(tmp_path)
+    assert recovered["n_compiles"] == 1 and recovered["disk_hits"] == 0
+    np.testing.assert_array_equal(
+        np.asarray(cold["accuracy"]), np.asarray(recovered["accuracy"])
+    )
+
+
+# --------------------------------------------------------------------- #
+# benchmarks/run.py --compare row tolerance (satellite)
+# --------------------------------------------------------------------- #
+def _compare(records, baseline, tmp_path, tolerance=25.0):
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks.run import compare_to_baseline
+    finally:
+        sys.path.pop(0)
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"rows": baseline}))
+    return compare_to_baseline(records, str(path), tolerance)
+
+
+def test_compare_tolerates_missing_and_renamed_rows(tmp_path, capsys):
+    baseline = [
+        {"suite": "s", "name": "s/kept", "us_per_call": 100.0},
+        {"suite": "s", "name": "s/renamed_away", "us_per_call": 50.0},
+        {"suite": "other", "name": "other/not_run", "us_per_call": 10.0},
+    ]
+    records = [
+        {"suite": "s", "name": "s/kept", "us_per_call": 110.0},
+        {"suite": "s", "name": "s/brand_new", "us_per_call": 5.0},
+    ]
+    # renamed/missing baseline rows warn but do NOT count as regressions
+    assert _compare(records, baseline, tmp_path) == 0
+    out = capsys.readouterr().out
+    assert "s/renamed_away" in out and "skipped" in out
+    # rows from suites that were not part of this run are not flagged
+    assert "other/not_run" not in out
+
+
+def test_compare_still_fails_on_shared_row_regressions(tmp_path):
+    baseline = [
+        {"suite": "s", "name": "s/kept", "us_per_call": 100.0},
+        {"suite": "s", "name": "s/renamed_away", "us_per_call": 50.0},
+    ]
+    records = [{"suite": "s", "name": "s/kept", "us_per_call": 200.0}]
+    assert _compare(records, baseline, tmp_path) == 1
