@@ -133,4 +133,40 @@ def run() -> list[Row]:
                 speedup=t_unfused / max(t_fused, 1e-9)),
         )
     )
+
+    # sharded delta pipeline: shard_map + per-shard partial kernel + one
+    # psum on an 8-fake-device mesh, vs the single-device fused kernel on
+    # the same (32, 32k) buffer. Subprocess: the fake-device flag must be
+    # set before jax initializes (this process is already single-device).
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(repo, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m",
+         "repro.kernels.delta_pipeline.sharded_selftest",
+         "--json", "--bench", "--devices", "8"],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=1200,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded selftest rc={proc.returncode}: {proc.stderr[-500:]}"
+        )
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    b = res["bench"]
+    rows.append(
+        Row(
+            "kernels/delta_pipeline_sharded",
+            b["sharded_us"],
+            fmt(sharded_us=b["sharded_us"], unsharded_us=b["unsharded_us"],
+                c=b["c"], p=b["p"], devices=res["devices"],
+                gate_matrix_ok=res["ok"]),
+        )
+    )
     return rows

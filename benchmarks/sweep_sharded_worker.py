@@ -1,0 +1,72 @@
+"""Worker for the ``sweep_sharded`` row (run as a SUBPROCESS).
+
+Backs N fake CPU devices and runs the grouped lr-grid sweep with
+``run_sweep(devices=N)`` — the vmapped seed batch sharded across the
+device mesh, every device executing |seeds|/N simulations of each grid
+point in parallel. Must run in its own process because the fake-device
+flag has to be set before jax initializes its backend.
+
+Prints one JSON line: wall/compile/exec attribution plus an accuracy
+checksum (per-seed results are device-count invariant — verified by
+test_sweep_devices_sharding_bit_identical).
+"""
+import os
+import sys
+
+if __name__ == "__main__":  # set BEFORE any jax import in this process
+    _n = "8"
+    for _i, _a in enumerate(sys.argv):
+        if _a == "--devices" and _i + 1 < len(sys.argv):
+            _n = sys.argv[_i + 1]
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--seeds", type=int, default=8)
+    ap.add_argument("--topk", type=int, default=12)
+    ap.add_argument("--lrs", default="0.03,0.04,0.05,0.06")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+
+    from repro.fl.simulator import SimulatorConfig
+    from repro.sim import run_sweep
+
+    base = SimulatorConfig(
+        task="emnist", num_clients=args.clients, rounds=args.rounds,
+        top_k=args.topk,
+    )
+    lrs = [float(x) for x in args.lrs.split(",")]
+    tm: dict = {}
+    t0 = time.time()
+    res = run_sweep(
+        base, seeds=range(args.seeds), axes={"lr": lrs},
+        rounds=args.rounds, devices=args.devices, timings=tm,
+    )
+    wall = time.time() - t0
+    print(json.dumps({
+        "wall_s": wall,
+        "trace_s": tm.get("trace_s", 0.0),
+        "compile_s": tm.get("compile_s", 0.0),
+        "exec_s": tm.get("exec_s", 0.0),
+        "sim_rounds": len(res.configs) * args.seeds * args.rounds,
+        "devices": args.devices,
+        "acc_mean": float(np.asarray(res.metric("accuracy")).mean()),
+    }))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,6 +22,12 @@ echo "=== async event engine smoke (2 virtual seconds) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.sim.events.engine --horizon-ms 2000
 
+echo "=== sharded delta-pipeline selftest (8 fake devices, gate matrix) ==="
+# shard_map kernel == single-device kernel == jnp oracle, with exactly
+# ONE client-crossing all-reduce per compiled case (exit 1 on any miss).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.kernels.delta_pipeline.sharded_selftest --devices 8
+
 echo "=== simulator perf gate (looped/scanned/sweep/async vs BENCH_simulator.json) ==="
 # Gate-only against the committed baseline (exit non-zero on a >25%
 # per-row regression). The baseline is NOT rewritten on ordinary runs —

@@ -268,6 +268,31 @@ def inter_client_all_reduces(
     return count, delta_bytes
 
 
+def assert_inter_client_contract(
+    analysis: HLOAnalysis, rules, param_count: int
+) -> tuple[int, float]:
+    """Post-compile guard for the paper's §III communication contract:
+    exactly ONE delta-sized all-reduce crosses the client axes per
+    compiled round. No-op (count 0 by construction) when the client
+    axes span a single device. Returns (count, delta_bytes) so callers
+    can log what they checked. Raises AssertionError on violation —
+    both the reference fused-buffer aggregation and the sharded
+    delta-pipeline kernel path must satisfy it."""
+    count, delta_bytes = inter_client_all_reduces(analysis, rules, param_count)
+    ways = getattr(rules, "client_ways", None)
+    if ways is None:
+        ways = math.prod(
+            int(rules.mesh.shape.get(a, 1)) for a in rules.plan.client_axes
+        )
+    if ways > 1 and count != 1:
+        raise AssertionError(
+            f"inter-client all-reduce contract violated: found {count} "
+            f"delta-sized ({delta_bytes:.0f}B) all-reduces crossing "
+            f"{tuple(rules.plan.client_axes)}, expected exactly 1"
+        )
+    return count, delta_bytes
+
+
 def count_axis_crossing(
     analysis: HLOAnalysis,
     mesh,

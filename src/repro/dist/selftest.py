@@ -28,6 +28,7 @@ if __name__ == "__main__":  # set BEFORE any jax import in this process
 
 # ruff: noqa: E402
 import argparse
+import dataclasses
 import json
 import time
 
@@ -41,14 +42,27 @@ def run_selftest(
     batch_per_slot: int = 4,
     rounds: int = 1,
     zero: int | None = None,
+    pallas_agg: bool = False,
+    gates: str = "legacy",
 ) -> dict:
-    """Compile (and optionally execute + cross-check) one sharded round."""
+    """Compile (and optionally execute + cross-check) one sharded round.
+
+    ``pallas_agg=True`` turns on ``use_pallas_agg`` so the sharded round
+    routes through the shard_map'd delta-pipeline kernel; ``gates``
+    picks the server-pipeline config: "legacy" = the historical default
+    (FedAvgM, nothing else), "plain" = bare FedAvg (every kernel gate
+    off), "full" = DP + momentum + compression all on.
+    """
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_reduced
     from repro.configs.shapes import concrete_batch, ShapeSpec
-    from repro.dist.hlo_analysis import analyze_hlo, inter_client_all_reduces
+    from repro.dist.hlo_analysis import (
+        analyze_hlo,
+        assert_inter_client_contract,
+        inter_client_all_reduces,
+    )
     from repro.dist.sharding import make_rules
     from repro.fl import FLConfig, init_fl_state, make_round_fn
     from repro.models import Runtime, build_model
@@ -65,12 +79,26 @@ def run_selftest(
     rules = make_rules(None, cfg, device_count=devices, zero=zero)
     plan = rules.plan
 
+    if gates == "full":
+        gate_kw = dict(
+            server_optimizer="fedavgm",
+            clip_norm=1.0,
+            dp_sigma=1e-3,
+            compression="int8",
+        )
+    elif gates == "plain":  # bare FedAvg: every server-pipeline gate off
+        gate_kw = dict(server_optimizer="fedavg")
+    elif gates == "legacy":
+        gate_kw = dict(server_optimizer="fedavgm")
+    else:
+        raise ValueError(f"unknown gates preset {gates!r}")
     fl_cfg = FLConfig(
         num_clients=max(2 * plan.num_clients, 8),
         slots=plan.num_clients,
         local_steps=1,
         inner_optimizer="sgdm",
-        server_optimizer="fedavgm",
+        use_pallas_agg=pallas_agg,
+        **gate_kw,
     )
     global_batch = plan.num_clients * batch_per_slot
     shape = ShapeSpec("selftest", "train", seq_len, global_batch)
@@ -117,9 +145,17 @@ def run_selftest(
     hlo = analyze_hlo(compiled.as_text())
     # The delta aggregation moves whole-model bytes; metric scalars don't.
     inter_client, _ = inter_client_all_reduces(hlo, rules, model.param_count())
+    contract_err = None
+    try:
+        assert_inter_client_contract(hlo, rules, model.param_count())
+    except AssertionError as e:
+        contract_err = str(e)
     result = {
         "arch": arch,
         "devices": devices,
+        "pallas_agg": pallas_agg,
+        "gates": gates,
+        "contract_error": contract_err,
         "plan": {
             "num_clients": plan.num_clients,
             "zero": plan.zero,
@@ -132,12 +168,14 @@ def run_selftest(
             k: round(v) for k, v in hlo.collectives.bytes_by_kind.items()
         },
         "inter_client_all_reduces": inter_client,
-        "ok": inter_client == 1,
+        "ok": inter_client == 1 and contract_err is None,
     }
     if not check:
         return result
 
     # ---- equivalence: sharded vs single-device ------------------------ #
+    # Same fl_cfg → with pallas_agg on, this compares the shard_map'd
+    # kernel against the UNSHARDED kernel on one device.
     round_plain = jax.jit(
         make_round_fn(model, fl_cfg, Runtime(), flops_per_client_round=flops)
     )
@@ -149,14 +187,17 @@ def run_selftest(
         k: abs(float(m_sh[k]) - float(m_pl[k]))
         for k in m_pl
     }
-    flat_a = jax.tree.leaves(jax.device_get(s_sh.params))
-    flat_b = jax.tree.leaves(jax.device_get(s_pl.params))
     import numpy as np
 
-    max_param_diff = max(
-        float(np.max(np.abs(a.astype(np.float64) - b.astype(np.float64))))
-        for a, b in zip(flat_a, flat_b)
-    )
+    def _max_diff(sa, sb):
+        flat_a = jax.tree.leaves(jax.device_get(sa.params))
+        flat_b = jax.tree.leaves(jax.device_get(sb.params))
+        return max(
+            float(np.max(np.abs(a.astype(np.float64) - b.astype(np.float64))))
+            for a, b in zip(flat_a, flat_b)
+        )
+
+    max_param_diff = _max_diff(s_sh, s_pl)
     metrics_ok = all(
         v <= 1e-3 * (1.0 + abs(float(m_pl[k]))) for k, v in diffs.items()
     )
@@ -166,6 +207,25 @@ def run_selftest(
         loss=float(m_pl["loss"]),
         equivalence_ok=bool(metrics_ok and max_param_diff < 1e-4),
     )
+    if pallas_agg:
+        # Third leg: the pure-reference round (kernel off everywhere)
+        # must also agree — sharded kernel == unsharded kernel == ref.
+        round_ref = jax.jit(
+            make_round_fn(
+                model,
+                dataclasses.replace(fl_cfg, use_pallas_agg=False),
+                Runtime(),
+                flops_per_client_round=flops,
+            )
+        )
+        s_rf = state
+        for _ in range(rounds):
+            s_rf, _m_rf = round_ref(s_rf, batch)
+        ref_diff = _max_diff(s_sh, s_rf)
+        result["max_param_diff_ref"] = ref_diff
+        result["equivalence_ok"] = bool(
+            result["equivalence_ok"] and ref_diff < 1e-4
+        )
     result["ok"] = bool(result["ok"] and result["equivalence_ok"])
     return result
 
@@ -178,11 +238,17 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--no-check", action="store_true",
                     help="compile + HLO analysis only (no execution)")
+    ap.add_argument("--pallas-agg", action="store_true",
+                    help="route through the sharded delta-pipeline kernel")
+    ap.add_argument("--gates", default="legacy",
+                    choices=("legacy", "plain", "full"),
+                    help="server-pipeline gate preset")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
     res = run_selftest(
         args.arch, args.devices, check=not args.no_check,
         seq_len=args.seq_len, zero=args.zero,
+        pallas_agg=args.pallas_agg, gates=args.gates,
     )
     if args.json:
         print(json.dumps(res))

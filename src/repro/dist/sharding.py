@@ -114,6 +114,37 @@ class ShardingRules:
         return self._present(("zero",))
 
     @property
+    def client_ways(self) -> int:
+        """Total mesh extent the client/slot axis is sharded over."""
+        prod = 1
+        for a in self._present(self.plan.client_axes):
+            prod *= self._axis_size(a)
+        return prod
+
+    def fused_delta_spec(self, p_total: int | None = None, *,
+                         shard_p: bool = True):
+        """PartitionSpec for the fused (C, P) client-delta buffer: the
+        client dim over the plan's client axes, the P dim over zero when
+        it divides (the reference one-all-reduce aggregation layout).
+        ``shard_p=False`` keeps P whole per client shard — the layout
+        the sharded delta-pipeline kernel consumes (each shard needs its
+        clients' full rows for exact clip norms / compression tables)."""
+        from jax.sharding import PartitionSpec as P
+
+        z = "zero" if shard_p and self._axis_size("zero") > 1 else None
+        if z is not None and p_total is not None and p_total % self._axis_size("zero"):
+            z = None
+        return P(self._as_spec_entry(self.plan.client_axes), z)
+
+    def fused_delta_sharding(self, p_total: int | None = None, *,
+                             shard_p: bool = True):
+        from jax.sharding import NamedSharding
+
+        return NamedSharding(
+            self.mesh, self.fused_delta_spec(p_total, shard_p=shard_p)
+        )
+
+    @property
     def serve_batch_axes(self) -> tuple[str, ...]:
         """All data axes — how a serving batch dim shards (no slot stack)."""
         return self._present(self.plan.data_axes)

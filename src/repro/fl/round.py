@@ -38,7 +38,10 @@ from repro.fl.fuse import (
     stacked_leaf_sizes,
 )
 from repro.fl.state import FLConfig, FLState
-from repro.kernels.delta_pipeline import delta_pipeline_apply
+from repro.kernels.delta_pipeline import (
+    delta_pipeline_apply,
+    delta_pipeline_apply_sharded,
+)
 from repro.models.transformer import Runtime
 from repro.optim import adamw, apply_updates, clip_by_global_norm, sgdm
 from repro.sim.des import RoundCostModel
@@ -52,12 +55,6 @@ class AttackConfig:
     fraction: float = 0.0  # fraction of malicious slots
     noise_scale: float = 0.5
     replacement_scale: float = 10.0
-
-
-# Fused (C, P) buffer helpers now live in fl/fuse.py (shared with the
-# simulator, compression and the async event engine); the name is kept
-# for the sharded-round plumbing below.
-_fuse_clients = fuse_clients
 
 
 def _inner_optimizer(fl_cfg: FLConfig):
@@ -115,17 +112,24 @@ def make_round_fn(
     # §IV.F cost accounting shared with the paper-scale simulator — both
     # engines derive energy/cold-start semantics from the same model.
     cost_model = RoundCostModel.from_scheduler(fl_cfg.scheduler)
-    # Pallas-fused delta pipeline: clip → compression emulation → Eq. 6
-    # aggregate → DP noise → server momentum → apply, in ONE HBM pass
-    # over the fused (C, P) buffer (plus a norm-reduction pass when
-    # clipping — kernels/delta_pipeline). Only on the single-host path
-    # (under mesh rules the aggregation must stay the one sharded
-    # all-reduce) with FedAvg-family semantics; robust aggregators
-    # (median/trimmed) and attack evaluation configs (the attack lands
-    # between clip and compress) keep the reference path.
-    use_pallas = (
+    # Pallas-fused delta pipeline: clip → compression emulation →
+    # aggregate (Eq. 6 / in-kernel median / trimmed) → DP noise → server
+    # momentum → apply, in ONE HBM pass over the fused (C, P) buffer
+    # (plus a norm-reduction pass when clipping — kernels/delta_pipeline).
+    # Single-host: every aggregator runs in-kernel; delta attacks
+    # (noise/dropout/model_replacement) land between clip and compress,
+    # so those two stages split out of the kernel (clip+corrupt outside,
+    # compression onward fused). Under mesh `rules` the sharded entry
+    # (`delta_pipeline_apply_sharded`) runs the same pipeline per client
+    # shard with exactly ONE cross-shard psum — the one-all-reduce HLO
+    # contract holds on the fast path too. Robust aggregators need the
+    # full client axis on-device to sort, so under rules they keep the
+    # reference (fused-buffer all-reduce) path. Full matrix:
+    # docs/EXPERIMENTS.md "Pipeline-kernel gates".
+    use_pallas = fl_cfg.use_pallas_agg and rules is None
+    use_pallas_sharded = (
         fl_cfg.use_pallas_agg
-        and rules is None
+        and rules is not None
         and fl_cfg.aggregator == "fedavg"
         and attack.kind == "none"
     )
@@ -152,19 +156,19 @@ def make_round_fn(
 
         _client_ent = rules._as_spec_entry(rules.plan.client_axes)
         _zero_ent = "zero" if "zero" in rules.mesh.shape else None
-        _zero_size = rules.mesh.shape.get("zero", 1)
 
-        def fuse_deltas(tree):
+        def fuse_deltas(tree, shard_p=True):
             """Concat every delta leaf into ONE (C, P) f32 buffer so the
             cross-client aggregation lowers to a single all-reduce — the
             paper's one-collective-per-round contract, asserted by
             dist.hlo_analysis on the compiled round. Returns the buffer
-            and the inverse (split + reshape + cast back)."""
-            cat, unfuse = _fuse_clients(tree)
-            p_total = cat.shape[1]
-            z_ent = _zero_ent if p_total % max(_zero_size, 1) == 0 else None
+            and the inverse (split + reshape + cast back).
+            ``shard_p=False`` gives the sharded-kernel layout (client
+            axis split, full P rows per shard)."""
+            cat, unfuse = fuse_clients(tree)
             cat = jax.lax.with_sharding_constraint(
-                cat, NamedSharding(rules.mesh, P(_client_ent, z_ent))
+                cat,
+                rules.fused_delta_sharding(cat.shape[1], shard_p=shard_p),
             )
             return cat, unfuse
 
@@ -313,11 +317,16 @@ def make_round_fn(
             params_stacked,
             params0,
         )
-        if not use_pallas:
+        use_kernel = use_pallas or use_pallas_sharded
+        # Delta attacks land BETWEEN clip and compress, so when the
+        # kernel path is on those two stages split: reference clip +
+        # corrupt here, compression onward stays fused (the kernel then
+        # runs with clip_norm=0).
+        split_clip = use_kernel and attack.kind not in ("none", "label_flip")
+        if not use_kernel:
             # Reference pipeline: one XLA pass per stage per leaf. On
             # the fused path these stages all fold into the kernel call
-            # below (the attack gate guarantees nothing lands between
-            # clip and compress there).
+            # below.
             if fl_cfg.clip_norm > 0:
                 deltas = jax.vmap(
                     lambda d: clip_by_global_norm(d, fl_cfg.clip_norm)[0]
@@ -334,15 +343,33 @@ def make_round_fn(
             deltas = apply_compression(
                 deltas, fl_cfg.compression, fl_cfg.topk_fraction
             )
+        elif split_clip:
+            if fl_cfg.clip_norm > 0:
+                deltas = jax.vmap(
+                    lambda d: clip_by_global_norm(d, fl_cfg.clip_norm)[0]
+                )(deltas)
+            deltas = attacks_mod.corrupt_deltas(
+                deltas, malicious, attack.kind, k_attack,
+                noise_scale=attack.noise_scale,
+                replacement_scale=attack.replacement_scale,
+            )
+            slot_mask = attacks_mod.dropout_mask(
+                slot_mask, malicious, attack.kind
+            )
 
         # ---- 4+5. aggregate (Eq. 6) + server update -------------------- #
-        if use_pallas:
+        if use_kernel:
             # Fused delta-pipeline kernel: clip, compression emulation,
-            # weighting/reduction, DP noise, server momentum and the
-            # apply all happen in one pass over the fused (C, P) buffer
-            # — the memory-bound pipeline never re-reads the delta stack
-            # from HBM (clipping adds one norm-reduction pass).
-            cat_d, _ = _fuse_clients(deltas)
+            # aggregation, DP noise, server momentum and the apply all
+            # happen in one pass over the fused (C, P) buffer — the
+            # memory-bound pipeline never re-reads the delta stack from
+            # HBM (clipping adds one norm-reduction pass). Under mesh
+            # rules the buffer is client-sharded and the sharded entry
+            # combines per-shard partial sums with ONE psum.
+            if use_pallas_sharded:
+                cat_d, _ = fuse_deltas(deltas, shard_p=False)
+            else:
+                cat_d, _ = fuse_clients(deltas)
             base_flat, unfuse_vec = fuse_vector(params0)
             seg = stacked_leaf_sizes(deltas)
             noise = None
@@ -359,16 +386,29 @@ def make_round_fn(
                 and state.server_mu is not None
             ):
                 mu_flat, unfuse_mu = fuse_vector(state.server_mu)
-            outs = delta_pipeline_apply(
-                cat_d, base_flat, slot_mask, slot_sizes,
+            kernel_clip = 0.0 if split_clip else fl_cfg.clip_norm
+            kw = dict(
                 lr=fl_cfg.server_lr, dp_noise=noise, momentum=mu_flat,
-                clip_norm=fl_cfg.clip_norm,
+                clip_norm=kernel_clip,
                 compression=fl_cfg.compression,
                 topk_fraction=fl_cfg.topk_fraction,
                 seg_sizes=seg,
                 server_optimizer=fl_cfg.server_optimizer,
                 server_momentum=fl_cfg.server_momentum,
             )
+            if use_pallas_sharded:
+                outs = delta_pipeline_apply_sharded(
+                    cat_d, base_flat, slot_mask, slot_sizes,
+                    mesh=rules.mesh, client_axes=rules.plan.client_axes,
+                    **kw,
+                )
+            else:
+                outs = delta_pipeline_apply(
+                    cat_d, base_flat, slot_mask, slot_sizes,
+                    trim_fraction=fl_cfg.trim_fraction,
+                    aggregator=fl_cfg.aggregator,
+                    **kw,
+                )
             if mu_flat is not None:
                 new_flat, new_mu_flat = outs
                 new_mu = unfuse_mu(new_mu_flat)
@@ -387,7 +427,9 @@ def make_round_fn(
             if fl_cfg.aggregator == "median":
                 agg = agg_mod.median_aggregate(agg_in, slot_mask)
             elif fl_cfg.aggregator == "trimmed":
-                agg = agg_mod.trimmed_mean_aggregate(agg_in, slot_mask)
+                agg = agg_mod.trimmed_mean_aggregate(
+                    agg_in, slot_mask, fl_cfg.trim_fraction
+                )
             else:
                 agg = agg_mod.fedavg_stacked(agg_in, slot_mask, slot_sizes)
             if unfuse is not None:

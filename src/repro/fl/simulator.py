@@ -119,11 +119,15 @@ class SimulatorConfig:
     dp_sigma: float = 0.0
     clip_norm: float = 0.0
     server_lr: float = 1.0
-    # Route Eq. 6 aggregation + DP noise + server apply through the
+    aggregator: str = "fedavg"  # "fedavg" | "median" | "trimmed"
+    trim_fraction: float = 0.1  # trimmed-mean tail fraction per side
+    # Route the aggregation (Eq. 6 weighted sum, or the in-kernel
+    # median / trimmed selection) + DP noise + server apply through the
     # fused Pallas delta-pipeline kernel (kernels/delta_pipeline): one
     # HBM pass over the (N, P) delta stack instead of one per stage per
     # leaf. Also engages on the async engine's flush path (staleness
-    # discounting included). Interpret-mode fallback off-TPU — a
+    # discounting included; robust aggregators are unweighted so they
+    # ignore staleness there). Interpret-mode fallback off-TPU — a
     # correctness tool, slow on CPU, hence default off.
     use_pallas_agg: bool = False
     hidden: tuple[int, ...] = (128, 64)
@@ -356,8 +360,9 @@ class FedFogSimulator:
         )
 
         if cfg.use_pallas_agg:
-            # Fused delta-pipeline kernel: Eq. 6 weighting + reduction +
-            # DP noise + apply in ONE pass over the fused (N, P) delta
+            # Fused delta-pipeline kernel: aggregation (Eq. 6 weighting,
+            # or the in-kernel median / trimmed selection network) + DP
+            # noise + apply in ONE pass over the fused (N, P) delta
             # stack (clip/compression already happened in _local_deltas,
             # shared with the async engine). The DP noise vector is
             # built with the reference per-leaf key recipe, so enabling
@@ -377,10 +382,19 @@ class FedFogSimulator:
             new_flat = delta_pipeline_apply(
                 cat_d, base_flat, mask, env["data_sizes"],
                 lr=cfg.server_lr, dp_noise=noise,
+                trim_fraction=cfg.trim_fraction,
+                aggregator=cfg.aggregator,
             )
             new_params = unfuse_vec(new_flat)
         else:
-            agg = agg_mod.fedavg_stacked(deltas, mask, env["data_sizes"])
+            if cfg.aggregator == "median":
+                agg = agg_mod.median_aggregate(deltas, mask)
+            elif cfg.aggregator == "trimmed":
+                agg = agg_mod.trimmed_mean_aggregate(
+                    deltas, mask, cfg.trim_fraction
+                )
+            else:
+                agg = agg_mod.fedavg_stacked(deltas, mask, env["data_sizes"])
             if static_on(cfg.dp_sigma):
                 agg = privacy_mod.gaussian_mechanism(
                     agg,
@@ -489,5 +503,39 @@ class FedFogSimulator:
         )
         self.params, self.sched_state, self.telemetry = params, sched, tel
         host = jax.device_get(stacked)  # single device→host transfer
+        history = {name: [float(x) for x in v] for name, v in host.items()}
+        return self._finalize(history, rounds)
+
+    def aot_scanned(self, rounds: int | None = None):
+        """AOT-compile the scan program (``jit.lower(...).compile()``).
+
+        The jit dispatch caches are per-instance, so a seed sweep of
+        fresh simulators would otherwise recompile per instance; the
+        returned executable can be shared across any ``FedFogSimulator``
+        with the same config shape via ``run_scanned_with``. Note the
+        AOT path does NOT populate this instance's jit cache — execute
+        through the returned object, not ``run_scanned()``.
+        """
+        rounds = int(rounds or self.cfg.rounds)
+        self._ensure_state()
+        key = jax.random.PRNGKey(self.cfg.seed + 100)
+        return self._scan_jit.lower(
+            self.env, self.params, self.sched_state, self.telemetry, key,
+            rounds=rounds,
+        ).compile()
+
+    def run_scanned_with(
+        self, compiled, rounds: int | None = None
+    ) -> dict[str, Any]:
+        """``run_scanned`` semantics through a pre-compiled executable
+        from ``aot_scanned`` (this instance's or a same-shape peer's)."""
+        rounds = int(rounds or self.cfg.rounds)
+        self._ensure_state()
+        key = jax.random.PRNGKey(self.cfg.seed + 100)
+        params, sched, tel, stacked = compiled(
+            self.env, self.params, self.sched_state, self.telemetry, key
+        )
+        self.params, self.sched_state, self.telemetry = params, sched, tel
+        host = jax.device_get(stacked)
         history = {name: [float(x) for x in v] for name, v in host.items()}
         return self._finalize(history, rounds)

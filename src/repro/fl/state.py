@@ -52,19 +52,23 @@ class FLConfig:
 
     # Aggregation & robustness.
     aggregator: str = "fedavg"  # "fedavg" | "median" | "trimmed"
+    trim_fraction: float = 0.1  # trimmed-mean tail fraction per side
     clip_norm: float = 0.0  # per-client delta clip (0 = off); DP sensitivity S
     dp_sigma: float = 0.0  # central DP noise scale (0 = off)
     compression: str = "none"  # "none" | "int8" | "topk"
     topk_fraction: float = 0.05
     # Fuse the whole server-side delta pipeline — clip, top-k/int8
-    # compression emulation, Eq. 6 aggregation, DP noise, server
-    # momentum, apply — into the Pallas kernel family
+    # compression emulation, aggregation (Eq. 6 weighted sum, or the
+    # in-kernel bitonic median / trimmed-mean selection), DP noise,
+    # server momentum, apply — into the Pallas kernel family
     # (kernels/delta_pipeline): one HBM pass over the fused (C, P)
-    # delta buffer (clipping adds a norm-reduction pass). Applies on
-    # the single-host path with the FedAvg aggregator and no attack;
-    # otherwise (mesh rules / median / trimmed / attacks) the round
-    # silently keeps the reference path, preserving the
-    # one-inter-client-all-reduce HLO contract.
+    # delta buffer (clipping adds a norm-reduction pass). Single-host,
+    # every aggregator and attack config runs in-kernel (delta attacks
+    # split clip+corrupt out, keeping compression onward fused). Under
+    # mesh rules the FedAvg/no-attack configs route through the sharded
+    # entry (one cross-shard psum — the one-all-reduce HLO contract
+    # holds on the fast path); median/trimmed under rules keep the
+    # reference path. Full matrix: docs/EXPERIMENTS.md.
     use_pallas_agg: bool = False
 
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)

@@ -1,5 +1,7 @@
 from repro.kernels.delta_pipeline.ops import (
     delta_pipeline_apply,
+    delta_pipeline_apply_sharded,
+    delta_pipeline_partial,
     delta_sq_norms,
     segment_table,
 )
@@ -7,6 +9,8 @@ from repro.kernels.delta_pipeline.ref import delta_pipeline_ref
 
 __all__ = [
     "delta_pipeline_apply",
+    "delta_pipeline_apply_sharded",
+    "delta_pipeline_partial",
     "delta_sq_norms",
     "delta_pipeline_ref",
     "segment_table",

@@ -45,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.pallas_compat import CompilerParams, interpret_default
 
 DEFAULT_BLOCK_D = 2048
 _EPS = 1e-12  # matches core.aggregation._EPS / sim.events.staleness
@@ -70,8 +70,7 @@ def delta_sq_norms(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Per-client Σx² over the fused delta buffer — one HBM pass."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = interpret_default(interpret)
     c, d = updates.shape
     block_d = min(block_d, d)
     pad = (-d) % block_d
@@ -90,6 +89,89 @@ def delta_sq_norms(
 
 
 # --------------------------------------------------------------------- #
+# shared tile transform (clip scale + compression expansion)
+# --------------------------------------------------------------------- #
+def _transform_tile(x, pre_ref, seg_ref, tab_ref, compression, n_leaves):
+    """The per-tile pre-aggregation transform, shared by the full
+    pipeline kernel, the sharded partial-sum kernel and the selection
+    kernels: optional clip pre-scale, then compression emulation via a
+    static ``n_leaves``-way select chain over the (C, L) table."""
+    if pre_ref is not None:
+        x = x * pre_ref[0, :][:, None]
+    if compression != "none":
+        # Expand the (C, L) per-leaf table to per-column values with
+        # a static L-way select chain — no dynamic gather, so the
+        # tile stays VPU-only on TPU.
+        seg = seg_ref[...]  # (bd,) int32 leaf-segment ids
+        tab = tab_ref[...].astype(jnp.float32)  # (C, L)
+        col = jnp.ones(x.shape, jnp.float32)  # pad columns: benign 1.0
+        for l in range(n_leaves):
+            col = jnp.where((seg == l)[None, :], tab[:, l][:, None], col)
+        if compression == "int8":
+            q = jnp.clip(jnp.round(x / col), -127.0, 127.0)
+            x = q * col
+        else:  # topk: col holds the kth-largest |x| per (client, leaf)
+            x = x * (jnp.abs(x) >= col).astype(jnp.float32)
+    return x
+
+
+def _bitonic_sort(x):
+    """Ascending sort along axis 0 via a static bitonic compare-exchange
+    network (axis-0 extent must be a power of two; callers pad with
+    +inf). Produces the exact same sorted VALUES as ``jnp.sort`` — the
+    sorted sequence of a float multiset is unique — which is what makes
+    the in-kernel median/trimmed selection bitwise-equal to the
+    ``core.aggregation`` references. Pure where/compare ops, so it
+    lowers on TPU where ``sort`` does not."""
+    n = x.shape[0]
+    tail = (None,) * (x.ndim - 1)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            idx = jnp.arange(n)
+            partner = idx ^ j
+            keep_min = (idx < partner) == ((idx & k) == 0)
+            px = x[partner]
+            lo = jnp.where(x <= px, x, px)
+            hi = jnp.where(x <= px, px, x)
+            x = jnp.where(keep_min[(...,) + tail], lo, hi)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _select_aggregate(x, sel, cnt_ref, aggregator):
+    """Masked coordinate-wise median / trimmed mean over the client axis
+    of one (C, bd) tile — bitwise ``core.aggregation.median_aggregate``/
+    ``trimmed_mean_aggregate`` semantics (+inf sentinel sort, identical
+    index arithmetic). ``cnt_ref`` is the (1, 2) int32 [num_sel, k_trim]
+    pair, traced data so participation masks stay dynamic."""
+    c = x.shape[0]
+    big = jnp.where(sel[:, None], x, jnp.inf)
+    n2 = 1 << max((c - 1).bit_length(), 0)
+    if n2 > c:  # pad the client axis to a power of two for the network
+        big = jnp.concatenate(
+            [big, jnp.full((n2 - c,) + x.shape[1:], jnp.inf, big.dtype)],
+            axis=0,
+        )
+    s = _bitonic_sort(big)
+    num_sel = cnt_ref[0, 0]
+    row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    if aggregator == "median":
+        lo_idx = jnp.maximum((num_sel - 1) // 2, 0)
+        hi_idx = num_sel // 2
+        lo = jnp.sum(jnp.where(row == lo_idx, s, 0.0), axis=0)
+        hi = jnp.sum(jnp.where(row == hi_idx, s, 0.0), axis=0)
+        return 0.5 * (lo + hi)
+    k_trim = cnt_ref[0, 1]
+    keep = (row >= k_trim) & (row < num_sel - k_trim)
+    total = jnp.sum(jnp.where(keep, s, 0.0), axis=0)
+    cnt = jnp.maximum(num_sel - 2 * k_trim, 1).astype(jnp.float32)
+    return total / cnt
+
+
+# --------------------------------------------------------------------- #
 # pass 2: the fused transform + aggregate + server update
 # --------------------------------------------------------------------- #
 def _make_pipeline_kernel(
@@ -100,10 +182,14 @@ def _make_pipeline_kernel(
     has_mu: bool,
     server_optimizer: str,
     server_momentum: float,
+    aggregator: str = "fedavg",
 ):
+    robust = aggregator in ("median", "trimmed")
+
     def kernel(*refs):
         it = iter(refs)
-        wn_ref = next(it)
+        wn_ref = next(it)  # (1, C): Eq. 6 weights, or the 0/1 mask (robust)
+        cnt_ref = next(it) if robust else None  # (1, 2) [num_sel, k_trim]
         lr_ref = next(it)
         upd_ref = next(it)
         base_ref = next(it)
@@ -116,28 +202,18 @@ def _make_pipeline_kernel(
         new_mu_ref = next(it) if has_mu else None
 
         x = upd_ref[...].astype(jnp.float32)  # (C, bd)
-        if has_pre:
-            x = x * pre_ref[0, :][:, None]
-        if compression != "none":
-            # Expand the (C, L) per-leaf table to per-column values with
-            # a static L-way select chain — no dynamic gather, so the
-            # tile stays VPU-only on TPU.
-            seg = seg_ref[...]  # (bd,) int32 leaf-segment ids
-            tab = tab_ref[...].astype(jnp.float32)  # (C, L)
-            col = jnp.ones(x.shape, jnp.float32)  # pad columns: benign 1.0
-            for l in range(n_leaves):
-                col = jnp.where((seg == l)[None, :], tab[:, l][:, None], col)
-            if compression == "int8":
-                q = jnp.clip(jnp.round(x / col), -127.0, 127.0)
-                x = q * col
-            else:  # topk: col holds the kth-largest |x| per (client, leaf)
-                x = x * (jnp.abs(x) >= col).astype(jnp.float32)
-
-        agg = jax.lax.dot_general(
-            wn_ref[0, :][None, :].astype(jnp.float32), x,
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )[0]  # (bd,)
+        x = _transform_tile(x, pre_ref, seg_ref, tab_ref, compression,
+                            n_leaves)
+        if robust:
+            agg = _select_aggregate(
+                x, wn_ref[0, :] > 0.0, cnt_ref, aggregator
+            )
+        else:
+            agg = jax.lax.dot_general(
+                wn_ref[0, :][None, :].astype(jnp.float32), x,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )[0]  # (bd,)
         if has_dp:
             agg = agg + noise_ref[...].astype(jnp.float32)
         lr = lr_ref[0, 0].astype(jnp.float32)
@@ -205,7 +281,8 @@ def segment_table(updates, compression, topk_fraction, seg_sizes, pre=None):
     jax.jit,
     static_argnames=(
         "clip_norm", "compression", "topk_fraction", "seg_sizes",
-        "server_optimizer", "server_momentum", "block_d", "interpret",
+        "server_optimizer", "server_momentum", "aggregator",
+        "block_d", "interpret",
     ),
 )
 def delta_pipeline_apply(
@@ -218,6 +295,7 @@ def delta_pipeline_apply(
     staleness_exponent: jax.Array | float = 0.0,  # a in (1+s)^-a
     dp_noise: jax.Array | None = None,  # (P,) pre-scaled Gaussian noise
     momentum: jax.Array | None = None,  # (P,) fused server momentum
+    trim_fraction: jax.Array | float = 0.1,  # traced: sweep-liftable
     *,
     clip_norm: float = 0.0,  # static gate: per-client delta clip (0 = off)
     compression: str = "none",  # static: none | int8 | topk
@@ -225,6 +303,7 @@ def delta_pipeline_apply(
     seg_sizes: tuple[int, ...] | None = None,  # fused-buffer leaf sizes
     server_optimizer: str = "fedavg",  # fedavg | fedavgm | fedadam
     server_momentum: float = 0.9,
+    aggregator: str = "fedavg",  # fedavg | median | trimmed
     block_d: int = DEFAULT_BLOCK_D,
     interpret: bool | None = None,
 ):
@@ -239,10 +318,13 @@ def delta_pipeline_apply(
     ``staleness`` → ``sim.events.staleness.async_aggregate`` weighting
     (discount + global damping); ``dp_noise`` → noise added to the
     aggregate BEFORE the momentum/apply step (``core.privacy``);
-    ``momentum`` → ``fl.round._server_update``.
+    ``momentum`` → ``fl.round._server_update``; ``aggregator`` →
+    ``core.aggregation.median_aggregate`` / ``trimmed_mean_aggregate``
+    via the in-kernel bitonic selection network (bitwise; ``weights``
+    and ``staleness`` do not apply — the robust aggregators are
+    unweighted by construction, so staleness raises).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = interpret_default(interpret)
     c, d = updates.shape
     block_d = min(block_d, d)
     pad = (-d) % block_d
@@ -252,23 +334,46 @@ def delta_pipeline_apply(
         raise ValueError("compression requires seg_sizes (fused leaf sizes)")
     if compression != "none" and int(sum(seg_sizes)) != d:
         raise ValueError(f"seg_sizes sum {sum(seg_sizes)} != P {d}")
+    if aggregator not in ("fedavg", "median", "trimmed"):
+        raise ValueError(f"unknown aggregator {aggregator!r}")
+    robust = aggregator in ("median", "trimmed")
+    if robust and staleness is not None:
+        raise ValueError(
+            f"aggregator={aggregator!r} is unweighted; staleness weighting "
+            "does not compose with it"
+        )
     has_mu = momentum is not None and server_optimizer in (
         "fedavgm", "fedadam"
     )
     has_dp = dp_noise is not None
 
     # -- per-client scalars: Eq. 6 weights, staleness, clip scales ------ #
-    m = mask.astype(jnp.float32) * weights.astype(jnp.float32)
-    if staleness is not None:
-        # (1+s)^-a discount + global damping — the async_aggregate rule,
-        # bitwise ``fedavg_stacked`` at zero staleness (damping == 1.0).
-        s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
-        disc = (1.0 + s) ** (-jnp.asarray(staleness_exponent, jnp.float32))
-        dm = m * disc
-        wn = dm / (jnp.sum(dm) + _EPS)
-        wn = wn * ((jnp.sum(dm) + _EPS) / (jnp.sum(m) + _EPS))
+    if robust:
+        # The wn row carries the raw participation mask; selection counts
+        # travel in a (1, 2) int32 [num_sel, k_trim] pair so a lifted
+        # ``trim_fraction`` stays traced data.
+        wn = mask.astype(jnp.float32)
+        num_sel = jnp.sum(mask.astype(jnp.int32))
+        k_trim = jnp.floor(
+            num_sel.astype(jnp.float32)
+            * jnp.asarray(trim_fraction, jnp.float32)
+        ).astype(jnp.int32)
+        cnt = jnp.stack([num_sel, k_trim]).reshape(1, 2)
     else:
-        wn = m / (jnp.sum(m) + _EPS)
+        m = mask.astype(jnp.float32) * weights.astype(jnp.float32)
+        if staleness is not None:
+            # (1+s)^-a discount + global damping — the async_aggregate
+            # rule, bitwise ``fedavg_stacked`` at zero staleness
+            # (damping == 1.0).
+            s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
+            disc = (1.0 + s) ** (
+                -jnp.asarray(staleness_exponent, jnp.float32)
+            )
+            dm = m * disc
+            wn = dm / (jnp.sum(dm) + _EPS)
+            wn = wn * ((jnp.sum(dm) + _EPS) / (jnp.sum(m) + _EPS))
+        else:
+            wn = m / (jnp.sum(m) + _EPS)
 
     pre = None
     if clip_norm and clip_norm > 0:
@@ -278,14 +383,17 @@ def delta_pipeline_apply(
     def padded(x):  # pad the P axis out to a block multiple
         return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
 
-    inputs = [
-        wn[None, :],
+    inputs = [wn[None, :]]
+    in_specs = [pl.BlockSpec((1, c), lambda i: (0, 0))]
+    if robust:
+        inputs.append(cnt)
+        in_specs.append(pl.BlockSpec((1, 2), lambda i: (0, 0)))
+    inputs += [
         jnp.asarray(lr, jnp.float32).reshape(1, 1),
         padded(updates),
         padded(base),
     ]
-    in_specs = [
-        pl.BlockSpec((1, c), lambda i: (0, 0)),
+    in_specs += [
         pl.BlockSpec((1, 1), lambda i: (0, 0)),
         pl.BlockSpec((c, block_d), lambda i: (0, i)),
         pl.BlockSpec((block_d,), lambda i: (i,)),
@@ -323,7 +431,7 @@ def delta_pipeline_apply(
 
     kernel = _make_pipeline_kernel(
         n_leaves, pre is not None, compression, has_dp, has_mu,
-        server_optimizer, float(server_momentum),
+        server_optimizer, float(server_momentum), aggregator,
     )
     outs = pl.pallas_call(
         kernel,
@@ -337,3 +445,101 @@ def delta_pipeline_apply(
     if has_mu:
         return outs[0][:d], outs[1][:d]
     return outs[:d]
+
+
+# --------------------------------------------------------------------- #
+# sharded building block: per-shard partial weighted sums
+# --------------------------------------------------------------------- #
+def _make_partial_kernel(n_leaves: int, has_pre: bool, compression: str):
+    def kernel(*refs):
+        it = iter(refs)
+        dm_ref = next(it)  # (1, C_local) UNnormalized weights
+        upd_ref = next(it)
+        pre_ref = next(it) if has_pre else None
+        seg_ref = next(it) if compression != "none" else None
+        tab_ref = next(it) if compression != "none" else None
+        out_ref = next(it)
+
+        x = upd_ref[...].astype(jnp.float32)
+        x = _transform_tile(x, pre_ref, seg_ref, tab_ref, compression,
+                            n_leaves)
+        out_ref[...] = jax.lax.dot_general(
+            dm_ref[0, :][None, :].astype(jnp.float32), x,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[0]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "clip_norm", "compression", "topk_fraction", "seg_sizes",
+        "block_d", "interpret",
+    ),
+)
+def delta_pipeline_partial(
+    updates: jax.Array,  # (C_local, P) fused client deltas, one shard
+    dm: jax.Array,  # (C_local,) UNnormalized Eq. 6 weights (mask·|D|·disc)
+    *,
+    clip_norm: float = 0.0,
+    compression: str = "none",
+    topk_fraction: float = 0.05,
+    seg_sizes: tuple[int, ...] | None = None,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-shard half of the sharded pipeline: clip + compression +
+    UNnormalized weighted sum over this shard's clients — one HBM pass
+    over the local delta slab. The clip norms are exact (each client's
+    full (P,) row lives on one shard) and the compression table is
+    shard-local, so the only cross-shard data the caller must combine is
+    the (P,) partial plus the Σdm / Σm scalars → exactly one psum."""
+    interpret = interpret_default(interpret)
+    c, d = updates.shape
+    block_d = min(block_d, d)
+    pad = (-d) % block_d
+
+    pre = None
+    if clip_norm and clip_norm > 0:
+        norm = jnp.sqrt(delta_sq_norms(updates, block_d, interpret))
+        pre = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+
+    def padded(x):
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+
+    inputs = [dm[None, :].astype(jnp.float32), padded(updates)]
+    in_specs = [
+        pl.BlockSpec((1, c), lambda i: (0, 0)),
+        pl.BlockSpec((c, block_d), lambda i: (0, i)),
+    ]
+    n_leaves = len(seg_sizes) if seg_sizes else 0
+    if pre is not None:
+        inputs.append(pre[None, :])
+        in_specs.append(pl.BlockSpec((1, c), lambda i: (0, 0)))
+    if compression != "none":
+        seg = jnp.asarray(
+            np.repeat(np.arange(n_leaves), seg_sizes), jnp.int32
+        )
+        tab = segment_table(
+            updates, compression, topk_fraction, seg_sizes, pre=pre
+        )
+        inputs += [padded(seg), tab]
+        in_specs += [
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((c, n_leaves), lambda i: (0, 0)),
+        ]
+
+    dp_total = d + pad
+    kernel = _make_partial_kernel(n_leaves, pre is not None, compression)
+    out = pl.pallas_call(
+        kernel,
+        grid=(dp_total // block_d,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp_total,), jnp.float32),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(*inputs)
+    return out[:d]

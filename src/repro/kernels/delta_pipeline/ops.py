@@ -1,8 +1,16 @@
 """Public wrappers for the fused delta-pipeline kernel family."""
 from repro.kernels.delta_pipeline.delta_pipeline import (
     delta_pipeline_apply,
+    delta_pipeline_partial,
     delta_sq_norms,
     segment_table,
 )
+from repro.kernels.delta_pipeline.sharded import delta_pipeline_apply_sharded
 
-__all__ = ["delta_pipeline_apply", "delta_sq_norms", "segment_table"]
+__all__ = [
+    "delta_pipeline_apply",
+    "delta_pipeline_apply_sharded",
+    "delta_pipeline_partial",
+    "delta_sq_norms",
+    "segment_table",
+]

@@ -7,7 +7,9 @@ buffer, in the exact order the round code applies them:
     → compression emulation (fl.compression.apply_compression per-leaf
       semantics, replayed on static segment slices)
     → staleness-discounted Eq. 6 aggregation
-      (sim.events.staleness.async_aggregate weighting incl. damping)
+      (sim.events.staleness.async_aggregate weighting incl. damping),
+      or masked robust aggregation (core.aggregation.median_aggregate /
+      trimmed_mean_aggregate on the fused buffer)
     → DP noise on the aggregate (core.privacy.gaussian_mechanism with a
       caller-built noise vector)
     → server momentum / apply (fl.round._server_update math)
@@ -62,6 +64,8 @@ def delta_pipeline_ref(
     seg_sizes=None,
     server_optimizer: str = "fedavg",
     server_momentum: float = 0.9,
+    aggregator: str = "fedavg",
+    trim_fraction=0.1,
 ):
     x = updates.astype(jnp.float32)
     if clip_norm and clip_norm > 0:
@@ -69,19 +73,31 @@ def delta_pipeline_ref(
     if compression != "none":
         x = _compress(x, compression, topk_fraction, seg_sizes)
 
-    m = mask.astype(jnp.float32) * weights.astype(jnp.float32)
-    if staleness is not None:
-        s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
-        disc = (1.0 + s) ** (-jnp.asarray(staleness_exponent, jnp.float32))
-        dm = m * disc
-        w = dm / (jnp.sum(dm) + _EPS)
-        damping = (jnp.sum(dm) + _EPS) / (jnp.sum(m) + _EPS)
+    if aggregator in ("median", "trimmed"):
+        from repro.core.aggregation import (
+            median_aggregate,
+            trimmed_mean_aggregate,
+        )
+        if aggregator == "median":
+            agg = median_aggregate(x, mask)
+        else:
+            agg = trimmed_mean_aggregate(x, mask, trim_fraction)
     else:
-        w = m / (jnp.sum(m) + _EPS)
-        damping = None
-    agg = jnp.einsum("n,nd->d", w, x)
-    if damping is not None:
-        agg = agg * damping
+        m = mask.astype(jnp.float32) * weights.astype(jnp.float32)
+        if staleness is not None:
+            s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
+            disc = (1.0 + s) ** (
+                -jnp.asarray(staleness_exponent, jnp.float32)
+            )
+            dm = m * disc
+            w = dm / (jnp.sum(dm) + _EPS)
+            damping = (jnp.sum(dm) + _EPS) / (jnp.sum(m) + _EPS)
+        else:
+            w = m / (jnp.sum(m) + _EPS)
+            damping = None
+        agg = jnp.einsum("n,nd->d", w, x)
+        if damping is not None:
+            agg = agg * damping
     if dp_noise is not None:
         agg = agg + dp_noise.astype(jnp.float32)
 

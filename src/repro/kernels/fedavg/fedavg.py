@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.pallas_compat import CompilerParams, interpret_default
 
 DEFAULT_BLOCK_D = 2048
 
@@ -49,8 +49,7 @@ def fedavg_apply(
     block_d: int = DEFAULT_BLOCK_D,
     interpret: bool | None = None,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = interpret_default(interpret)
     n, d = updates.shape
     wn = mask.astype(jnp.float32) * weights.astype(jnp.float32)
     # lr rides in the tiny (1, N) weight vector rather than as a kernel

@@ -14,10 +14,7 @@ from repro.kernels.flash_attention.flash_attention import (
     DEFAULT_BLOCK_Q,
     flash_attention_fwd,
 )
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.pallas_compat import interpret_default
 
 
 def flash_attention(
@@ -46,6 +43,6 @@ def flash_attention(
         bidirectional=bidirectional,
         block_q=block_q,
         block_kv=block_kv,
-        interpret=not _on_tpu(),
+        interpret=interpret_default(),
     )
     return out.swapaxes(1, 2)

@@ -1,16 +1,32 @@
-"""Version-compat shims for the Pallas TPU API.
+"""Version-compat shims + shared defaults for the Pallas TPU API.
 
 ``pltpu.CompilerParams`` was renamed across JAX releases (older releases
 expose ``TPUCompilerParams``; newer ones ``CompilerParams``). Every kernel
 imports the name from here so the repo tracks whichever the installed JAX
 provides.
+
+``interpret_default`` is the single definition of the kernel families'
+interpret-mode fallback: run the real Mosaic lowering on TPU, the Pallas
+interpreter everywhere else (CPU/GPU hosts — a correctness tool, not a
+perf path). Kernels take ``interpret: bool | None = None`` and resolve it
+through here so the TPU-detection logic cannot drift between families.
 """
 from __future__ import annotations
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams"
 )
 
-__all__ = ["CompilerParams"]
+
+def interpret_default(interpret: bool | None = None) -> bool:
+    """Resolve a kernel's interpret-mode argument: an explicit value wins;
+    ``None`` means "interpret everywhere except a real TPU backend"."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+__all__ = ["CompilerParams", "interpret_default"]

@@ -16,10 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.wkv6.wkv6 import DEFAULT_CHUNK, wkv6_fwd
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.pallas_compat import interpret_default
 
 
 def wkv6(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK):
@@ -31,5 +28,5 @@ def wkv6(r, k, v, w, u, *, chunk: int = DEFAULT_CHUNK):
         r, k, v = zp(r), zp(k), zp(v)
         w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
     w = jnp.maximum(w, jnp.asarray(jnp.exp(-20.0), w.dtype))
-    y, s = wkv6_fwd(r, k, v, w, u, chunk=chunk, interpret=not _on_tpu())
+    y, s = wkv6_fwd(r, k, v, w, u, chunk=chunk, interpret=interpret_default())
     return y[:, :t], s

@@ -46,6 +46,10 @@ def parse_args(argv=None):
                          "(XLA_FLAGS; must be set before jax initializes). "
                          "0 = use the real platform's device pool")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pallas-agg", action="store_true",
+                    help="fuse the server delta pipeline into the Pallas "
+                         "kernel (sharded shard_map entry under --scale "
+                         "full; single-HBM-pass kernel on one host)")
     ap.add_argument("--reduced", action="store_true",
                     help="with --scale full: reduced config on the real "
                          "mesh plan (CPU-executable sharded rounds)")
@@ -115,6 +119,7 @@ def main(argv=None):
         slots=args.slots,
         local_steps=args.local_steps,
         inner_lr=args.inner_lr,
+        use_pallas_agg=args.pallas_agg,
     )
     data_cfg = FedDataConfig(
         vocab_size=cfg.vocab_size, drift_period=10, seed=args.seed
@@ -221,7 +226,8 @@ def _sharded_round_fn(args, cfg, model, fl_cfg, rules, flops_round):
     import jax
     import jax.numpy as jnp
 
-    from repro.dist import analyze_hlo, inter_client_all_reduces
+    from repro.dist import analyze_hlo
+    from repro.dist.hlo_analysis import assert_inter_client_contract
     from repro.fl import abstract_fl_state, make_round_fn
     from repro.models import Runtime
 
@@ -256,8 +262,14 @@ def _sharded_round_fn(args, cfg, model, fl_cfg, rules, flops_round):
     }
     batch_sh = rules.fl_batch_shardings(batch_abs)
 
+    # out_shardings pins the advanced state to the SAME layout as the
+    # input: the compiled object's strict call-time sharding check must
+    # accept round r's output as round r+1's input. Without this the
+    # sharded kernel path hands params back replicated (the shard_map
+    # epilogue's layout) and round 1 rejects them.
     jitted = jax.jit(
-        round_fn, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
+        round_fn, in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None), donate_argnums=(0,),
     )
     t0 = time.time()
     compiled = jitted.lower(state_abs, batch_abs).compile()
@@ -270,19 +282,12 @@ def _sharded_round_fn(args, cfg, model, fl_cfg, rules, flops_round):
     for w in stats.trip_count_warnings[:3]:
         print(f"[train] note: {w}")
 
-    client_ways = 1
-    for a in rules.plan.client_axes:
-        client_ways *= mesh_shape.get(a, 1)
-    if client_ways > 1:
-        n_cross, delta_bytes = inter_client_all_reduces(
-            hlo, rules, model.param_count()
-        )
-        if n_cross != 1:
-            raise AssertionError(
-                f"expected exactly ONE inter-client all-reduce in the "
-                f"round body, found {n_cross} (≥{0.5 * delta_bytes:.2e} B "
-                f"crossing {rules.plan.client_axes})"
-            )
+    # Raises on violation — holds on both the reference aggregation and
+    # the sharded delta-pipeline kernel path (--pallas-agg).
+    _, delta_bytes = assert_inter_client_contract(
+        hlo, rules, model.param_count()
+    )
+    if rules.client_ways > 1:
         print("[train] verified: ONE inter-client all-reduce "
               f"({delta_bytes:.2e} B delta payload)")
     return compiled

@@ -52,6 +52,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggregation as agg_mod
 from repro.core.scheduler import account_energy, schedule_round
 from repro.core.types import static_on
 from repro.data.telemetry import step_telemetry
@@ -300,21 +301,36 @@ class AsyncFedFogSimulator:
                 leaf_sizes(state.params),
                 [x.shape for x in jax.tree.leaves(state.params)],
             )
+        # Robust aggregators are unweighted medians/means over the live
+        # buffer — staleness discounting does not compose with them, so
+        # they ignore it on both paths (same as the sync round).
+        robust = cfg.aggregator in ("median", "trimmed")
         if cfg.use_pallas_agg:
             # Fused delta-pipeline kernel: staleness-discounted Eq. 6
-            # weighting + reduction + DP noise + apply in ONE pass over
-            # the (N, P) buffer.
+            # weighting + reduction (or the in-kernel median / trimmed
+            # selection) + DP noise + apply in ONE pass over the (N, P)
+            # buffer.
             new_flat = delta_pipeline_apply(
                 state.pending, base_flat, buf, state.env["data_sizes"],
-                lr=cfg.server_lr, staleness=staleness,
+                lr=cfg.server_lr,
+                staleness=None if robust else staleness,
                 staleness_exponent=acfg.staleness_exponent,
                 dp_noise=noise,
+                trim_fraction=cfg.trim_fraction,
+                aggregator=cfg.aggregator,
             )
         else:
-            agg = async_aggregate(
-                state.pending, buf, state.env["data_sizes"], staleness,
-                acfg.staleness_exponent,
-            )
+            if cfg.aggregator == "median":
+                agg = agg_mod.median_aggregate(state.pending, buf)
+            elif cfg.aggregator == "trimmed":
+                agg = agg_mod.trimmed_mean_aggregate(
+                    state.pending, buf, cfg.trim_fraction
+                )
+            else:
+                agg = async_aggregate(
+                    state.pending, buf, state.env["data_sizes"], staleness,
+                    acfg.staleness_exponent,
+                )
             if noise is not None:
                 agg = agg + noise
             new_flat = base_flat + cfg.server_lr * agg

@@ -94,6 +94,12 @@ def _grid(
 _SIM_NUMERIC = (
     "lr", "server_lr", "top_k", "dp_sigma",
     "attack_noise_scale", "attack_replacement_scale",
+    # trim_fraction rides the delta-pipeline kernel as traced data (the
+    # (1, 2) [num_sel, k_trim] input), so sweeping it never recompiles.
+    # `aggregator` and `use_pallas_agg` stay OUT of this tuple on
+    # purpose: they pick the kernel / selection-network structure and
+    # must remain part of the structural compile-cache signature.
+    "trim_fraction",
 )
 _SCHED_NUMERIC = ("theta_h", "theta_e", "theta_d")
 _ASYNC_NUMERIC = (

@@ -155,6 +155,149 @@ def test_pipeline_all_masked_is_safe():
 
 
 # --------------------------------------------------------------------- #
+# in-kernel robust aggregators (median / trimmed) vs core.aggregation
+# --------------------------------------------------------------------- #
+def _core_robust(upd, base, mask, lr, frac, agg):
+    """Reference: core.aggregation robust aggregate + plain apply."""
+    from repro.core.aggregation import median_aggregate, trimmed_mean_aggregate
+
+    a = (
+        median_aggregate(upd, mask)
+        if agg == "median"
+        else trimmed_mean_aggregate(upd, mask, frac)
+    )
+    return base + lr * a
+
+
+_MASKS = {
+    "random": None,  # the _fixture bernoulli mask
+    "all": "all",
+    "alternating": "alt",
+}
+
+
+@pytest.mark.parametrize("c", [5, 6])  # odd + even client counts
+@pytest.mark.parametrize("mask_kind", list(_MASKS))
+@pytest.mark.parametrize("agg,frac", [("median", 0.0), ("trimmed", 0.1),
+                                      ("trimmed", 0.25)], ids=str)
+def test_robust_kernel_bitwise_matches_core(agg, frac, mask_kind, c):
+    """The in-kernel bitonic-selection median / trimmed mean is BITWISE
+    equal to core.aggregation's jnp.sort-based references under masks
+    (odd and even live counts)."""
+    fx = _fixture(c, 192)
+    mask = {
+        "random": fx["mask"],
+        "all": jnp.ones((c,), bool),
+        "alternating": jnp.arange(c) % 2 == 0,
+    }[mask_kind]
+    out = delta_pipeline_apply(
+        fx["upd"], fx["base"], mask, fx["weights"], 0.7,
+        None, 0.0, None, None, frac,
+        aggregator=agg, block_d=64,
+    )
+    # jit the oracle (same FMA-fusion rationale as the gate matrix).
+    exp = jax.jit(_core_robust, static_argnames="agg")(
+        fx["upd"], fx["base"], mask, 0.7, frac, agg=agg
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("agg", ["median", "trimmed"])
+def test_robust_kernel_random_masks_deterministic(agg):
+    """Seeded random-mask sweep (runs without hypothesis): varying client
+    counts, live counts and trim fractions, bitwise vs core.aggregation."""
+    rng = np.random.default_rng(42)
+    for _ in range(8):
+        c = int(rng.integers(2, 11))
+        p = int(rng.integers(1, 200))
+        frac = float(rng.uniform(0.0, 0.45))
+        upd = jnp.asarray(rng.normal(size=(c, p)), jnp.float32)
+        base = jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+        mask = np.asarray(rng.random(c) < 0.6)
+        mask[int(rng.integers(c))] = True  # ≥1 live client
+        mask = jnp.asarray(mask)
+        out = delta_pipeline_apply(
+            upd, base, mask, jnp.ones((c,)), 1.0,
+            None, 0.0, None, None, frac,
+            aggregator=agg, block_d=64,
+        )
+        exp = jax.jit(_core_robust, static_argnames="agg")(
+            upd, base, mask, 1.0, frac, agg=agg
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(exp), err_msg=f"c={c} p={p} f={frac}"
+        )
+
+
+def test_robust_kernel_property_hypothesis():
+    """Property form of the bitwise contract (hypothesis is a dev dep —
+    skipped when absent; the deterministic sweep above always runs)."""
+    pytest.importorskip(
+        "hypothesis", reason="dev dependency; see requirements-dev.txt"
+    )
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        c=st.integers(2, 12),
+        p=st.integers(1, 96),
+        frac=st.floats(0.0, 0.45),
+        seed=st.integers(0, 2**31 - 1),
+        agg=st.sampled_from(["median", "trimmed"]),
+    )
+    def prop(c, p, frac, seed, agg):
+        rng = np.random.default_rng(seed)
+        upd = jnp.asarray(rng.normal(size=(c, p)), jnp.float32)
+        base = jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+        mask = np.asarray(rng.random(c) < 0.6)
+        mask[int(rng.integers(c))] = True
+        mask = jnp.asarray(mask)
+        out = delta_pipeline_apply(
+            upd, base, mask, jnp.ones((c,)), 1.0,
+            None, 0.0, None, None, frac,
+            aggregator=agg, block_d=64,
+        )
+        exp = jax.jit(_core_robust, static_argnames="agg")(
+            upd, base, mask, 1.0, frac, agg=agg
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    prop()
+
+
+def test_robust_with_dp_noise_matches_ref():
+    """DP noise is added to the robust aggregate AFTER selection — the
+    same caller-built stream as the fedavg path (gate flips must not
+    change the noise; see test_fused_gaussian_noise_matches_reference)."""
+    fx = _fixture(6, 192)
+    out = delta_pipeline_apply(
+        fx["upd"], fx["base"], fx["mask"], fx["weights"], 0.7,
+        None, 0.0, fx["noise"], None, 0.1,
+        aggregator="trimmed", block_d=64,
+    )
+    ref = jax.jit(
+        lambda u, b, m, w, n: delta_pipeline_ref(
+            u, b, m, w, 0.7, None, 0.0, n, None,
+            aggregator="trimmed", trim_fraction=0.1,
+        )
+    )(fx["upd"], fx["base"], fx["mask"], fx["weights"], fx["noise"])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_robust_rejects_staleness():
+    """median/trimmed are unweighted order statistics — staleness
+    discounting does not compose with them; the kernel refuses loudly."""
+    fx = _fixture(4, 64)
+    with pytest.raises(ValueError, match="unweighted"):
+        delta_pipeline_apply(
+            fx["upd"], fx["base"], fx["mask"], fx["weights"], 1.0,
+            fx["staleness"], 0.5, None, None, 0.1,
+            aggregator="median", block_d=64,
+        )
+
+
+# --------------------------------------------------------------------- #
 # fused buffer helpers + fused compression (satellite)
 # --------------------------------------------------------------------- #
 def _delta_tree(c=6):
@@ -238,6 +381,8 @@ def _cfg(**kw) -> SimulatorConfig:
         {"dp_sigma": 0.3, "clip_norm": 1.0},
         {"compression": "int8"},
         {"compression": "topk", "dp_sigma": 0.2, "clip_norm": 0.5},
+        {"aggregator": "median", "dp_sigma": 0.3, "clip_norm": 1.0},
+        {"aggregator": "trimmed", "trim_fraction": 0.2, "compression": "int8"},
     ],
     ids=str,
 )
@@ -256,7 +401,11 @@ def test_simulator_pallas_gate_widened(extra):
         )
 
 
-@pytest.mark.parametrize("extra", [{}, {"dp_sigma": 0.3, "clip_norm": 1.0}], ids=str)
+@pytest.mark.parametrize(
+    "extra",
+    [{}, {"dp_sigma": 0.3, "clip_norm": 1.0}, {"aggregator": "median"}],
+    ids=str,
+)
 def test_async_flush_pallas_matches_reference(extra):
     """The async flush path routes through the fused kernel under
     use_pallas_agg — staleness discounting, DP and apply included."""

@@ -1,0 +1,51 @@
+"""Fake-device kernel test: the sharded delta pipeline (shard_map +
+per-shard Pallas partial kernel + ONE psum) must match the single-device
+fused kernel and the pure-jnp oracle over the full gate matrix, with
+exactly one client-crossing all-reduce in every compiled case.
+
+Runs ``repro.kernels.delta_pipeline.sharded_selftest`` in a SUBPROCESS
+because the fake-device count must be fixed before jax initializes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_selftest(*extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [
+            sys.executable, "-m",
+            "repro.kernels.delta_pipeline.sharded_selftest",
+            "--json", *extra,
+        ],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO,
+        timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"sharded kernel selftest failed\nstdout: {proc.stdout[-2000:]}\n"
+        f"stderr: {proc.stderr[-2000:]}"
+    )
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_pipeline_gate_matrix():
+    res = _run_selftest("--devices", "8")
+    assert res["client_ways"] == 4 and res["zero"] == 2
+    # Every gate case: sharded == unsharded kernel == ref oracle within
+    # tolerance, and exactly ONE all-reduce crosses the client axis with
+    # the delta-sized partial-sum payload (the §III contract at kernel
+    # granularity).
+    for name, case in res["cases"].items():
+        assert case["client_all_reduces"] == 1, (name, case)
+        assert case["ok"], (name, case)
+    assert res["ok"], res

@@ -196,6 +196,50 @@ def test_sweep_compile_cache_reuse():
         np.testing.assert_array_equal(r1.history[name], r2.history[name])
 
 
+def test_aot_scanned_matches_run_scanned():
+    """aot_scanned + run_scanned_with reproduce run_scanned bitwise —
+    including on a DIFFERENT same-shape simulator instance (the sharing
+    that lets benchmarks compile the scan program once per seed sweep)."""
+    cfg = _cfg(rounds=3)
+    exe = FedFogSimulator(cfg).aot_scanned()
+    for s in range(2):
+        c = dataclasses.replace(cfg, seed=s)
+        a = FedFogSimulator(c).run_scanned()
+        b = FedFogSimulator(c).run_scanned_with(exe)
+        assert set(a) == set(b)
+        for name in a:
+            np.testing.assert_array_equal(
+                np.asarray(a[name]), np.asarray(b[name]), err_msg=name
+            )
+
+
+def test_sweep_signature_aggregator_structural_trim_lifted():
+    """Compile-cache keys must distinguish the kernel gate STRUCTURALLY:
+    ``aggregator`` and ``use_pallas_agg`` each open a new compile group,
+    while ``trim_fraction`` is numeric data lifted into the vmapped
+    batch — two trim fractions share one executable. Grouped results
+    stay bitwise-equal to the per-point sweep."""
+    from repro.sim import clear_compile_cache
+
+    cfg = _cfg(rounds=2)
+    cases = [
+        {"aggregator": "trimmed", "trim_fraction": 0.1},
+        {"aggregator": "trimmed", "trim_fraction": 0.2},  # same group
+        {"aggregator": "median"},  # new structural group
+        {"use_pallas_agg": True},  # kernel routing is structural too
+    ]
+    clear_compile_cache()
+    tm: dict = {}
+    grouped = run_sweep(cfg, seeds=[0], cases=cases, timings=tm)
+    assert tm["n_compiles"] == 3, tm  # trimmed×2 collapse into one
+    per_point = run_sweep(cfg, seeds=[0], cases=cases, group=False)
+    assert grouped.configs == per_point.configs
+    for name in grouped.history:
+        np.testing.assert_array_equal(
+            grouped.history[name], per_point.history[name], err_msg=name
+        )
+
+
 def test_round_pallas_agg_matches_reference():
     """use_pallas_agg routes Eq. 6 + server apply through the fused
     kernel (interpret mode on CPU); a full multi-round run must agree
