@@ -70,7 +70,14 @@ def compare_to_baseline(records, baseline_path, tolerance_pct=25.0) -> int:
             continue
         base = base_rows.pop(name, None)
         if base is None:
-            print(f"{name}: NEW (no baseline row)")
+            # A row the baseline file predates (e.g. a freshly added
+            # benchmark): informational, NOT a regression. It gains a
+            # baseline the next time the file is re-recorded with
+            # REPRO_BENCH_RECORD=1.
+            print(
+                f"{name}: NEW (no baseline row — not a regression; "
+                f"re-record with REPRO_BENCH_RECORD=1 to baseline it)"
+            )
             continue
         old, new = base["us_per_call"], rec["us_per_call"]
         if old <= 0.0:

@@ -5,6 +5,11 @@ vs FogFaaS ~O(N²), and cold-start overhead ~O(N) vs super-linear.
 Runs on the sweep API: client counts change array shapes, so each
 (N, policy) pair is its own compiled program (``cases``); seeds vmap
 inside each.
+
+A second, population-scaling axis holds the sampled cohort FIXED and
+grows the virtual client registry (``population``): per-round cost must
+stay ~flat because only O(M) telemetry/scheduler gather/scatter sees the
+population — the training/aggregation work is cohort-sized.
 """
 from __future__ import annotations
 
@@ -14,6 +19,12 @@ from benchmarks.common import Row, SCALE, fmt, preset, timed_sweep
 from repro.fl.simulator import SimulatorConfig
 
 SIZES = {"quick": (8, 16, 32), "default": (16, 32, 64), "full": (16, 32, 64, 128)}
+# fixed-cohort population axis (M virtual clients, structural per point)
+POPULATIONS = {
+    "quick": (1_000, 100_000),
+    "default": (1_000, 100_000, 1_000_000),
+    "full": (1_000, 100_000, 1_000_000),
+}
 
 
 def _fit_power(ns, ys):
@@ -69,6 +80,63 @@ def run() -> list[Row]:
                 fogfaas_energy_alpha=_fit_power(ns, series[("fogfaas", "energy")]),
                 fedfog_cold_alpha=_fit_power(ns, series[("fedfog", "cold")]),
                 fogfaas_cold_alpha=_fit_power(ns, series[("fogfaas", "cold")]),
+            ),
+        )
+    )
+    rows.extend(_population_axis(p))
+    return rows
+
+
+def _population_axis(p) -> list[Row]:
+    """Fixed cohort, growing population: per-round us must stay ~flat
+    (the cohort gather/scatter is the only O(M) work). Each population is
+    structural — its own compiled program via ``cases``."""
+    cohort = min(p["clients"], 16)
+    pops = POPULATIONS[SCALE]
+    cases = [{"population": m} for m in pops]
+    base = SimulatorConfig(
+        task="emnist", num_clients=cohort, rounds=p["rounds"],
+        top_k=max(4, cohort // 2),
+    )
+    res, _ = timed_sweep(base, seeds=[0], cases=cases)
+    rows = []
+    us = []
+    for g, ov in enumerate(res.configs):
+        s = res.stats(g)
+        # per-group us/round: re-time isn't available per group from one
+        # sweep call, so run each point standalone for the us column.
+        import dataclasses
+        import time
+
+        cfg_g = dataclasses.replace(base, **ov)
+        from repro.fl.simulator import FedFogSimulator
+
+        sim = FedFogSimulator(cfg_g)
+        exe = sim.aot_scanned(p["rounds"])
+        sim.run_scanned_with(exe, p["rounds"])  # warm
+        t0 = time.time()
+        FedFogSimulator(cfg_g).run_scanned_with(exe, p["rounds"])
+        us_round = (time.time() - t0) / p["rounds"] * 1e6
+        us.append(us_round)
+        rows.append(
+            Row(
+                f"population/M{ov['population']}",
+                us_round,
+                fmt(
+                    cohort=cohort,
+                    acc=float(s["final_accuracy"][0]),
+                    energy_j=float(s["total_energy_j"][0]),
+                ),
+            )
+        )
+    rows.append(
+        Row(
+            "population/flatness",
+            0.0,
+            fmt(
+                cohort=cohort,
+                max_over_min=max(us) / max(min(us), 1e-9),
+                pops=":".join(str(m) for m in pops),
             ),
         )
     )

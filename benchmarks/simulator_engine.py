@@ -52,6 +52,7 @@ import sys
 import tempfile
 import time
 
+import jax
 import numpy as np
 
 from benchmarks.common import Row, SCALE, fmt, preset
@@ -193,7 +194,7 @@ def _cold_and_warm_rows(
         cold_acc=acc_sweep, cold_acc_async=np.asarray(
             res_async.metric("accuracy")
         ),
-    ) + [_sharded_row(lrs, rounds, p)]
+    ) + [_sharded_row(lrs, rounds, p), _population_row(p)]
 
     shape = fmt(grid=g, seeds=n_seeds, rounds=rounds, clients=p["clients"])
     return [
@@ -298,6 +299,96 @@ def _sharded_row(lrs, rounds, p) -> Row:
         f"acc_mean={res['acc_mean']:.4g};"
         + fmt(devices=res["devices"], grid=len(lrs), seeds=n_seeds,
               rounds=rounds, clients=p["clients"]),
+    )
+
+
+def _peak_mem_mb(compiled) -> float | None:
+    """Best-effort peak-HBM estimate from the AOT executable's
+    ``memory_analysis()`` (argument + output + temp + generated code);
+    None when the backend doesn't implement it."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    total = 0.0
+    found = False
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if isinstance(v, (int, float)):
+            total += float(v)
+            found = True
+    return round(total / 2**20, 1) if found else None
+
+
+def _population_row(p) -> Row:
+    """``simulator_engine/population``: the ISSUE 7 acceptance row — a
+    1M-virtual-client population sampled down to a 64-client cohort per
+    round must cost ~what today's dense 64-client run costs (the per-
+    round work is cohort-sized; only O(M) telemetry/scheduler gathers
+    and scatters see the population). Cohort/population are FIXED at
+    64/1M across bench scales so the ratio is comparable everywhere;
+    rounds follow the preset (capped) to bound wall time. Columns carry
+    both us/round numbers, their ratio, the AOT executables' peak-memory
+    estimates, and — attributed separately, like compile — the one-time
+    state-build cost a fresh same-config instance pays (``init_ms``: the
+    (M,) registries through the shared jitted init)."""
+    import dataclasses
+
+    cohort, population = 64, 1_000_000
+    rounds = min(p["rounds"], 8)
+    dense = SimulatorConfig(
+        task="emnist", num_clients=cohort, rounds=rounds, top_k=p["topk"]
+    )
+    pop = dataclasses.replace(dense, population=population)
+
+    def prepare(cfg):
+        sim = FedFogSimulator(cfg)
+        t0 = time.time()
+        exe = sim.aot_scanned(rounds)
+        compile_s = time.time() - t0
+        h = sim.run_scanned_with(exe, rounds)  # warm (first dispatch);
+        # also the accuracy sample — later reps advance the carried state.
+        # One-time state build (the (M,) registries in population mode)
+        # is attributed separately, like compile: a fresh same-config
+        # instance reuses the shared jitted init executable.
+        t0 = time.time()
+        fresh = FedFogSimulator(cfg)
+        jax.block_until_ready((fresh.env, fresh.telemetry))
+        init_ms = (time.time() - t0) * 1e3
+        return sim, exe, compile_s, init_ms, _peak_mem_mb(exe), h
+
+    def timed(sim, exe):
+        t0 = time.time()
+        sim.run_scanned_with(exe, rounds)
+        return (time.time() - t0) / rounds * 1e6
+
+    d_sim, d_exe, dense_compile, dense_init, dense_mem, _ = prepare(dense)
+    p_sim, p_exe, pop_compile, pop_init, pop_mem, h_pop = prepare(pop)
+    # The ratio below is an acceptance gate; single runs on a shared
+    # host jitter ±20% and conditions drift over the suite. Interleave
+    # the reps so both configs see the same machine state, take best-of.
+    dense_us = pop_us = float("inf")
+    for _ in range(3):
+        dense_us = min(dense_us, timed(d_sim, d_exe))
+        pop_us = min(pop_us, timed(p_sim, p_exe))
+    return Row(
+        "simulator_engine/population",
+        pop_us,
+        fmt(
+            dense_us_per_round=dense_us,
+            pop_over_dense=pop_us / max(dense_us, 1e-9),
+            peak_mem_mb=pop_mem if pop_mem is not None else "na",
+            dense_peak_mem_mb=dense_mem if dense_mem is not None else "na",
+            compile_s=pop_compile,
+            dense_compile_s=dense_compile,
+            init_ms=pop_init,
+            dense_init_ms=dense_init,
+            final_acc=float(h_pop["accuracy"][-1]),
+            population=population,
+            cohort=cohort,
+            rounds=rounds,
+        ),
     )
 
 

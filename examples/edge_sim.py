@@ -15,6 +15,16 @@ aggregation on a continuous virtual clock, with a straggler tail and
 client churn, printing the flush timeline instead of the round table.
 ``--sweep-seeds K`` additionally demos the sweep API: all K seeds of all
 three policies vmapped/compiled per policy, reported as mean ± 95% CI.
+
+``--population M`` scales the virtual client registry past the cohort:
+scheduler/telemetry state is kept for all M clients while every round
+samples a stratified ``--clients``-sized cohort, so per-round cost stays
+cohort-sized (try ``--population 1000000``). ``--fog-nodes F`` engages
+the hierarchical edge → fog → cloud reduction: the cohort is split into
+F contiguous groups, each fog node computes partial Eq. 6 sums, and the
+cloud combines them (requires ``aggregator=fedavg``; F must divide the
+cohort). Both default to the flat dense setup, which they reproduce
+bitwise.
 """
 import argparse
 
@@ -33,6 +43,8 @@ def sweep_demo(args) -> None:
         drift_period=args.rounds // 2,
         attack="label_flip",
         attack_fraction=0.1,
+        population=args.population,
+        fog_nodes=args.fog_nodes,
     )
     res = run_sweep(
         cfg,
@@ -53,6 +65,7 @@ def async_demo(args) -> None:
         SimulatorConfig(
             task="emnist", num_clients=args.clients, rounds=args.rounds,
             top_k=args.topk, policy="fedfog", seed=0,
+            population=args.population, fog_nodes=args.fog_nodes,
         ),
         AsyncConfig.fedbuff(
             max(2, args.topk // 2),
@@ -91,6 +104,16 @@ def main():
                     help="async engine: virtual ms between dispatches")
     ap.add_argument("--sweep-seeds", type=int, default=0,
                     help="if >0, also run the multi-seed sweep demo")
+    ap.add_argument("--population", type=int, default=None,
+                    help="virtual client registry size M (>= --clients); "
+                         "each round samples a stratified --clients-sized "
+                         "cohort, so per-round cost stays cohort-sized "
+                         "(default: dense, M == --clients)")
+    ap.add_argument("--fog-nodes", type=int, default=1,
+                    help="fog-tier width F of the edge->fog->cloud "
+                         "reduction; F must divide --clients and needs "
+                         "the fedavg aggregator (default 1 = flat, "
+                         "bitwise identical to the pre-fog path)")
     args = ap.parse_args()
 
     if args.engine == "async":
@@ -112,6 +135,8 @@ def main():
                 attack="label_flip",
                 attack_fraction=0.1,
                 seed=0,
+                population=args.population,
+                fog_nodes=args.fog_nodes,
             )
         )
         h = sim.run_scanned() if args.engine == "scan" else sim.run()

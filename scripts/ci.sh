@@ -28,6 +28,14 @@ echo "=== sharded delta-pipeline selftest (8 fake devices, gate matrix) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.kernels.delta_pipeline.sharded_selftest --devices 8
 
+echo "=== fog-tier sharded selftest (8 fake devices, pod x client x zero) ==="
+# Two-level edge -> fog -> cloud reduction over the same gate matrix:
+# exactly ONE delta-sized all-reduce per tier (edge psum confined to a
+# pod slice + fog psum across pods), per-tier contract asserted via the
+# extended assert_inter_client_contract (exit 1 on any miss).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.kernels.delta_pipeline.fog_selftest --devices 8
+
 echo "=== simulator perf gate (looped/scanned/sweep/async vs BENCH_simulator.json) ==="
 # Gate-only against the committed baseline (exit non-zero on a >25%
 # per-row regression). The baseline is NOT rewritten on ordinary runs —

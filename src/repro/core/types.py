@@ -110,6 +110,36 @@ class SchedulerState:
 
 
 @_pytree_dataclass
+class PopulationSchedulerState:
+    """Population-scale scheduler registry: cheap ``(M,)`` rows only.
+
+    The per-round cohort gather materializes a C-sized
+    :class:`SchedulerState` from these rows (``fl.fog
+    .gather_cohort_sched``) and scatters the advanced rows back. The one
+    field deliberately NOT stored is ``prev_hist`` — an ``(M, V)`` float
+    table is the single scheduler buffer that does not stay cheap at a
+    million clients (1M × 62 bins ≈ 248 MB); instead
+    ``last_hist_round`` records when each client's histogram was last
+    observed, and the drift reference is recomputed for cohort members
+    only (histograms are deterministic in (client, round)).
+
+    theta_e:         (M,) adaptive per-client energy thresholds (Eq. 10).
+    warm:            (M,) bool — container warm/cold state (Eq. 4).
+    last_used:       (M,) int32 — round index of last invocation.
+    energy_spent:    (M,) cumulative Joules (sim units) per client.
+    last_hist_round: (M,) int32 — round the drift reference was taken at.
+    round_index:     () int32.
+    """
+
+    theta_e: Array
+    warm: Array
+    last_used: Array
+    energy_spent: Array
+    last_hist_round: Array
+    round_index: Array
+
+
+@_pytree_dataclass
 class SelectionResult:
     """Output of one scheduling decision.
 
@@ -156,5 +186,19 @@ def init_scheduler_state(
         warm=jnp.zeros((num_clients,), bool),
         last_used=jnp.full((num_clients,), -1, jnp.int32),
         energy_spent=jnp.zeros((num_clients,), jnp.float32),
+        round_index=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_population_scheduler_state(
+    population: int, theta_e0: float = 0.5
+) -> PopulationSchedulerState:
+    """Fresh population registry: cold containers, round-0 drift refs."""
+    return PopulationSchedulerState(
+        theta_e=jnp.full((population,), theta_e0, jnp.float32),
+        warm=jnp.zeros((population,), bool),
+        last_used=jnp.full((population,), -1, jnp.int32),
+        energy_spent=jnp.zeros((population,), jnp.float32),
+        last_hist_round=jnp.zeros((population,), jnp.int32),
         round_index=jnp.zeros((), jnp.int32),
     )

@@ -268,8 +268,27 @@ def inter_client_all_reduces(
     return count, delta_bytes
 
 
+def _fog_axis_split(mesh, client_axes, fog_nodes: int):
+    """Split the client axes into a fog-tier prefix and an edge-tier
+    suffix: ``fog_nodes`` must equal the device product of a leading
+    prefix of ``client_axes`` (mirrors kernels.delta_pipeline
+    ``split_fog_axes``, re-derived here so dist stays dependency-free).
+    Returns (fog_axes, edge_axes)."""
+    prod = 1
+    for i, a in enumerate(client_axes):
+        if prod == fog_nodes:
+            return tuple(client_axes[:i]), tuple(client_axes[i:])
+        prod *= int(mesh.shape.get(a, 1))
+    if prod == fog_nodes:
+        return tuple(client_axes), ()
+    raise ValueError(
+        f"fog_nodes={fog_nodes} is not the device product of a leading "
+        f"prefix of client axes {tuple(client_axes)} (mesh {dict(mesh.shape)})"
+    )
+
+
 def assert_inter_client_contract(
-    analysis: HLOAnalysis, rules, param_count: int
+    analysis: HLOAnalysis, rules, param_count: int, fog_nodes: int = 1
 ) -> tuple[int, float]:
     """Post-compile guard for the paper's §III communication contract:
     exactly ONE delta-sized all-reduce crosses the client axes per
@@ -277,13 +296,46 @@ def assert_inter_client_contract(
     axes span a single device. Returns (count, delta_bytes) so callers
     can log what they checked. Raises AssertionError on violation —
     both the reference fused-buffer aggregation and the sharded
-    delta-pipeline kernel path must satisfy it."""
+    delta-pipeline kernel path must satisfy it.
+
+    With ``fog_nodes > 1`` the contract becomes per-tier: the client
+    axes split into a fog prefix and an edge suffix, and the compiled
+    round must carry exactly ONE delta-sized all-reduce confined to the
+    edge axes (the fog-local partial sum; zero when the edge suffix
+    spans a single device) plus exactly ONE crossing the fog axes (the
+    cloud combine). Returns (edge_count + fog_count, delta_bytes)."""
     count, delta_bytes = inter_client_all_reduces(analysis, rules, param_count)
     ways = getattr(rules, "client_ways", None)
     if ways is None:
         ways = math.prod(
             int(rules.mesh.shape.get(a, 1)) for a in rules.plan.client_axes
         )
+    if fog_nodes > 1 and ways > 1:
+        fog_axes, edge_axes = _fog_axis_split(
+            rules.mesh, rules.plan.client_axes, fog_nodes
+        )
+        min_bytes = 0.5 * delta_bytes
+        edge_ways = math.prod(
+            int(rules.mesh.shape.get(a, 1)) for a in edge_axes
+        )
+        edge_count = count_axis_crossing(
+            analysis, rules.mesh, axes=edge_axes,
+            kinds=("all-reduce",), min_bytes=min_bytes, not_axes=fog_axes,
+        )
+        fog_count = count_axis_crossing(
+            analysis, rules.mesh, axes=fog_axes,
+            kinds=("all-reduce",), min_bytes=min_bytes, not_axes=edge_axes,
+        )
+        want_edge = 1 if edge_ways > 1 else 0
+        if edge_count != want_edge or fog_count != 1:
+            raise AssertionError(
+                f"fog-tier collective contract violated: found "
+                f"{edge_count} edge-tier (axes {edge_axes}, expected "
+                f"{want_edge}) and {fog_count} fog-tier (axes "
+                f"{fog_axes}, expected 1) delta-sized "
+                f"({delta_bytes:.0f}B) all-reduces"
+            )
+        return edge_count + fog_count, delta_bytes
     if ways > 1 and count != 1:
         raise AssertionError(
             f"inter-client all-reduce contract violated: found {count} "
@@ -299,6 +351,7 @@ def count_axis_crossing(
     axes=("client",),
     kinds=("all-reduce",),
     min_bytes: float = 0.0,
+    not_axes=(),
 ) -> int:
     """Number of collectives whose replica groups CROSS the given mesh
     axes — i.e. some group contains two devices with different coordinates
@@ -307,20 +360,24 @@ def count_axis_crossing(
 
     ``min_bytes`` filters metric-scalar traffic so the model-delta
     aggregation can be isolated (the paper's one inter-client collective).
+    ``not_axes`` additionally requires the op to stay CONFINED to slices
+    of those axes (no group crosses them) — this is how the fog contract
+    tells a tier-local psum from one flat all-reduce spanning both tiers.
     """
     names = list(mesh.axis_names)
     sizes = [int(mesh.shape[a]) for a in names]
     idxs = [names.index(a) for a in axes if a in names]
+    not_idxs = [names.index(a) for a in not_axes if a in names]
     if not idxs:
         return 0
     total = math.prod(sizes)
 
-    def crosses(groups) -> bool:
+    def crosses(groups, which) -> bool:
         if groups is None:
-            return any(sizes[i] > 1 for i in idxs)
+            return any(sizes[i] > 1 for i in which)
         for g in groups:
             coords = np.array(np.unravel_index(np.asarray(g) % total, sizes))
-            for i in idxs:
+            for i in which:
                 if len(set(coords[i].tolist())) > 1:
                     return True
         return False
@@ -328,5 +385,8 @@ def count_axis_crossing(
     return sum(
         1
         for op in analysis.collectives.ops
-        if op.kind in kinds and op.bytes >= min_bytes and crosses(op.groups)
+        if op.kind in kinds
+        and op.bytes >= min_bytes
+        and crosses(op.groups, idxs)
+        and not (not_idxs and crosses(op.groups, not_idxs))
     )

@@ -44,6 +44,8 @@ def run_selftest(
     zero: int | None = None,
     pallas_agg: bool = False,
     gates: str = "legacy",
+    fog_nodes: int = 1,
+    population: int | None = None,
 ) -> dict:
     """Compile (and optionally execute + cross-check) one sharded round.
 
@@ -52,6 +54,12 @@ def run_selftest(
     picks the server-pipeline config: "legacy" = the historical default
     (FedAvgM, nothing else), "plain" = bare FedAvg (every kernel gate
     off), "full" = DP + momentum + compression all on.
+
+    ``fog_nodes > 1`` requests the hierarchical edge → fog → cloud
+    reduction: the plan goes multi-pod (the pod axis is the fog tier, so
+    ``fog_nodes`` must equal the pod count) and the HLO contract check
+    asserts one delta-sized all-reduce PER TIER. ``population`` sizes
+    the virtual client registry (cohort-sampled rounds).
     """
     import jax
     import jax.numpy as jnp
@@ -76,7 +84,9 @@ def run_selftest(
         arch, loss_chunk=0, param_dtype="float32", compute_dtype="float32"
     )
     model = build_model(cfg)
-    rules = make_rules(None, cfg, device_count=devices, zero=zero)
+    rules = make_rules(
+        None, cfg, multi_pod=fog_nodes > 1, device_count=devices, zero=zero
+    )
     plan = rules.plan
 
     if gates == "full":
@@ -98,6 +108,8 @@ def run_selftest(
         local_steps=1,
         inner_optimizer="sgdm",
         use_pallas_agg=pallas_agg,
+        fog_nodes=fog_nodes,
+        population=population,
         **gate_kw,
     )
     global_batch = plan.num_clients * batch_per_slot
@@ -145,9 +157,17 @@ def run_selftest(
     hlo = analyze_hlo(compiled.as_text())
     # The delta aggregation moves whole-model bytes; metric scalars don't.
     inter_client, _ = inter_client_all_reduces(hlo, rules, model.param_count())
+    # The per-tier contract applies to the HIERARCHICAL implementation
+    # (shard_map kernel: one explicit psum per tier). The reference fog
+    # path under rules is GSPMD-scheduled — it legally fuses the
+    # two-level segment reduction into the flat single all-reduce, so it
+    # is held to the flat contract.
+    contract_fog = fog_nodes if pallas_agg else 1
     contract_err = None
     try:
-        assert_inter_client_contract(hlo, rules, model.param_count())
+        assert_inter_client_contract(
+            hlo, rules, model.param_count(), fog_nodes=contract_fog
+        )
     except AssertionError as e:
         contract_err = str(e)
     result = {
@@ -155,6 +175,8 @@ def run_selftest(
         "devices": devices,
         "pallas_agg": pallas_agg,
         "gates": gates,
+        "fog_nodes": fog_nodes,
+        "population": population,
         "contract_error": contract_err,
         "plan": {
             "num_clients": plan.num_clients,
@@ -168,7 +190,12 @@ def run_selftest(
             k: round(v) for k, v in hlo.collectives.bytes_by_kind.items()
         },
         "inter_client_all_reduces": inter_client,
-        "ok": inter_client == 1 and contract_err is None,
+        # Union-crossing count: flat contract is 1; the fog tiers are
+        # one per level (edge psum + fog psum), both crossing the union.
+        "ok": (
+            contract_err is None
+            and inter_client == (2 if contract_fog > 1 else 1)
+        ),
     }
     if not check:
         return result
@@ -243,12 +270,17 @@ def main(argv=None):
     ap.add_argument("--gates", default="legacy",
                     choices=("legacy", "plain", "full"),
                     help="server-pipeline gate preset")
+    ap.add_argument("--fog-nodes", type=int, default=1,
+                    help="fog-tier width (multi-pod plan; pod axis = fog)")
+    ap.add_argument("--population", type=int, default=None,
+                    help="virtual client registry size (cohort sampling)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
     res = run_selftest(
         args.arch, args.devices, check=not args.no_check,
         seq_len=args.seq_len, zero=args.zero,
         pallas_agg=args.pallas_agg, gates=args.gates,
+        fog_nodes=args.fog_nodes, population=args.population,
     )
     if args.json:
         print(json.dumps(res))

@@ -30,6 +30,7 @@ from repro.core import privacy as privacy_mod
 from repro.core.scheduler import account_energy, schedule_round
 from repro.core.selection import random_selection_mask
 from repro.fl import attacks as attacks_mod
+from repro.fl import fog as fog_mod
 from repro.fl.compression import apply_compression, wire_bytes_per_param
 from repro.fl.fuse import (
     fuse_clients,
@@ -133,6 +134,14 @@ def make_round_fn(
         and fl_cfg.aggregator == "fedavg"
         and attack.kind == "none"
     )
+    # Population mode: the scheduler registry is (M,)-sized; each round
+    # gathers a stratified N-client window's rows and scatters them back.
+    # Dense mode (population unset or == num_clients) keeps the flat
+    # round VERBATIM — bitwise oracle discipline.
+    pop_mode = (
+        fl_cfg.population is not None
+        and fl_cfg.population != fl_cfg.num_clients
+    )
 
     # Pod-scale sharding constraints: pin the slot-stacked replicas to the
     # client axis (and moments to the ZeRO axis) instead of trusting GSPMD
@@ -202,8 +211,22 @@ def make_round_fn(
             batt=batch["telemetry_batt"],
             energy=batch["telemetry_energy"],
         )
+        if pop_mode:
+            # Sample the round's scheduling window from the (M,) registry
+            # (fold_in key 7 — disjoint from the 5-way round split) and
+            # gather its scheduler rows; the batch's telemetry/hist rows
+            # are window-positional (the caller feeds N rows for the
+            # window, not the whole population).
+            window_ids = fog_mod.stratified_cohort(
+                jax.random.fold_in(state.rng, 7),
+                fl_cfg.population, fl_cfg.num_clients,
+            )
+            sched_view = fog_mod.gather_sched_rows(state.sched, window_ids)
+        else:
+            window_ids = None
+            sched_view = state.sched
         decision = schedule_round(
-            state.sched, telemetry, batch["hist"], fl_cfg.scheduler
+            sched_view, telemetry, batch["hist"], fl_cfg.scheduler
         )
         slot_ids, slot_mask = _slot_assignment(decision, fl_cfg, k_sched)
         slot_sizes = batch["slot_data_sizes"]
@@ -400,6 +423,16 @@ def make_round_fn(
                 outs = delta_pipeline_apply_sharded(
                     cat_d, base_flat, slot_mask, slot_sizes,
                     mesh=rules.mesh, client_axes=rules.plan.client_axes,
+                    fog_nodes=fl_cfg.fog_nodes,
+                    **kw,
+                )
+            elif fl_cfg.fog_nodes > 1:
+                # Single-host fog tier: one delta_pipeline_partial pass
+                # per fog's contiguous slot block + the shared cloud
+                # epilogue (fl/fog.py; fedavg-only, enforced by config).
+                outs = fog_mod.fog_pipeline_apply(
+                    cat_d, base_flat, slot_mask, slot_sizes,
+                    fog_nodes=fl_cfg.fog_nodes,
                     **kw,
                 )
             else:
@@ -430,6 +463,17 @@ def make_round_fn(
                 agg = agg_mod.trimmed_mean_aggregate(
                     agg_in, slot_mask, fl_cfg.trim_fraction
                 )
+            elif fl_cfg.fog_nodes > 1:
+                # Hierarchical Eq. 6 on the reference path: fog partials
+                # → cloud combine (float-reassociated flat aggregate).
+                if unfuse is not None:
+                    agg = fog_mod.fog_aggregate(
+                        agg_in, slot_mask, slot_sizes, fl_cfg.fog_nodes
+                    )
+                else:
+                    agg = fog_mod.fog_aggregate_tree(
+                        agg_in, slot_mask, slot_sizes, fl_cfg.fog_nodes
+                    )
             else:
                 agg = agg_mod.fedavg_stacked(agg_in, slot_mask, slot_sizes)
             if unfuse is not None:
@@ -452,11 +496,19 @@ def make_round_fn(
             fl_cfg.compression, fl_cfg.topk_fraction
         ) * float(model.param_count())
         round_energy_j = cost_model.energy_j(
-            decision.selection.mask, state.sched.warm, flops_round, tx_bytes
+            decision.selection.mask, sched_view.warm, flops_round, tx_bytes
         )
-        new_sched = account_energy(
+        advanced = account_energy(
             decision.new_state, round_energy_j, fl_cfg.scheduler
         )
+        if pop_mode:
+            # Scatter the window's advanced rows back into the (M,)
+            # registry; unsampled clients stay frozen until next sampled.
+            new_sched = fog_mod.scatter_sched_rows(
+                state.sched, window_ids, advanced
+            )
+        else:
+            new_sched = advanced
 
         new_state = FLState(
             params=new_params,

@@ -40,7 +40,11 @@ from repro.core import aggregation as agg_mod
 from repro.core import privacy as privacy_mod
 from repro.core.scheduler import SchedulerConfig, account_energy, schedule_round
 from repro.core.selection import random_selection_mask, topk_mask
-from repro.core.types import init_scheduler_state, static_on
+from repro.core.types import (
+    init_population_scheduler_state,
+    init_scheduler_state,
+    static_on,
+)
 from repro.data import emnist_like, har_like
 from repro.data.telemetry import (
     TelemetryConfig,
@@ -49,6 +53,7 @@ from repro.data.telemetry import (
     step_telemetry,
 )
 from repro.fl import attacks as attacks_mod
+from repro.fl import fog as fog_mod
 from repro.fl.compression import apply_compression, wire_bytes_per_param
 from repro.fl.fuse import (
     fuse_clients,
@@ -130,6 +135,18 @@ class SimulatorConfig:
     # ignore staleness there). Interpret-mode fallback off-TPU — a
     # correctness tool, slow on CPU, hence default off.
     use_pallas_agg: bool = False
+    # Virtual client population M (None → dense: population == num_clients).
+    # In population mode only cheap (M,) registries (telemetry, profiles,
+    # scheduler rows, data sizes) are carried at M; each round samples a
+    # num_clients-sized cohort, so all O(model) work — local updates, the
+    # fused (C, P) delta buffer, the Pallas pass — is cohort-sized.
+    # Structural for the sweep layer (a Python-level branch).
+    population: int | None = None
+    # Fog tier width F of the edge → fog → cloud reduction: each fog
+    # aggregator partially reduces its contiguous block of cohort clients,
+    # the cloud combines the F partials (fl/fog.py). 1 = flat (bitwise
+    # identical to the pre-fog path); > 1 requires aggregator="fedavg".
+    fog_nodes: int = 1
     hidden: tuple[int, ...] = (128, 64)
     seed: int = 0
 
@@ -156,13 +173,37 @@ class FedFogSimulator:
         in_dim, n_cls = cfg.dims()
         self.num_classes = n_cls
         self.sizes = (in_dim,) + cfg.hidden + (n_cls,)
+        # Population/cohort split: per-client registries live at M =
+        # population, all model-sized work at C = num_clients. Dense mode
+        # (population in (None, num_clients)) keeps the flat round
+        # function VERBATIM — bitwise oracle discipline.
+        self.population = cfg.population or cfg.num_clients
+        self._pop_mode = self.population != cfg.num_clients
+        if self.population < cfg.num_clients:
+            raise ValueError(
+                f"population={cfg.population} must be >= the cohort size "
+                f"num_clients={cfg.num_clients}"
+            )
+        fog_mod.validate_fog_config(
+            cfg.fog_nodes, cfg.num_clients, cfg.aggregator
+        )
         self.tel_cfg = cfg.telemetry or TelemetryConfig(
-            num_clients=cfg.num_clients, seed=cfg.seed
+            num_clients=self.population, seed=cfg.seed
+        )
+        if self.tel_cfg.num_clients != self.population:
+            raise ValueError(
+                f"telemetry.num_clients={self.tel_cfg.num_clients} must "
+                f"match the population size {self.population}"
+            )
+        # Cohort-sized telemetry config for stepping the gathered rows
+        # in population mode (step_telemetry draws shape (num_clients,)).
+        self._tel_cfg_cohort = dataclasses.replace(
+            self.tel_cfg, num_clients=cfg.num_clients
         )
         # When telemetry was derived from the simulator seed, sweep seeds
         # re-derive it; an explicitly provided TelemetryConfig stays fixed.
         self._tel_follows_seed = cfg.telemetry is None
-        self.n_mal = int(round(cfg.attack_fraction * cfg.num_clients))
+        self.n_mal = int(round(cfg.attack_fraction * self.population))
         self.cost_model = RoundCostModel(cfg.faas)
         self.n_params = sum(a * b + b for a, b in zip(self.sizes[:-1], self.sizes[1:]))
         self.env = self.params = self.sched_state = self.telemetry = None
@@ -181,9 +222,19 @@ class FedFogSimulator:
 
     def _ensure_state(self):
         if self.env is None:
-            env, params, sched, tel = self.init_state(self.cfg.seed)
+            env, params, sched, tel = self.init_state_fast(self.cfg.seed)
             self.env = env
             self.params, self.sched_state, self.telemetry = params, sched, tel
+
+    def init_state_fast(self, seed):
+        """``init_state`` through a shared jitted executable in population
+        mode. Eagerly, the (M,)-row registries cost ~15 separate RNG
+        dispatches — ~0.9 s at M = 1e6 on host, paid per instance — vs
+        one fused program compiled once per config. Dense mode keeps the
+        eager path verbatim (bitwise oracle discipline)."""
+        if self._pop_mode:
+            return _shared_init_jit(self.cfg)(seed)
+        return self.init_state(seed)
 
     @property
     def profiles(self):
@@ -209,6 +260,39 @@ class FedFogSimulator:
         )
         profiles = make_profiles(tel_cfg)
         telemetry = init_telemetry(tel_cfg)
+        if self._pop_mode:
+            # Population mode: (M,) registries, no (M, V) histogram table
+            # — the drift reference is recomputed per cohort from
+            # last_hist_round (see core.types.PopulationSchedulerState).
+            sched = init_population_scheduler_state(
+                self.population, cfg.scheduler.theta_e
+            )
+            data_sizes = jnp.exp(
+                jax.random.normal(
+                    jax.random.PRNGKey(seed + 40), (self.population,)
+                )
+                * 0.5
+                + jnp.log(300.0)
+            )
+            # Random-permutation placement is O(M log M) — a 1M-row sort
+            # (~0.8 s on host) spent shuffling an all-False array when no
+            # attack is configured. n_mal is static, so branch in Python;
+            # the key is dedicated (seed + 41), skipping it shifts no
+            # other stream.
+            if self.n_mal == 0:
+                malicious = jnp.zeros((self.population,), bool)
+            else:
+                malicious = jax.random.permutation(
+                    jax.random.PRNGKey(seed + 41),
+                    jnp.arange(self.population) < self.n_mal,
+                )
+            env = {
+                "profiles": profiles,
+                "data_sizes": data_sizes,
+                "malicious": malicious,
+                "data_seed": seed,
+            }
+            return env, params, sched, telemetry
         sched = init_scheduler_state(
             cfg.num_clients, self.num_classes, cfg.scheduler.theta_e
         )
@@ -261,15 +345,23 @@ class FedFogSimulator:
         p_new, _ = jax.lax.scan(step, params, (xs, ys))
         return jax.tree.map(lambda a, b: a - b, p_new, params)
 
-    def _histograms(self, data_cfg, round_idx):
+    def _histograms(self, data_cfg, round_idx, cids=None):
         fn = (
             emnist_like.client_histogram
             if self.cfg.task == "emnist"
             else har_like.client_histogram
         )
-        return jax.vmap(lambda c: fn(data_cfg, c, round_idx))(
-            jnp.arange(self.cfg.num_clients)
+        if cids is None:
+            return jax.vmap(lambda c: fn(data_cfg, c, round_idx))(
+                jnp.arange(self.cfg.num_clients)
+            )
+        # Cohort variant: explicit client ids, per-client round indices
+        # (the population drift reference is recomputed at each member's
+        # last-observed round).
+        rounds = jnp.broadcast_to(
+            jnp.asarray(round_idx, jnp.int32), cids.shape
         )
+        return jax.vmap(lambda c, r: fn(data_cfg, c, r))(cids, rounds)
 
     # ------------------------------------------------------------------ #
     def _participation(self, decision, telemetry, k_sel):
@@ -293,17 +385,20 @@ class FedFogSimulator:
         return mask
 
     def _local_deltas(self, data_cfg, params, round_idx, mask, malicious,
-                      k_data, k_attack):
-        """Vmapped local training over ALL clients + clip/attack/compression.
+                      k_data, k_attack, cids=None):
+        """Vmapped local training over the cohort + clip/attack/compression.
 
         Returns ``(deltas, mask)`` — ``mask`` may shrink under the dropout
         attack. Shared by both engines: the sync round computes and
         aggregates in the same step; the async engine computes at dispatch
-        time and aggregates at completion/flush time.
+        time and aggregates at completion/flush time. ``cids`` defaults to
+        the dense registry (all ``num_clients`` clients); population mode
+        passes the sampled cohort's ids.
         """
         cfg = self.cfg
         n = cfg.num_clients
-        cids = jnp.arange(n)
+        if cids is None:
+            cids = jnp.arange(n)
         deltas = jax.vmap(
             lambda cid, k, m: self._client_update(
                 data_cfg, params, cid, round_idx, k, m
@@ -342,23 +437,16 @@ class FedFogSimulator:
         return jnp.mean((jnp.argmax(logits, -1) == ev[1]).astype(jnp.float32))
 
     # ------------------------------------------------------------------ #
-    def _round(self, env, params, sched_state, telemetry, round_idx, key):
-        """One synchronous FL round — pure function of its arguments, so it
-        is equally valid as a jitted step, a ``lax.scan`` body, and a
-        vmapped-per-seed program."""
+    def _apply_deltas(self, params, deltas, mask, data_sizes, k_dp):
+        """Aggregate cohort deltas and apply the server update.
+
+        Extracted op-for-op from the flat round body so the dense and
+        population rounds share one aggregation path; with
+        ``fog_nodes > 1`` the Eq. 6 reduction runs hierarchically
+        (fog partials → cloud combine, ``fl/fog.py``) on both the
+        Pallas-kernel and reference branches.
+        """
         cfg = self.cfg
-        data_cfg = dataclasses.replace(self.data_cfg, seed=env["data_seed"])
-        malicious = env["malicious"]
-        k_sel, k_data, k_attack, k_dp, k_tel, k_eval = jax.random.split(key, 6)
-
-        hist = self._histograms(data_cfg, round_idx)
-        decision = schedule_round(sched_state, telemetry, hist, cfg.scheduler)
-
-        mask = self._participation(decision, telemetry, k_sel)
-        deltas, mask = self._local_deltas(
-            data_cfg, params, round_idx, mask, malicious, k_data, k_attack
-        )
-
         if cfg.use_pallas_agg:
             # Fused delta-pipeline kernel: aggregation (Eq. 6 weighting,
             # or the in-kernel median / trimmed selection network) + DP
@@ -379,12 +467,19 @@ class FedFogSimulator:
                     stacked_leaf_sizes(deltas),
                     [x.shape for x in jax.tree.leaves(params)],
                 )
-            new_flat = delta_pipeline_apply(
-                cat_d, base_flat, mask, env["data_sizes"],
-                lr=cfg.server_lr, dp_noise=noise,
-                trim_fraction=cfg.trim_fraction,
-                aggregator=cfg.aggregator,
-            )
+            if cfg.fog_nodes > 1:
+                new_flat = fog_mod.fog_pipeline_apply(
+                    cat_d, base_flat, mask, data_sizes,
+                    lr=cfg.server_lr, dp_noise=noise,
+                    fog_nodes=cfg.fog_nodes,
+                )
+            else:
+                new_flat = delta_pipeline_apply(
+                    cat_d, base_flat, mask, data_sizes,
+                    lr=cfg.server_lr, dp_noise=noise,
+                    trim_fraction=cfg.trim_fraction,
+                    aggregator=cfg.aggregator,
+                )
             new_params = unfuse_vec(new_flat)
         else:
             if cfg.aggregator == "median":
@@ -393,8 +488,12 @@ class FedFogSimulator:
                 agg = agg_mod.trimmed_mean_aggregate(
                     deltas, mask, cfg.trim_fraction
                 )
+            elif cfg.fog_nodes > 1:
+                agg = fog_mod.fog_aggregate_tree(
+                    deltas, mask, data_sizes, cfg.fog_nodes
+                )
             else:
-                agg = agg_mod.fedavg_stacked(deltas, mask, env["data_sizes"])
+                agg = agg_mod.fedavg_stacked(deltas, mask, data_sizes)
             if static_on(cfg.dp_sigma):
                 agg = privacy_mod.gaussian_mechanism(
                     agg,
@@ -406,6 +505,34 @@ class FedFogSimulator:
             new_params = jax.tree.map(
                 lambda p, a: p + cfg.server_lr * a, params, agg
             )
+        return new_params
+
+    # ------------------------------------------------------------------ #
+    def _round(self, env, params, sched_state, telemetry, round_idx, key):
+        """One synchronous FL round — pure function of its arguments, so it
+        is equally valid as a jitted step, a ``lax.scan`` body, and a
+        vmapped-per-seed program. Dispatches to the population-mode round
+        when a virtual population larger than the cohort is configured."""
+        if self._pop_mode:
+            return self._round_population(
+                env, params, sched_state, telemetry, round_idx, key
+            )
+        cfg = self.cfg
+        data_cfg = dataclasses.replace(self.data_cfg, seed=env["data_seed"])
+        malicious = env["malicious"]
+        k_sel, k_data, k_attack, k_dp, k_tel, k_eval = jax.random.split(key, 6)
+
+        hist = self._histograms(data_cfg, round_idx)
+        decision = schedule_round(sched_state, telemetry, hist, cfg.scheduler)
+
+        mask = self._participation(decision, telemetry, k_sel)
+        deltas, mask = self._local_deltas(
+            data_cfg, params, round_idx, mask, malicious, k_data, k_attack
+        )
+
+        new_params = self._apply_deltas(
+            params, deltas, mask, env["data_sizes"], k_dp
+        )
 
         # --- DES: latency + energy (§IV.F, shared RoundCostModel) ----- #
         workload, up_bytes, down_bytes = self._round_workload()
@@ -421,6 +548,91 @@ class FedFogSimulator:
         new_tel = step_telemetry(
             self.tel_cfg, telemetry, mask, costs.energy_j, env["profiles"], k_tel
         )
+
+        acc = self._eval_accuracy(data_cfg, new_params, k_eval)
+
+        metrics = {
+            "accuracy": acc,
+            "num_selected": jnp.sum(mask.astype(jnp.int32)),
+            "round_latency_ms": costs.round_ms,
+            "orchestration_ms": costs.orchestration_ms,
+            "energy_j": jnp.sum(costs.energy_j),
+            "cold_starts": costs.cold_starts,
+            "mean_drift": jnp.mean(decision.selection.drift),
+            "mean_utility": jnp.mean(decision.selection.utility),
+            "mean_battery": jnp.mean(new_tel.batt),
+        }
+        return new_params, new_sched, new_tel, metrics
+
+    # ------------------------------------------------------------------ #
+    def _round_population(self, env, params, pop_sched, telemetry,
+                          round_idx, key):
+        """One synchronous round over a virtual population.
+
+        The (M,)-sized registries (telemetry, profiles, scheduler rows,
+        data sizes, malicious flags) stay resident; a stratified
+        ``num_clients``-sized cohort is sampled per round
+        (``fold_in(key, 7)`` — disjoint from the 6-way round key split),
+        its rows gathered, the ENTIRE flat round machinery
+        (scheduling, local updates, fused aggregation, DES costs,
+        telemetry AR(1) step) runs at cohort size, and the advanced rows
+        scatter back. Unsampled clients are frozen until next sampled —
+        the cost of a round never depends on M.
+        """
+        cfg = self.cfg
+        data_cfg = dataclasses.replace(self.data_cfg, seed=env["data_seed"])
+        k_sel, k_data, k_attack, k_dp, k_tel, k_eval = jax.random.split(key, 6)
+        k_cohort = jax.random.fold_in(key, 7)
+
+        ids = fog_mod.stratified_cohort(
+            k_cohort, self.population, cfg.num_clients
+        )
+        tel_c = fog_mod.gather_rows(telemetry, ids)
+        prof_c = fog_mod.gather_rows(env["profiles"], ids)
+        sizes_c = env["data_sizes"][ids]
+        mal_c = env["malicious"][ids]
+
+        hist = self._histograms(data_cfg, round_idx, cids=ids)
+        # The drift reference: with drift off, client histograms are
+        # round-independent, so the current round's histograms ARE the
+        # last-observed ones — skip the second Dirichlet pass (it is the
+        # dominant population-mode overhead inside the compiled round).
+        # With drift on, recompute at each member's last-observed round.
+        if cfg.drift_period:
+            prev_fn = lambda c, r: self._histograms(data_cfg, r, cids=c)
+        else:
+            prev_fn = lambda c, r: hist
+        sched_c = fog_mod.gather_cohort_sched(pop_sched, ids, prev_fn)
+        decision = schedule_round(sched_c, tel_c, hist, cfg.scheduler)
+
+        mask = self._participation(decision, tel_c, k_sel)
+        deltas, mask = self._local_deltas(
+            data_cfg, params, round_idx, mask, mal_c, k_data, k_attack,
+            cids=ids,
+        )
+
+        new_params = self._apply_deltas(params, deltas, mask, sizes_c, k_dp)
+
+        # --- DES: latency + energy (§IV.F, shared RoundCostModel) ----- #
+        workload, up_bytes, down_bytes = self._round_workload()
+        warm = sched_c.warm
+        if cfg.policy in ("fogfaas",):
+            warm = jnp.zeros_like(warm)  # naive platform: no keep-alive
+        costs = self.cost_model.round_costs(
+            prof_c, mask, warm, workload, up_bytes, down_bytes,
+            policy="fedfog" if cfg.policy in ("fedfog", "rcs", "vanilla") else "fogfaas",
+        )
+
+        sched_rows = account_energy(
+            decision.new_state, costs.energy_j, cfg.scheduler
+        )
+        new_sched = fog_mod.scatter_cohort_sched(
+            pop_sched, ids, sched_rows, round_idx
+        )
+        tel_rows = step_telemetry(
+            self._tel_cfg_cohort, tel_c, mask, costs.energy_j, prof_c, k_tel
+        )
+        new_tel = fog_mod.scatter_rows(telemetry, ids, tel_rows)
 
         acc = self._eval_accuracy(data_cfg, new_params, k_eval)
 
@@ -539,3 +751,22 @@ class FedFogSimulator:
         host = jax.device_get(stacked)
         history = {name: [float(x) for x in v] for name, v in host.items()}
         return self._finalize(history, rounds)
+
+
+# --------------------------------------------------------------------- #
+# Shared population-mode init executables. Keyed on the frozen config so
+# every same-config instance (benchmarks time fresh instances; tests
+# build many) reuses one compiled init program instead of re-tracing —
+# and instead of the eager per-op dispatch sequence, whose O(M) RNG
+# draws dominate construction time at large populations.
+# --------------------------------------------------------------------- #
+_INIT_JIT_CACHE: dict[SimulatorConfig, Any] = {}
+
+
+def _shared_init_jit(cfg: SimulatorConfig):
+    fn = _INIT_JIT_CACHE.get(cfg)
+    if fn is None:
+        fn = _INIT_JIT_CACHE[cfg] = jax.jit(
+            FedFogSimulator(cfg, defer_state=True).init_state
+        )
+    return fn

@@ -34,8 +34,22 @@ class FLState:
 class FLConfig:
     """One place for every FedFog-round knob."""
 
-    num_clients: int = 64  # N: logical client population (scheduler domain)
+    num_clients: int = 64  # N: scheduling window per round (registry rows)
     slots: int = 16  # C: concurrent hardware cohort slots
+    # M: virtual client population (None → dense: registry == window).
+    # When set, the scheduler registry is (M,)-sized and each round
+    # samples a stratified N-client window (fold_in(rng, 7)), gathers its
+    # rows, schedules/trains/aggregates at window/slot size, and scatters
+    # the advanced rows back — round cost never depends on M. Structural
+    # for the sweep layer (Python-level branch). Unlike the paper-scale
+    # simulator, the runtime keeps the full (M, hist_bins) drift table:
+    # batch histograms are opaque caller data, not recomputable.
+    population: int | None = None
+    # F: fog tier width of the edge → fog → cloud reduction over the
+    # slot axis (fl/fog.py; under mesh rules the pod axis is the fog
+    # tier). 1 = flat, bitwise identical to the pre-fog path; > 1
+    # requires aggregator="fedavg".
+    fog_nodes: int = 1
     local_steps: int = 1  # E: local epochs/steps per round (Eq. 5)
     microbatch: int = 1  # gradient-accumulation splits per local step
     hist_bins: int = 64  # drift histogram buckets
@@ -78,6 +92,14 @@ class FLConfig:
 
     def __post_init__(self):
         assert self.slots >= 1 and self.num_clients >= self.slots
+        if self.population is not None and self.population < self.num_clients:
+            raise ValueError(
+                f"population={self.population} must be >= the scheduling "
+                f"window num_clients={self.num_clients}"
+            )
+        from repro.fl.fog import validate_fog_config
+
+        validate_fog_config(self.fog_nodes, self.slots, self.aggregator)
 
 
 def init_fl_state(model, fl_cfg: FLConfig, key: jax.Array,
@@ -101,7 +123,8 @@ def init_fl_state(model, fl_cfg: FLConfig, key: jax.Array,
         server_mu=mu,
         server_count=jnp.zeros((), jnp.int32),
         sched=init_scheduler_state(
-            fl_cfg.num_clients, fl_cfg.hist_bins, fl_cfg.scheduler.theta_e
+            fl_cfg.population or fl_cfg.num_clients,
+            fl_cfg.hist_bins, fl_cfg.scheduler.theta_e,
         ),
         rng=k_rng,
         step=jnp.zeros((), jnp.int32),

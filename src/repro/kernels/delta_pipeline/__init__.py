@@ -1,17 +1,21 @@
 from repro.kernels.delta_pipeline.ops import (
+    combine_epilogue,
     delta_pipeline_apply,
     delta_pipeline_apply_sharded,
     delta_pipeline_partial,
     delta_sq_norms,
     segment_table,
+    split_fog_axes,
 )
 from repro.kernels.delta_pipeline.ref import delta_pipeline_ref
 
 __all__ = [
+    "combine_epilogue",
     "delta_pipeline_apply",
     "delta_pipeline_apply_sharded",
     "delta_pipeline_partial",
     "delta_sq_norms",
     "delta_pipeline_ref",
     "segment_table",
+    "split_fog_axes",
 ]

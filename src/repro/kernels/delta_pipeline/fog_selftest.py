@@ -1,0 +1,213 @@
+"""Fake-device selftest for the FOG-TIER sharded delta pipeline (SUBPROCESS).
+
+Backs an 8-device host mesh (pod × client × zero) with XLA fake CPU
+devices and runs the gate matrix through ``delta_pipeline_apply_sharded``
+with ``fog_nodes`` equal to the pod-axis width, so the round reduces
+edge → fog → cloud: one psum confined to the edge (client) axis per fog
+group, then one psum across the fog (pod) axis. Each case is compared
+against the single-device fused kernel and the pure-jnp oracle, and the
+compiled HLO is checked two ways:
+
+  * ``count_axis_crossing`` per tier — exactly ONE delta-sized
+    all-reduce crossing the edge axes and exactly ONE crossing the fog
+    axes (the flat contract would be one crossing their union);
+  * ``assert_inter_client_contract(..., fog_nodes=F)`` — the public
+    per-tier guard the train path uses.
+
+MUST run in its own process: the fake-device flag has to be set before
+jax initializes its backend (tests/test_fog_population.py and
+scripts/ci.sh invoke ``python -m
+repro.kernels.delta_pipeline.fog_selftest --json``).
+"""
+import os
+import sys
+
+if __name__ == "__main__":  # set BEFORE any jax import in this process
+    _n = "8"
+    for _i, _a in enumerate(sys.argv):
+        if _a == "--devices" and _i + 1 < len(sys.argv):
+            _n = sys.argv[_i + 1]
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+# ruff: noqa: E402
+import argparse
+import functools
+import json
+import types
+
+
+def run_selftest(devices: int = 8, *, pods: int = 2, zero: int = 2,
+                 c: int = 16, p: int = 2048) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.dist.hlo_analysis import (
+        analyze_hlo,
+        assert_inter_client_contract,
+        count_axis_crossing,
+    )
+    from repro.kernels.delta_pipeline import (
+        delta_pipeline_apply,
+        delta_pipeline_apply_sharded,
+        delta_pipeline_ref,
+    )
+    from repro.kernels.delta_pipeline.sharded_selftest import _gate_matrix
+
+    assert len(jax.devices()) >= devices, (
+        f"need {devices} devices, have {len(jax.devices())} — run via "
+        "python -m repro.kernels.delta_pipeline.fog_selftest"
+    )
+    edge_ways = devices // (pods * zero)
+    mesh = Mesh(
+        np.asarray(jax.devices()[:devices]).reshape(pods, edge_ways, zero),
+        ("pod", "client", "zero"),
+    )
+    client_axes = ("pod", "client")
+    fog_nodes = pods
+    # Lightweight stand-in for dist.sharding_rules: the contract guard
+    # only touches .mesh, .plan.client_axes and .client_ways.
+    rules = types.SimpleNamespace(
+        mesh=mesh,
+        plan=types.SimpleNamespace(client_axes=client_axes),
+        client_ways=pods * edge_ways,
+    )
+
+    rng = np.random.default_rng(0)
+    upd = jnp.asarray(rng.normal(size=(c, p)), jnp.float32)
+    base = jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+    mask = jnp.asarray(rng.random(c) < 0.75)
+    weights = jnp.asarray(rng.integers(10, 100, c), jnp.float32)
+    stale = jnp.asarray(rng.integers(0, 4, c), jnp.float32)
+    noise = jnp.asarray(rng.normal(size=(p,)) * 1e-3, jnp.float32)
+    mu = jnp.asarray(rng.normal(size=(p,)) * 0.1, jnp.float32)
+
+    result = {"devices": devices, "pods": pods, "edge_ways": edge_ways,
+              "zero": zero, "fog_nodes": fog_nodes, "cases": {}, "ok": True}
+    for name, case in _gate_matrix():
+        case = dict(case)
+        kw = dict(
+            lr=0.7,
+            staleness=stale if case.pop("staleness", False) else None,
+            staleness_exponent=case.pop("staleness_exponent", 0.0),
+            dp_noise=noise if case.pop("dp", False) else None,
+            momentum=mu if case.pop("momentum", False) else None,
+        )
+        static = dict(case)
+
+        sharded = functools.partial(
+            delta_pipeline_apply_sharded,
+            mesh=mesh, client_axes=client_axes, fog_nodes=fog_nodes,
+            **static,
+        )
+        args = (upd, base, mask, weights, kw["lr"], kw["staleness"],
+                kw["staleness_exponent"], kw["dp_noise"], kw["momentum"])
+        compiled = jax.jit(
+            lambda u, b, m, w: sharded(
+                u, b, m, w, kw["lr"], kw["staleness"],
+                kw["staleness_exponent"], kw["dp_noise"], kw["momentum"],
+            )
+        ).lower(upd, base, mask, weights).compile()
+        out_sh = compiled(upd, base, mask, weights)
+        out_un = delta_pipeline_apply(*args, **static)
+        out_rf = delta_pipeline_ref(*args, **static)
+
+        def leaves(o):
+            return o if isinstance(o, tuple) else (o,)
+
+        d_un = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(leaves(out_sh), leaves(out_un))
+        )
+        d_rf = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(leaves(out_sh), leaves(out_rf))
+        )
+        # Per-tier contract: ONE delta-sized all-reduce confined to the
+        # edge (client) axis — groups live inside a pod slice — and ONE
+        # crossing the fog (pod) axis. Payload per zero-shard is the
+        # (P/zero + 2,) partial-sum pack: ≈ 4·p/zero bytes.
+        analysis = analyze_hlo(compiled.as_text())
+        min_b = 2.0 * p / zero
+        n_edge = count_axis_crossing(
+            analysis, mesh, axes=("client",), kinds=("all-reduce",),
+            min_bytes=min_b, not_axes=("pod",),
+        )
+        n_fog = count_axis_crossing(
+            analysis, mesh, axes=("pod",), kinds=("all-reduce",),
+            min_bytes=min_b, not_axes=("client",),
+        )
+        try:
+            assert_inter_client_contract(analysis, rules, p,
+                                         fog_nodes=fog_nodes)
+            contract_ok = True
+        except AssertionError:
+            contract_ok = False
+        # Same tolerance rationale as sharded_selftest: fedadam's
+        # 1e-3-epsilon division amplifies psum-reassociation noise.
+        tol = 5e-3 if static.get("server_optimizer") == "fedadam" else 1e-5
+        want_edge = 1 if edge_ways > 1 else 0
+        case_ok = (d_un < tol and d_rf < tol and n_edge == want_edge
+                   and n_fog == 1 and contract_ok)
+        result["cases"][name] = {
+            "max_diff_vs_unsharded": d_un,
+            "max_diff_vs_ref": d_rf,
+            "edge_all_reduces": n_edge,
+            "fog_all_reduces": n_fog,
+            "contract_ok": contract_ok,
+            "ok": case_ok,
+        }
+        result["ok"] = bool(result["ok"] and case_ok)
+
+    # Flat sanity on the SAME mesh: fog_nodes=1 must keep the one
+    # union-crossing all-reduce and match bitwise-identical codegen
+    # semantics (single psum over ("pod","client")).
+    flat = jax.jit(
+        lambda u, b, m, w: delta_pipeline_apply_sharded(
+            u, b, m, w, mesh=mesh, client_axes=client_axes, fog_nodes=1,
+        )
+    ).lower(upd, base, mask, weights).compile()
+    flat_analysis = analyze_hlo(flat.as_text())
+    n_flat = count_axis_crossing(
+        flat_analysis, mesh, axes=client_axes, kinds=("all-reduce",),
+        min_bytes=2.0 * p / zero,
+    )
+    d_flat = float(jnp.max(jnp.abs(
+        flat(upd, base, mask, weights)
+        - delta_pipeline_apply(upd, base, mask, weights)
+    )))
+    try:
+        assert_inter_client_contract(flat_analysis, rules, p)
+        flat_contract = True
+    except AssertionError:
+        flat_contract = False
+    flat_ok = n_flat == 1 and flat_contract and d_flat < 1e-5
+    result["flat"] = {"client_all_reduces": n_flat,
+                      "contract_ok": flat_contract,
+                      "max_diff_vs_unsharded": d_flat, "ok": flat_ok}
+    result["ok"] = bool(result["ok"] and flat_ok)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--zero", type=int, default=2)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+    res = run_selftest(args.devices, pods=args.pods, zero=args.zero)
+    if args.json:
+        print(json.dumps(res))
+    else:
+        for k, v in res.items():
+            print(f"{k}: {v}")
+    return 0 if res["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,12 +5,18 @@ from repro.kernels.delta_pipeline.delta_pipeline import (
     delta_sq_norms,
     segment_table,
 )
-from repro.kernels.delta_pipeline.sharded import delta_pipeline_apply_sharded
+from repro.kernels.delta_pipeline.sharded import (
+    combine_epilogue,
+    delta_pipeline_apply_sharded,
+    split_fog_axes,
+)
 
 __all__ = [
+    "combine_epilogue",
     "delta_pipeline_apply",
     "delta_pipeline_apply_sharded",
     "delta_pipeline_partial",
     "delta_sq_norms",
     "segment_table",
+    "split_fog_axes",
 ]

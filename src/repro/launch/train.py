@@ -46,6 +46,14 @@ def parse_args(argv=None):
                          "(XLA_FLAGS; must be set before jax initializes). "
                          "0 = use the real platform's device pool")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fog-nodes", type=int, default=1,
+                    help="fog-tier width of the edge->fog->cloud "
+                         "reduction; under a multi-pod mesh this must "
+                         "equal the pod count (fog <-> pod axis), and "
+                         "the HLO contract is asserted per tier")
+    ap.add_argument("--population", type=int, default=None,
+                    help="virtual client registry size (>= --clients); "
+                         "rounds gather a stratified --clients window")
     ap.add_argument("--pallas-agg", action="store_true",
                     help="fuse the server delta pipeline into the Pallas "
                          "kernel (sharded shard_map entry under --scale "
@@ -120,6 +128,8 @@ def main(argv=None):
         local_steps=args.local_steps,
         inner_lr=args.inner_lr,
         use_pallas_agg=args.pallas_agg,
+        fog_nodes=args.fog_nodes,
+        population=args.population,
     )
     data_cfg = FedDataConfig(
         vocab_size=cfg.vocab_size, drift_period=10, seed=args.seed
@@ -283,12 +293,18 @@ def _sharded_round_fn(args, cfg, model, fl_cfg, rules, flops_round):
         print(f"[train] note: {w}")
 
     # Raises on violation — holds on both the reference aggregation and
-    # the sharded delta-pipeline kernel path (--pallas-agg).
+    # the sharded delta-pipeline kernel path (--pallas-agg). With a fog
+    # tier on the kernel path the contract is per-tier (edge psum + fog
+    # psum); the reference fog path is GSPMD-scheduled and legally
+    # fuses back to the flat single all-reduce.
+    contract_fog = fl_cfg.fog_nodes if fl_cfg.use_pallas_agg else 1
     _, delta_bytes = assert_inter_client_contract(
-        hlo, rules, model.param_count()
+        hlo, rules, model.param_count(), fog_nodes=contract_fog
     )
     if rules.client_ways > 1:
-        print("[train] verified: ONE inter-client all-reduce "
+        tiers = ("one delta all-reduce PER TIER (edge+fog)"
+                 if contract_fog > 1 else "ONE inter-client all-reduce")
+        print(f"[train] verified: {tiers} "
               f"({delta_bytes:.2e} B delta payload)")
     return compiled
 

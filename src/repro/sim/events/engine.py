@@ -56,6 +56,8 @@ from repro.core import aggregation as agg_mod
 from repro.core.scheduler import account_energy, schedule_round
 from repro.core.types import static_on
 from repro.data.telemetry import step_telemetry
+from repro.core.types import SchedulerState
+from repro.fl import fog as fog_mod
 from repro.fl.fuse import (
     fuse_clients,
     fuse_vector,
@@ -166,6 +168,14 @@ class AsyncState(NamedTuple):
     key_uses: Array  # () flushes that already consumed the stored keys
     m_flush: Any  # dict of (max_flushes,) metric arrays
     m_dispatch: Any  # dict of (max_dispatches,) metric arrays
+    # Population mode (SimulatorConfig.population > num_clients): the N
+    # event slots are leased to virtual clients. ``owner[i]`` is the
+    # population id whose in-flight/buffered update occupies slot i, and
+    # ``pend_sizes[i]`` its |D| weight, captured at admission so the
+    # flush never gathers from the (M,) registry at aggregate time. In
+    # dense mode both are inert (owner = arange, sizes = registry rows).
+    owner: Array  # (N,) int32 population id leasing each slot
+    pend_sizes: Array  # (N,) f32 |D| of the slot's in-flight update
 
 
 class AsyncFedFogSimulator:
@@ -203,7 +213,10 @@ class AsyncFedFogSimulator:
     def init_state(self, seed) -> AsyncState:
         """Functional, seed-traceable initial state (vmappable)."""
         cfg, n = self.cfg, self.cfg.num_clients
-        env, params, sched, tel = self.sim.init_state(seed)
+        # init_state_fast: population-mode (M,) registries init through a
+        # shared jitted program (inlines when this is itself traced);
+        # dense mode stays on the eager path verbatim.
+        env, params, sched, tel = self.sim.init_state_fast(seed)
         key = jax.random.PRNGKey(jnp.asarray(seed, jnp.int32) + 100)
         online = init_online(
             self.acfg.churn, n, jax.random.fold_in(key, 2718)
@@ -252,6 +265,8 @@ class AsyncFedFogSimulator:
                 k: jnp.zeros((self.max_dispatches,), jnp.float32)
                 for k in _DISPATCH_METRICS
             },
+            owner=jnp.arange(n, dtype=jnp.int32),
+            pend_sizes=env["data_sizes"][jnp.arange(n)].astype(jnp.float32),
         )
 
     # ------------------------------------------------------------------ #
@@ -301,6 +316,11 @@ class AsyncFedFogSimulator:
                 leaf_sizes(state.params),
                 [x.shape for x in jax.tree.leaves(state.params)],
             )
+        # Population mode aggregates with the |D| weights captured at
+        # admission (the slot's lease), so the flush never touches the
+        # (M,) registry for model-sized math.
+        pop_mode = self.sim._pop_mode
+        sizes_vec = state.pend_sizes if pop_mode else state.env["data_sizes"]
         # Robust aggregators are unweighted medians/means over the live
         # buffer — staleness discounting does not compose with them, so
         # they ignore it on both paths (same as the sync round).
@@ -309,16 +329,27 @@ class AsyncFedFogSimulator:
             # Fused delta-pipeline kernel: staleness-discounted Eq. 6
             # weighting + reduction (or the in-kernel median / trimmed
             # selection) + DP noise + apply in ONE pass over the (N, P)
-            # buffer.
-            new_flat = delta_pipeline_apply(
-                state.pending, base_flat, buf, state.env["data_sizes"],
-                lr=cfg.server_lr,
-                staleness=None if robust else staleness,
-                staleness_exponent=acfg.staleness_exponent,
-                dp_noise=noise,
-                trim_fraction=cfg.trim_fraction,
-                aggregator=cfg.aggregator,
-            )
+            # buffer. With a fog tier the same pass runs per fog block
+            # and the cloud combines the partials (fl/fog.py).
+            if cfg.fog_nodes > 1:
+                new_flat = fog_mod.fog_pipeline_apply(
+                    state.pending, base_flat, buf, sizes_vec,
+                    lr=cfg.server_lr,
+                    staleness=staleness,
+                    staleness_exponent=acfg.staleness_exponent,
+                    dp_noise=noise,
+                    fog_nodes=cfg.fog_nodes,
+                )
+            else:
+                new_flat = delta_pipeline_apply(
+                    state.pending, base_flat, buf, sizes_vec,
+                    lr=cfg.server_lr,
+                    staleness=None if robust else staleness,
+                    staleness_exponent=acfg.staleness_exponent,
+                    dp_noise=noise,
+                    trim_fraction=cfg.trim_fraction,
+                    aggregator=cfg.aggregator,
+                )
         else:
             if cfg.aggregator == "median":
                 agg = agg_mod.median_aggregate(state.pending, buf)
@@ -326,9 +357,14 @@ class AsyncFedFogSimulator:
                 agg = agg_mod.trimmed_mean_aggregate(
                     state.pending, buf, cfg.trim_fraction
                 )
+            elif cfg.fog_nodes > 1:
+                agg = fog_mod.fog_aggregate(
+                    state.pending, buf, sizes_vec, cfg.fog_nodes,
+                    staleness, acfg.staleness_exponent,
+                )
             else:
                 agg = async_aggregate(
-                    state.pending, buf, state.env["data_sizes"], staleness,
+                    state.pending, buf, sizes_vec, staleness,
                     acfg.staleness_exponent,
                 )
             if noise is not None:
@@ -336,11 +372,49 @@ class AsyncFedFogSimulator:
             new_flat = base_flat + cfg.server_lr * agg
         params = unfuse_vec(new_flat)
         energy = state.pend_energy * buf
-        sched = account_energy(state.sched, energy, cfg.scheduler)
-        tel = step_telemetry(
-            self.sim.tel_cfg, state.tel, buf, energy, state.env["profiles"],
-            fresh(state.k_tel),
-        )
+        if pop_mode:
+            # Gather the owners' registry rows, advance only the flushed
+            # slots' rows, scatter back. Duplicate owners across slots
+            # (possible when a later candidate draw collides with a slot
+            # still leased from an earlier dispatch) resolve
+            # last-writer-wins — a documented approximation; collisions
+            # are O(N/M) rare at population scale.
+            owner = state.owner
+            n = cfg.num_clients
+            prof_rows = fog_mod.gather_rows(state.env["profiles"], owner)
+            srows = SchedulerState(
+                prev_hist=jnp.zeros((n, 1), jnp.float32),  # not consumed
+                theta_e=state.sched.theta_e[owner],
+                warm=state.sched.warm[owner],
+                last_used=state.sched.last_used[owner],
+                energy_spent=state.sched.energy_spent[owner],
+                round_index=state.sched.round_index,
+            )
+            srows2 = account_energy(srows, energy, cfg.scheduler)
+            sched = dataclasses.replace(
+                state.sched,
+                theta_e=state.sched.theta_e.at[owner].set(
+                    jnp.where(buf, srows2.theta_e, srows.theta_e)
+                ),
+                energy_spent=state.sched.energy_spent.at[owner].set(
+                    jnp.where(buf, srows2.energy_spent, srows.energy_spent)
+                ),
+            )
+            tel_rows = fog_mod.gather_rows(state.tel, owner)
+            stepped = step_telemetry(
+                self.sim._tel_cfg_cohort, tel_rows, buf, energy, prof_rows,
+                fresh(state.k_tel),
+            )
+            stepped = jax.tree.map(
+                lambda new, old: jnp.where(buf, new, old), stepped, tel_rows
+            )
+            tel = fog_mod.scatter_rows(state.tel, owner, stepped)
+        else:
+            sched = account_energy(state.sched, energy, cfg.scheduler)
+            tel = step_telemetry(
+                self.sim.tel_cfg, state.tel, buf, energy,
+                state.env["profiles"], fresh(state.k_tel),
+            )
         acc = self.sim._eval_accuracy(
             self._data_cfg(state), params, fresh(state.k_eval)
         )
@@ -418,33 +492,68 @@ class AsyncFedFogSimulator:
         k_churn = jax.random.fold_in(k, 101)
         k_strag = jax.random.fold_in(k, 102)
 
+        # --- population mode: lease the N slots to virtual clients ----- #
+        # A fresh candidate cohort is drawn per dispatch (fold_in key 103,
+        # disjoint from the shared streams); slots still holding an
+        # in-flight or buffered update keep their current owner, free
+        # slots take the candidate's registry rows. All scheduling /
+        # training / cost math below then runs on the slot-level rows —
+        # the flat path binds the same names to the dense (N,) state and
+        # stays verbatim.
+        pop_mode = self.sim._pop_mode
+        if pop_mode:
+            cand = fog_mod.stratified_cohort(
+                jax.random.fold_in(k, 103), self.sim.population, n
+            )
+            slot_owner = jnp.where(state.busy | state.buf, state.owner, cand)
+            tel_view = fog_mod.gather_rows(state.tel, slot_owner)
+            prof_view = fog_mod.gather_rows(state.env["profiles"], slot_owner)
+            mal_view = state.env["malicious"][slot_owner]
+            cids = slot_owner
+        else:
+            slot_owner = state.owner
+            tel_view = state.tel
+            prof_view = state.env["profiles"]
+            mal_view = state.env["malicious"]
+            cids = None
+
         # --- churn & availability (between-events process) ------------- #
+        # Churn is a slot-level process in population mode (a departed
+        # slot kills whichever virtual client leases it) — an
+        # approximation that keeps the event mechanics population-free.
         online = step_churn(
             acfg.churn, state.online, state.t_ms - state.last_disp_t, k_churn
         )
-        avail = available_mask(acfg.churn, online, state.tel.batt)
+        avail = available_mask(acfg.churn, online, tel_view.batt)
         lost = state.busy & ~avail  # stragglers that will never report
         queue = cancel_events(state.queue, lost, KIND_COMPLETE)
         busy = state.busy & ~lost
 
         # --- scheduler gating + policy participation (shared code) ----- #
         data_cfg = self._data_cfg(state)
-        hist = self.sim._histograms(data_cfg, d)
-        decision = schedule_round(state.sched, state.tel, hist, cfg.scheduler)
-        mask = self.sim._participation(decision, state.tel, k_sel)
+        hist = self.sim._histograms(data_cfg, d, cids=cids)
+        if pop_mode:
+            sched_view = fog_mod.gather_cohort_sched(
+                state.sched, slot_owner,
+                lambda c, r: self.sim._histograms(data_cfg, r, cids=c),
+            )
+        else:
+            sched_view = state.sched
+        decision = schedule_round(sched_view, tel_view, hist, cfg.scheduler)
+        mask = self.sim._participation(decision, tel_view, k_sel)
         admitted = mask & avail & ~busy & ~state.buf
         deltas, admitted = self.sim._local_deltas(
-            data_cfg, state.params, d, admitted, state.env["malicious"],
-            k_data, k_attack,
+            data_cfg, state.params, d, admitted, mal_view,
+            k_data, k_attack, cids=cids,
         )
 
         # --- per-client arrival times (shared cost model + tail) ------- #
         workload, up_bytes, down_bytes = self.sim._round_workload()
-        warm = state.sched.warm
+        warm = sched_view.warm
         if cfg.policy in ("fogfaas",):
             warm = jnp.zeros_like(warm)
         costs = self.sim.cost_model.round_costs(
-            state.env["profiles"], admitted, warm, workload, up_bytes,
+            prof_view, admitted, warm, workload, up_bytes,
             down_bytes,
             policy="fedfog" if cfg.policy in ("fedfog", "rcs", "vanilla")
             else "fogfaas",
@@ -466,10 +575,41 @@ class AsyncFedFogSimulator:
         # --- stash in-flight work (fused (N, P) buffer, one `where`) --- #
         deltas_cat, _ = fuse_clients(deltas)
         pending = jnp.where(admitted[:, None], deltas_cat, state.pending)
+        if pop_mode:
+            # Scatter the advanced cohort rows back into the (M,)
+            # registry: warm/LRU from the cold-start cache update,
+            # last_hist_round = this dispatch's histogram observation.
+            # theta_e / energy_spent pass through schedule_round
+            # untouched and advance at flush time instead.
+            new_sched = dataclasses.replace(
+                state.sched,
+                warm=state.sched.warm.at[slot_owner].set(
+                    decision.new_state.warm
+                ),
+                last_used=state.sched.last_used.at[slot_owner].set(
+                    decision.new_state.last_used
+                ),
+                last_hist_round=state.sched.last_hist_round.at[
+                    slot_owner
+                ].set(jnp.broadcast_to(d, (n,))),
+                round_index=decision.new_state.round_index,
+            )
+            new_owner = jnp.where(admitted, slot_owner, state.owner)
+            new_pend_sizes = jnp.where(
+                admitted,
+                state.env["data_sizes"][slot_owner].astype(jnp.float32),
+                state.pend_sizes,
+            )
+        else:
+            new_sched = decision.new_state
+            new_owner = state.owner
+            new_pend_sizes = state.pend_sizes
         state = state._replace(
             queue=queue,
             key=key,
-            sched=decision.new_state,
+            sched=new_sched,
+            owner=new_owner,
+            pend_sizes=new_pend_sizes,
             online=online,
             busy=busy | admitted,
             pending=pending,

@@ -1,0 +1,39 @@
+"""Shared fake-device subprocess harness for selftest-backed tests.
+
+The fake-device selftests (``repro.dist.selftest``,
+``repro.kernels.delta_pipeline.sharded_selftest``,
+``repro.kernels.delta_pipeline.fog_selftest``) MUST run in their own
+process: ``--xla_force_host_platform_device_count`` has to be set before
+jax initializes its backend, and the pytest process has already locked
+its backend to one device. Every caller runs ``python -m <module>
+--json ...`` with src/ on PYTHONPATH and parses the last stdout line.
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_selftest_module(module: str, *extra: str, timeout: int = 600) -> dict:
+    """Run ``python -m <module> --json *extra`` and return its parsed
+    JSON result (last stdout line). Asserts a zero exit with the tail of
+    both streams in the failure message."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", module, "--json", *extra],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=REPO,
+        timeout=timeout,
+    )
+    assert proc.returncode == 0, (
+        f"{module} failed\nstdout: {proc.stdout[-2000:]}\n"
+        f"stderr: {proc.stderr[-2000:]}"
+    )
+    return json.loads(proc.stdout.strip().splitlines()[-1])

@@ -1,0 +1,261 @@
+"""Fog-tier reduction + population-scale cohort sampling (ISSUE 7).
+
+Contracts:
+  (a) ``fog_nodes=1 ∧ population=num_clients`` is BITWISE the flat path
+      — sync scan engine, async event engine, and the grouped sweep all
+      reproduce the pre-fog histories exactly (the fog/population knobs
+      are static Python branches, not traced ops);
+  (b) the fog decomposition is exact: fog-partial → cloud-combine equals
+      the flat Eq. 6 weighted sum (plain and staleness-discounted) for
+      any group count and any contiguous assignment, hypothesis-checked
+      under permuted client data;
+  (c) the async sync-recovery invariant (unbounded buffer, no churn,
+      zero staleness discount == run_scanned) survives fog_nodes > 1;
+  (d) population/fog_nodes are STRUCTURAL sweep axes (new compile-cache
+      signature, never lifted to vmapped numeric data);
+  (e) config validation: population < num_clients, fog_nodes not
+      dividing the cohort, and fog_nodes > 1 with a robust aggregator
+      are rejected eagerly;
+  (f) the sharded two-tier kernel path holds the per-tier collective
+      contract over the full gate matrix (subprocess fake-device run).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _subproc import run_selftest_module
+from repro.core.aggregation import fedavg_stacked
+from repro.fl import fog
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.sim import run_sweep
+from repro.sim.events import AsyncConfig, AsyncFedFogSimulator, async_aggregate
+from repro.sim.sweep import _factor_sim
+
+
+def _cfg(**kw) -> SimulatorConfig:
+    base = dict(
+        task="emnist", num_clients=8, rounds=4, top_k=4, hidden=(16,), seed=0
+    )
+    base.update(kw)
+    return SimulatorConfig(**base)
+
+
+def _assert_hist_equal(h_a, h_b):
+    for k in h_b:
+        np.testing.assert_array_equal(
+            np.asarray(h_a[k]), np.asarray(h_b[k]), err_msg=k
+        )
+
+
+# --------------------------------------------------------------------- #
+# (a) fog_nodes=1 ∧ population=num_clients is bitwise the flat path
+# --------------------------------------------------------------------- #
+def test_sync_dense_population_bitwise_flat():
+    h_flat = FedFogSimulator(_cfg()).run_scanned()
+    h_pop = FedFogSimulator(
+        _cfg(population=8, fog_nodes=1)
+    ).run_scanned()
+    _assert_hist_equal(h_pop, h_flat)
+
+
+def test_async_dense_population_bitwise_flat():
+    acfg = AsyncConfig(staleness_exponent=0.0)
+    h_flat = AsyncFedFogSimulator(_cfg(), acfg).run()
+    h_pop = AsyncFedFogSimulator(_cfg(population=8, fog_nodes=1), acfg).run()
+    _assert_hist_equal(h_pop, h_flat)
+
+
+def test_grouped_sweep_dense_population_bitwise_flat():
+    seeds = [0, 1]
+    r_flat = run_sweep(_cfg(), seeds=seeds, cache=False)
+    r_pop = run_sweep(_cfg(population=8), seeds=seeds, cache=False)
+    for name in r_flat.history:
+        np.testing.assert_array_equal(
+            r_pop.history[name], r_flat.history[name], err_msg=name
+        )
+
+
+# --------------------------------------------------------------------- #
+# (b) fog decomposition is exact
+# --------------------------------------------------------------------- #
+def test_fog_aggregate_matches_flat_eq6():
+    rng = np.random.default_rng(3)
+    c, p = 16, 33
+    upd = jnp.asarray(rng.normal(size=(c, p)), jnp.float32)
+    mask = jnp.asarray(rng.random(c) < 0.7)
+    w = jnp.asarray(rng.integers(5, 80, c), jnp.float32)
+    flat = fedavg_stacked(upd, mask, w)
+    for f in (1, 2, 4, 8, 16):
+        got = fog.fog_aggregate(upd, mask, w, f)
+        np.testing.assert_allclose(got, flat, rtol=1e-5, atol=1e-6)
+
+
+def test_fog_aggregate_staleness_matches_async_aggregate():
+    rng = np.random.default_rng(4)
+    c, p = 12, 17
+    upd = jnp.asarray(rng.normal(size=(c, p)), jnp.float32)
+    mask = jnp.asarray(rng.random(c) < 0.8)
+    w = jnp.asarray(rng.integers(5, 80, c), jnp.float32)
+    stale = jnp.asarray(rng.integers(0, 5, c), jnp.float32)
+    flat = async_aggregate(upd, mask, w, stale, 0.5)
+    for f in (2, 4):
+        got = fog.fog_aggregate(upd, mask, w, f, stale, 0.5)
+        np.testing.assert_allclose(got, flat, rtol=1e-5, atol=1e-6)
+
+
+def test_fog_partial_cloud_combine_property():
+    """Hypothesis: for random weights/masks/staleness and PERMUTED
+    fog assignments, fog partials combined at the cloud equal the flat
+    Eq. 6 reduction (the decomposition is assignment-invariant)."""
+    hyp = pytest.importorskip(
+        "hypothesis", reason="dev dep; see requirements-dev.txt"
+    )
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(deadline=None, max_examples=30)
+    @hyp.given(
+        seed=st.integers(0, 2**31 - 1),
+        fog_nodes=st.sampled_from([1, 2, 3, 4, 6]),
+        use_stale=st.booleans(),
+    )
+    def check(seed, fog_nodes, use_stale):
+        rng = np.random.default_rng(seed)
+        c, p = 12, 9
+        upd = jnp.asarray(rng.normal(size=(c, p)), jnp.float32)
+        mask = jnp.asarray(rng.random(c) < 0.75)
+        w = jnp.asarray(rng.uniform(1.0, 100.0, c), jnp.float32)
+        stale = (
+            jnp.asarray(rng.integers(0, 6, c), jnp.float32)
+            if use_stale else None
+        )
+        exp = 0.5 if use_stale else 0.0
+        # permuted (non-contiguous) group assignment
+        assign = jnp.asarray(
+            rng.permutation((np.arange(c) * fog_nodes) // c), jnp.int32
+        )
+        partials, sdm, sm = fog.fog_partial_sums(
+            upd, mask, w, fog_nodes, stale, exp, assignment=assign
+        )
+        got = fog.cloud_combine(partials, sdm, sm, has_stale=use_stale)
+        flat = (
+            async_aggregate(upd, mask, w, stale, exp)
+            if use_stale else fedavg_stacked(upd, mask, w)
+        )
+        np.testing.assert_allclose(got, flat, rtol=1e-5, atol=1e-6)
+
+    check()
+
+
+# --------------------------------------------------------------------- #
+# (c) sync recovery with the fog tier engaged
+# --------------------------------------------------------------------- #
+def test_async_sync_recovery_with_fog():
+    cfg = _cfg(fog_nodes=2, rounds=5)
+    h_sync = FedFogSimulator(cfg).run_scanned()
+    h_async = AsyncFedFogSimulator(
+        cfg, AsyncConfig(staleness_exponent=0.0)
+    ).run()
+    assert h_async["num_flushes"] == cfg.rounds
+    np.testing.assert_allclose(
+        h_async["accuracy"], h_sync["accuracy"], rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        h_async["energy_j"], h_sync["energy_j"], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_fog_ref_matches_flat_in_simulator():
+    """fog_nodes=2 changes only float reassociation: accuracy trajectory
+    must match the flat run within tolerance (same selections — the
+    scheduler never sees the fog tier)."""
+    h_flat = FedFogSimulator(_cfg(rounds=3)).run_scanned()
+    h_fog = FedFogSimulator(_cfg(rounds=3, fog_nodes=2)).run_scanned()
+    np.testing.assert_allclose(
+        h_fog["accuracy"], h_flat["accuracy"], rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_array_equal(h_fog["num_selected"],
+                                  h_flat["num_selected"])
+
+
+# --------------------------------------------------------------------- #
+# population-scale cohort sampling
+# --------------------------------------------------------------------- #
+def test_population_cohort_sampling_runs_sync_and_async():
+    cfg = _cfg(population=64, rounds=3)
+    h = FedFogSimulator(cfg).run_scanned()
+    assert np.isfinite(np.asarray(h["accuracy"])).all()
+    assert len(h["accuracy"]) == cfg.rounds
+    ha = AsyncFedFogSimulator(
+        cfg, AsyncConfig(staleness_exponent=0.0)
+    ).run()
+    assert ha["num_flushes"] == cfg.rounds
+    assert np.isfinite(np.asarray(ha["accuracy"])).all()
+
+
+def test_stratified_cohort_shape_and_bounds():
+    ids = fog.stratified_cohort(jax.random.PRNGKey(0), 1_000_000, 64)
+    ids = np.asarray(ids)
+    assert ids.shape == (64,)
+    assert (np.diff(ids) > 0).all()  # sorted, distinct (one per stratum)
+    assert ids.min() >= 0 and ids.max() < 1_000_000
+    # dense population degenerates to the identity window
+    np.testing.assert_array_equal(
+        np.asarray(fog.stratified_cohort(jax.random.PRNGKey(1), 8, 8)),
+        np.arange(8),
+    )
+
+
+# --------------------------------------------------------------------- #
+# (d) population/fog_nodes are structural sweep axes
+# --------------------------------------------------------------------- #
+def test_population_and_fog_are_structural_in_sweep():
+    base = _cfg()
+    s0, n0 = _factor_sim(base)
+    s1, n1 = _factor_sim(_cfg(population=64))
+    s2, n2 = _factor_sim(_cfg(fog_nodes=2))
+    assert s0 != s1 and s0 != s2  # distinct compile signatures
+    assert n0 == n1 == n2  # never lifted into numeric data
+
+
+def test_sweep_fog_axis_groups_separately():
+    res = run_sweep(
+        _cfg(rounds=2), seeds=[0], axes={"fog_nodes": [1, 2]}, cache=False
+    )
+    acc = res.metric("accuracy")
+    assert acc.shape[0] == 2
+    np.testing.assert_allclose(acc[0], acc[1], rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# (e) eager validation
+# --------------------------------------------------------------------- #
+def test_validation_rejects_bad_configs():
+    with pytest.raises(ValueError, match="population"):
+        FedFogSimulator(_cfg(population=4))  # < num_clients
+    with pytest.raises(ValueError, match="fog_nodes"):
+        FedFogSimulator(_cfg(fog_nodes=3))  # 3 ∤ 8
+    with pytest.raises(ValueError, match="fedavg"):
+        FedFogSimulator(_cfg(fog_nodes=2, aggregator="median"))
+    from repro.fl import FLConfig
+
+    with pytest.raises(ValueError, match="population"):
+        FLConfig(num_clients=8, slots=4, population=4)
+    with pytest.raises(ValueError, match="fog_nodes"):
+        FLConfig(num_clients=8, slots=4, fog_nodes=3)
+
+
+# --------------------------------------------------------------------- #
+# (f) sharded two-tier gate matrix (subprocess, fake devices)
+# --------------------------------------------------------------------- #
+def test_fog_sharded_gate_matrix():
+    res = run_selftest_module("repro.kernels.delta_pipeline.fog_selftest")
+    assert res["fog_nodes"] == 2
+    for name, case in res["cases"].items():
+        assert case["edge_all_reduces"] == 1, (name, case)
+        assert case["fog_all_reduces"] == 1, (name, case)
+        assert case["contract_ok"], (name, case)
+        assert case["ok"], (name, case)
+    # flat fog_nodes=1 on the same mesh keeps the single-psum contract
+    assert res["flat"]["ok"], res["flat"]
+    assert res["ok"], res

@@ -6,36 +6,13 @@ exactly one client-crossing all-reduce in every compiled case.
 Runs ``repro.kernels.delta_pipeline.sharded_selftest`` in a SUBPROCESS
 because the fake-device count must be fixed before jax initializes.
 """
-import json
-import os
-import subprocess
-import sys
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _subproc import run_selftest_module
 
 
 def _run_selftest(*extra):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (
-        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    return run_selftest_module(
+        "repro.kernels.delta_pipeline.sharded_selftest", *extra
     )
-    proc = subprocess.run(
-        [
-            sys.executable, "-m",
-            "repro.kernels.delta_pipeline.sharded_selftest",
-            "--json", *extra,
-        ],
-        capture_output=True,
-        text=True,
-        env=env,
-        cwd=REPO,
-        timeout=600,
-    )
-    assert proc.returncode == 0, (
-        f"sharded kernel selftest failed\nstdout: {proc.stdout[-2000:]}\n"
-        f"stderr: {proc.stderr[-2000:]}"
-    )
-    return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 def test_sharded_pipeline_gate_matrix():

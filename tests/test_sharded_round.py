@@ -8,32 +8,11 @@ Runs ``repro.dist.selftest`` in a SUBPROCESS because the fake-device
 count must be fixed before jax initializes — this test process has
 already locked its backend to one device.
 """
-import json
-import os
-import subprocess
-import sys
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _subproc import run_selftest_module
 
 
 def _run_selftest(*extra):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (
-        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
-    )
-    proc = subprocess.run(
-        [sys.executable, "-m", "repro.dist.selftest", "--json", *extra],
-        capture_output=True,
-        text=True,
-        env=env,
-        cwd=REPO,
-        timeout=600,
-    )
-    assert proc.returncode == 0, (
-        f"selftest failed\nstdout: {proc.stdout[-2000:]}\n"
-        f"stderr: {proc.stderr[-2000:]}"
-    )
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    return run_selftest_module("repro.dist.selftest", *extra)
 
 
 def test_sharded_round_equivalence_and_one_all_reduce():
