@@ -1,0 +1,208 @@
+"""Benchmark trajectory across PRs: append-only history of bench rows.
+
+``BENCH_simulator.json`` is a single-snapshot baseline — the perf ratchet
+compares against it, then REPRO_BENCH_RECORD=1 overwrites it, and the
+previous numbers are gone (recoverable only by archaeology through git).
+This module keeps the longitudinal view: every ``--json`` run of
+``benchmarks.run`` ALSO appends one timestamped record (git sha, scale,
+per-row ``us_per_call``) to ``BENCH_history.jsonl``, and
+
+    python -m benchmarks.history --table
+
+prints the per-row trajectory — one line per benchmark row, one column
+per recorded run — so "did the async engine actually get faster over the
+last four PRs, or did we just keep re-recording the baseline?" is a
+one-command question.
+
+``--backfill-git`` seeds the history from the git log of
+``BENCH_simulator.json`` (one synthetic record per commit that touched
+it), so the trajectory extends back before this file existed.
+
+The file lives next to the baseline (``BENCH_history.jsonl`` at the repo
+root) unless ``REPRO_BENCH_HISTORY`` points elsewhere — CI smoke tests
+point it at a temp file so they never pollute the real trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_HISTORY_ENV = "REPRO_BENCH_HISTORY"
+_DEFAULT_PATH = os.path.join(REPO, "BENCH_history.jsonl")
+_BASELINE = "BENCH_simulator.json"
+
+
+def history_path(path: str | None = None) -> str:
+    return path or os.environ.get(_HISTORY_ENV) or _DEFAULT_PATH
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, cwd=REPO, timeout=10,
+        )
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except Exception:
+        return ""
+
+
+def append_record(payload: dict, path: str | None = None) -> str:
+    """Append one history entry distilled from a ``benchmarks.run --json``
+    payload; returns the path written. Row entries keep only the fields
+    the trajectory table needs (name, us_per_call) — ``derived`` strings
+    are bulky and stay in the snapshot baseline."""
+    entry = {
+        "ts": round(time.time(), 3),
+        "git": _git_sha(),
+        "scale": payload.get("scale", "default"),
+        "suites": payload.get("suites", []),
+        "rows": [
+            {"name": r["name"], "us_per_call": r["us_per_call"]}
+            for r in payload.get("rows", [])
+            if "us_per_call" in r
+        ],
+    }
+    path = history_path(path)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+        f.flush()
+    return path
+
+
+def load(path: str | None = None) -> list[dict]:
+    path = history_path(path)
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue  # tolerate a torn final line
+    return entries
+
+
+def backfill_from_git(path: str | None = None) -> int:
+    """Seed the history from every commit that touched the snapshot
+    baseline: one synthetic record per ``BENCH_simulator.json`` version,
+    stamped with the commit time and sha. Returns the number of records
+    appended (0 if the baseline has no git history)."""
+    try:
+        log = subprocess.run(
+            ["git", "log", "--reverse", "--format=%H %ct", "--", _BASELINE],
+            capture_output=True, text=True, cwd=REPO, timeout=30,
+        )
+    except Exception:
+        return 0
+    if log.returncode != 0:
+        return 0
+    n = 0
+    path = history_path(path)
+    with open(path, "a") as f:
+        for line in log.stdout.strip().splitlines():
+            sha, _, ct = line.partition(" ")
+            show = subprocess.run(
+                ["git", "show", f"{sha}:{_BASELINE}"],
+                capture_output=True, text=True, cwd=REPO, timeout=30,
+            )
+            if show.returncode != 0:
+                continue
+            try:
+                payload = json.loads(show.stdout)
+            except json.JSONDecodeError:
+                continue
+            entry = {
+                "ts": float(ct),
+                "git": sha[:7],
+                "scale": payload.get("scale", "default"),
+                "suites": payload.get("suites", []),
+                "backfilled": True,
+                "rows": [
+                    {"name": r["name"], "us_per_call": r["us_per_call"]}
+                    for r in payload.get("rows", [])
+                    if "us_per_call" in r
+                ],
+            }
+            f.write(json.dumps(entry) + "\n")
+            n += 1
+    return n
+
+
+def format_table(entries: list[dict], last: int = 8) -> str:
+    """Per-row trajectory: one line per bench row, one column per
+    recorded run (oldest → newest of the final ``last`` entries), with
+    the net change over the window. Summary rows (us_per_call == 0)
+    carry their data in ``derived`` and are skipped."""
+    entries = sorted(entries, key=lambda e: e.get("ts", 0.0))[-last:]
+    if not entries:
+        return "(no history recorded — run benchmarks.run --json first)"
+    cols = [
+        (e.get("git") or time.strftime("%m-%d", time.localtime(e["ts"])))
+        + ("*" if e.get("backfilled") else "")
+        for e in entries
+    ]
+    names: list[str] = []
+    for e in entries:
+        for r in e["rows"]:
+            if r["us_per_call"] > 0 and r["name"] not in names:
+                names.append(r["name"])
+    by_entry = [
+        {r["name"]: r["us_per_call"] for r in e["rows"]} for e in entries
+    ]
+    name_w = max([len(n) for n in names] or [4])
+    col_w = max([len(c) for c in cols] + [9])
+    lines = [
+        f"# us/call trajectory, {len(entries)} run(s)"
+        + (" (*=git backfill)" if any(e.get("backfilled") for e in entries)
+           else ""),
+        " ".join([" " * name_w] + [c.rjust(col_w) for c in cols]
+                 + ["    net"]),
+    ]
+    for name in names:
+        vals = [be.get(name) for be in by_entry]
+        cells = [
+            (f"{v:.0f}" if v is not None else "-").rjust(col_w)
+            for v in vals
+        ]
+        present = [v for v in vals if v]
+        net = (
+            f"{(present[-1] - present[0]) / present[0] * 100:+.0f}%"
+            if len(present) >= 2 else "  -"
+        )
+        lines.append(" ".join([name.ljust(name_w)] + cells
+                              + [net.rjust(6)]))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--table", action="store_true",
+                    help="print the per-row trajectory table")
+    ap.add_argument("--last", type=int, default=8,
+                    help="show at most the final N history entries")
+    ap.add_argument("--path", default=None,
+                    help=f"history file (default {_DEFAULT_PATH}, "
+                         f"env override {_HISTORY_ENV})")
+    ap.add_argument("--backfill-git", action="store_true",
+                    help=f"seed history from the git log of {_BASELINE}")
+    args = ap.parse_args(argv)
+    if args.backfill_git:
+        n = backfill_from_git(args.path)
+        print(f"# backfilled {n} record(s) from git history of {_BASELINE}")
+    if args.table or not args.backfill_git:
+        print(format_table(load(args.path), last=args.last))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

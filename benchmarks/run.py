@@ -158,16 +158,27 @@ def main() -> None:
             f"# NOT writing {json_out}: run regressed vs {compare_path}",
             file=sys.stderr,
         )
-    elif json_out:
-        payload = {
-            "scale": os.environ.get("REPRO_BENCH_SCALE", "default"),
-            "suites": wanted,
-            "failures": failures,
-            "rows": records,
-        }
+    payload = {
+        "scale": os.environ.get("REPRO_BENCH_SCALE", "default"),
+        "suites": wanted,
+        "failures": failures,
+        "rows": records,
+    }
+    if json_out and not regressions:
         with open(json_out, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {json_out}", file=sys.stderr)
+    if json_out or os.environ.get("REPRO_BENCH_HISTORY"):
+        # Longitudinal record: the snapshot baseline above gets
+        # overwritten on every re-record; the history file keeps every
+        # run (including gate-only --compare runs, when
+        # REPRO_BENCH_HISTORY points somewhere) so `python -m
+        # benchmarks.history --table` shows the per-row trajectory
+        # across PRs.
+        from benchmarks.history import append_record
+
+        hist = append_record(payload)
+        print(f"# appended history entry to {hist}", file=sys.stderr)
     if regressions:
         print(
             f"# {regressions} row(s) regressed > {tolerance:.0f}%",

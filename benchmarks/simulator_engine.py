@@ -194,7 +194,11 @@ def _cold_and_warm_rows(
         cold_acc=acc_sweep, cold_acc_async=np.asarray(
             res_async.metric("accuracy")
         ),
-    ) + [_sharded_row(lrs, rounds, p), _population_row(p)]
+    ) + [
+        _tracked_row(base, rounds, p, t_scan_exec / base_rounds * 1e6,
+                     acc_scan),
+        _sharded_row(lrs, rounds, p), _population_row(p),
+    ]
 
     shape = fmt(grid=g, seeds=n_seeds, rounds=rounds, clients=p["clients"])
     return [
@@ -263,6 +267,51 @@ def _cold_and_warm_rows(
             ),
         ),
     ] + warm_rows
+
+
+def _tracked_row(base, rounds, p, scanned_exec_us, acc_scan) -> Row:
+    """``scanned_tracked``: the scan engine with a live metric tap
+    (JsonlTracker sink, decimation 10) — the observability tax. The tap
+    is an ordered io_callback under a ``step % 10 == 0`` cond inside the
+    compiled scan, so the WARM per-round cost must stay within a few
+    percent of the untapped scanned row's execute time
+    (``tracked_over_scanned_exec``; the <10% acceptance gate). The first
+    call's compile is attributed separately, and the tapped history must
+    match the untapped engine bitwise (``max_acc_dev``)."""
+    import dataclasses
+
+    from repro.obs import JsonlTracker, MetricTap
+
+    import tempfile as _tf
+
+    every = 10
+    path = os.path.join(_tf.mkdtemp(prefix="repro-bench-track-"),
+                        "rows.jsonl")
+    with JsonlTracker(path) as tracker:
+        tap = MetricTap(tracker, every=every, channel="round")
+        sim = FedFogSimulator(
+            dataclasses.replace(base, seed=0), tap=tap
+        )
+        t0 = time.time()
+        h = sim.run_scanned(rounds)  # cold: traces + compiles the tap
+        t_cold = time.time() - t0
+        t0 = time.time()
+        sim.run_scanned(rounds)  # warm: jit cache hit, exec + taps only
+        t_warm = time.time() - t0
+    dev = float(np.abs(np.asarray(h["accuracy"])
+                       - np.asarray(acc_scan[0])).max())
+    rows_streamed = sum(1 for _ in open(path))
+    warm_us = t_warm / rounds * 1e6
+    return Row(
+        "simulator_engine/scanned_tracked",
+        warm_us,
+        f"wall_cold_s={t_cold:.2f};"
+        f"tracked_over_scanned_exec="
+        f"{warm_us / max(scanned_exec_us, 1e-9):.3f};"
+        f"max_acc_dev={dev:.2g};"
+        f"rows_streamed={rows_streamed};"
+        + fmt(every=every, rounds=rounds, clients=p["clients"]),
+    )
 
 
 def _sharded_row(lrs, rounds, p) -> Row:

@@ -29,9 +29,19 @@ bitwise.
 import argparse
 
 from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.obs import MetricTap, NoopTracker, tracker_from_spec
 
 
-def sweep_demo(args) -> None:
+def _make_tap(tracker, args, channel: str, **const):
+    """A tap when tracking is on, else None (tap-free trace)."""
+    if isinstance(tracker, NoopTracker):
+        return None  # no sink — keep the engines untapped
+    return MetricTap(
+        tracker, every=args.track_every, const=const, channel=channel
+    )
+
+
+def sweep_demo(args, tracker) -> None:
     """Sweep-API example: policies × seeds as compiled programs."""
     from repro.sim import run_sweep
 
@@ -50,6 +60,7 @@ def sweep_demo(args) -> None:
         cfg,
         seeds=range(args.sweep_seeds),
         axes={"policy": ["fedfog", "fogfaas", "rcs"]},
+        tracker=None if isinstance(tracker, NoopTracker) else tracker,
     )
     mean, ci = res.mean_ci("accuracy")
     print(f"\n=== sweep: final accuracy over {args.sweep_seeds} seeds ===")
@@ -57,7 +68,7 @@ def sweep_demo(args) -> None:
         print(f"{ov['policy']:10s} {mean[g, -1]:.3f} ± {ci[g, -1]:.3f}")
 
 
-def async_demo(args) -> None:
+def async_demo(args, tracker) -> None:
     """Event-driven engine: overlapping cohorts, staleness, churn."""
     from repro.sim.events import AsyncConfig, AsyncFedFogSimulator, ChurnConfig
 
@@ -73,6 +84,7 @@ def async_demo(args) -> None:
             straggler_sigma=0.4,
             churn=ChurnConfig(arrival_rate=0.05, departure_rate=0.05),
         ),
+        tap=_make_tap(tracker, args, "flush", engine="async"),
     )
     h = sim.run()
     print("=== async engine (FedBuff, straggler tail, churn) ===")
@@ -114,12 +126,25 @@ def main():
                          "reduction; F must divide --clients and needs "
                          "the fedavg aggregator (default 1 = flat, "
                          "bitwise identical to the pre-fog path)")
+    ap.add_argument("--track", default="",
+                    help="stream metrics to 'jsonl:PATH' / 'csv:PATH' "
+                         "(comma-separate for multiple sinks); rounds "
+                         "stream out of the compiled engines mid-run "
+                         "via decimated io_callback taps (repro.obs)")
+    ap.add_argument("--track-every", type=int, default=5,
+                    help="tap decimation: emit every k-th round/flush")
     args = ap.parse_args()
 
+    tracker = tracker_from_spec(args.track)
+    with tracker:
+        _run(args, tracker)
+
+
+def _run(args, tracker):
     if args.engine == "async":
-        async_demo(args)
+        async_demo(args, tracker)
         if args.sweep_seeds > 0:
-            sweep_demo(args)
+            sweep_demo(args, tracker)
         return
 
     results = {}
@@ -137,7 +162,8 @@ def main():
                 seed=0,
                 population=args.population,
                 fog_nodes=args.fog_nodes,
-            )
+            ),
+            tap=_make_tap(tracker, args, "round", policy=policy),
         )
         h = sim.run_scanned() if args.engine == "scan" else sim.run()
         results[policy] = h
@@ -160,7 +186,7 @@ def main():
         )
 
     if args.sweep_seeds > 0:
-        sweep_demo(args)
+        sweep_demo(args, tracker)
 
 
 if __name__ == "__main__":

@@ -52,9 +52,12 @@ fi
 # The cold pass populates a persistent compile cache
 # (REPRO_COMPILE_CACHE_DIR) that the warm pass below — a FRESH process —
 # must hit: serialized sweep executables make the second process skip
-# tracing and XLA compilation entirely (n_compiles=0).
+# tracing and XLA compilation entirely (n_compiles=0). Bench history
+# (benchmarks.history) is pointed at a temp file so a CI smoke never
+# pollutes the real BENCH_history.jsonl trajectory.
 CACHE_DIR="${REPRO_COMPILE_CACHE_DIR:-$(mktemp -d)}"
-REPRO_COMPILE_CACHE_DIR="$CACHE_DIR" \
+HIST_FILE="$(mktemp)"
+REPRO_BENCH_HISTORY="$HIST_FILE" REPRO_COMPILE_CACHE_DIR="$CACHE_DIR" \
   REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.run simulator_engine $BENCH_ARGS
 
@@ -69,6 +72,34 @@ for row in sweep_warm async_events_warm; do
     exit 1
   }
 done
+
+echo "=== observability smoke (in-scan tap streams rows mid-run) ==="
+# A short scanned run with a JSONL tracker must produce streamed per-
+# round rows (the io_callback taps fire DURING the compiled scan), and
+# in-file order must show streamed rows BEFORE each policy's summary
+# row — proof the rows appeared mid-run, not in a final flush.
+TRACK_FILE="$(mktemp)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python examples/edge_sim.py --rounds 10 --clients 12 --topk 6 \
+    --track "jsonl:$TRACK_FILE" --track-every 3 > /dev/null
+python - "$TRACK_FILE" <<'PY'
+import json, sys
+rows = [json.loads(l) for l in open(sys.argv[1])]
+streamed = [r for r in rows if r.get("event") == "round"]
+summaries = [i for i, r in enumerate(rows) if r.get("summary")]
+assert len(streamed) >= 9, f"expected >=9 streamed rows, got {len(streamed)}"
+assert summaries, "expected tracker summary rows"
+first_summary = summaries[0]
+n_before = sum(1 for i, r in enumerate(rows)
+               if i < first_summary and r.get("event") == "round")
+assert n_before >= 3, "streamed rows must precede the first summary"
+print(f"observability smoke: {len(streamed)} streamed rows, "
+      f"{len(summaries)} summaries, {n_before} rows before first summary")
+PY
+
+echo "=== bench history trajectory (temp file from the cold pass) ==="
+REPRO_BENCH_HISTORY="$HIST_FILE" PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.history --table
 
 echo "=== dryrun smoke (1 reduced cell on the 512-fake-device mesh) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -61,6 +61,7 @@ from repro.fl.fuse import (
     fused_gaussian_noise,
     stacked_leaf_sizes,
 )
+from repro.obs.history import finalize_history
 from repro.optim import clip_by_global_norm
 from repro.sim.des import FaasSimConfig, RoundCostModel
 
@@ -164,11 +165,22 @@ class SimulatorConfig:
 
 
 class FedFogSimulator:
-    def __init__(self, cfg: SimulatorConfig, *, defer_state: bool = False):
+    def __init__(
+        self, cfg: SimulatorConfig, *, defer_state: bool = False, tap=None
+    ):
         """``defer_state=True`` skips the eager default-seed state build —
         for callers (the sweep layer) that trace ``init_state`` per seed
-        inside a compiled program and would discard the eager one."""
+        inside a compiled program and would discard the eager one.
+
+        ``tap`` (a ``repro.obs.MetricTap``) streams decimated per-round
+        metrics out of ``run_scanned()`` via an ordered ``io_callback``
+        (and out of ``run()`` host-side) while the program executes.
+        ``None`` — the default — leaves the traced program bitwise
+        identical to the pre-tap engine; the tap is a structural gate,
+        and the per-instance jit means a given (simulator, tap) pair
+        compiles exactly once."""
         self.cfg = cfg
+        self.tap = tap if (tap is not None and tap.enabled) else None
         self.data_cfg = cfg.data_cfg()
         in_dim, n_cls = cfg.dims()
         self.num_classes = n_cls
@@ -660,6 +672,14 @@ class FedFogSimulator:
             params, sched, tel, metrics = self._round(
                 env, params, sched, tel, round_idx, k
             )
+            if self.tap is not None:
+                # Streaming tap: every k-th round's metrics leave the
+                # device mid-scan through an ordered io_callback (the
+                # cond + decimation live in MetricTap.emit). Pure side
+                # effect — metrics/carry values are untouched, so the
+                # tapped trace computes bitwise what the untapped one
+                # does.
+                self.tap.emit(metrics, round_idx)
             return (params, sched, tel, key), metrics
 
         (params, sched, tel, _), stacked = jax.lax.scan(
@@ -671,11 +691,14 @@ class FedFogSimulator:
 
     # ------------------------------------------------------------------ #
     def _finalize(self, history: dict[str, Any], rounds: int) -> dict[str, Any]:
-        history["final_accuracy"] = history["accuracy"][-1]
-        history["peak_accuracy"] = max(history["accuracy"])
-        history["total_energy_j"] = sum(history["energy_j"])
-        history["mean_latency_ms"] = sum(history["round_latency_ms"]) / rounds
-        history["total_cold_starts"] = sum(history["cold_starts"])
+        """Shared summary schema (repro.obs.history) + tracker summary."""
+        finalize_history(history, rounds=rounds)
+        if self.tap is not None:
+            from repro.obs.history import summary_metrics
+
+            self.tap.tracker.log_summary(
+                {**self.tap.const, **summary_metrics(history)}
+            )
         return history
 
     def run(self, rounds: int | None = None) -> dict[str, Any]:
@@ -696,6 +719,9 @@ class FedFogSimulator:
             )
             for name, v in metrics.items():
                 history.setdefault(name, []).append(float(v))
+            if self.tap is not None:
+                # Same rows/decimation as the scanned tap, host-side.
+                self.tap.host_log(metrics, r)
         self.params, self.sched_state, self.telemetry = params, sched, tel
         return self._finalize(history, rounds)
 
@@ -728,6 +754,14 @@ class FedFogSimulator:
         AOT path does NOT populate this instance's jit cache — execute
         through the returned object, not ``run_scanned()``.
         """
+        if self.tap is not None:
+            # A tapped program embeds host callbacks — it would execute,
+            # but the whole point of aot_scanned is cross-instance /
+            # on-disk executable reuse, which callbacks cannot survive.
+            raise ValueError(
+                "aot_scanned() does not support metric taps; build this "
+                "simulator with tap=None (taps stream via run_scanned())"
+            )
         rounds = int(rounds or self.cfg.rounds)
         self._ensure_state()
         key = jax.random.PRNGKey(self.cfg.seed + 100)

@@ -36,6 +36,12 @@ def parse_args(argv=None):
     ap.add_argument("--batch-per-slot", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--inner-lr", type=float, default=0.05)
+    ap.add_argument("--track", default="",
+                    help="stream per-round metrics to a tracker spec: "
+                         "'jsonl:PATH', 'csv:PATH', comma-separated for "
+                         "multiple sinks, '' disables (see repro.obs)")
+    ap.add_argument("--track-every", type=int, default=1,
+                    help="decimation for --track: log every k-th round")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -94,6 +100,7 @@ def main(argv=None):
     )
     from repro.fl import FLConfig, init_fl_state, make_round_fn
     from repro.models import Runtime, build_model
+    from repro.obs import tracker_from_spec
 
     full = args.scale == "full"
     cfg = (
@@ -174,6 +181,24 @@ def main(argv=None):
                 print(f"[train] resumed from round {latest}")
 
     data_key = jax.random.PRNGKey(args.seed + 1)
+    tracker = tracker_from_spec(args.track)
+    with tracker:
+        state = _train_loop(
+            args, fl_cfg, data_cfg, tel_cfg, round_fn, state, telemetry,
+            profiles, sizes, start_round, checkpointer, tracker,
+        )
+    return state
+
+
+def _train_loop(args, fl_cfg, data_cfg, tel_cfg, round_fn, state, telemetry,
+                profiles, sizes, start_round, checkpointer, tracker):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import all_client_histograms, round_batch
+    from repro.data.telemetry import step_telemetry
+
+    data_key = jax.random.PRNGKey(args.seed + 1)
     for r in range(start_round, args.rounds):
         t0 = time.time()
         data_key, kb = jax.random.split(data_key)
@@ -200,6 +225,13 @@ def main(argv=None):
         }
         state, metrics = round_fn(state, batch)
         sel = metrics["num_selected"]
+        if r % max(args.track_every, 1) == 0:
+            tracker.log(
+                {"event": "round", "arch": args.arch, "scale": args.scale,
+                 **{k: v for k, v in metrics.items()},
+                 "round_wall_s": time.time() - t0},
+                step=r,
+            )
         data_key, kt = jax.random.split(data_key)
         telemetry = step_telemetry(
             tel_cfg,
@@ -223,6 +255,12 @@ def main(argv=None):
             checkpointer.save(r + 1, state)
     if checkpointer:
         checkpointer.wait()
+    tracker.log_summary(
+        {"arch": args.arch, "scale": args.scale,
+         "rounds": args.rounds - start_round,
+         "final_loss": float(metrics["loss"]) if args.rounds > start_round
+         else 0.0}
+    )
     return state
 
 

@@ -1,0 +1,36 @@
+"""repro.obs — streaming observability for the compiled engines.
+
+Pluggable trackers (``trackers``), in-scan ``io_callback`` metric taps
+(``tap``), and the shared history/summary schema (``history``). See
+docs/EXPERIMENTS.md §Observability for the event/column ↔ §IV.F metric
+map and the CLI surface (``--track jsonl:PATH``).
+"""
+from repro.obs.history import (
+    assemble_async_history,
+    finalize_history,
+    summary_metrics,
+)
+from repro.obs.tap import MetricTap
+from repro.obs.trackers import (
+    CompositeTracker,
+    CsvTracker,
+    JsonlTracker,
+    MemoryTracker,
+    NoopTracker,
+    Tracker,
+    tracker_from_spec,
+)
+
+__all__ = [
+    "Tracker",
+    "NoopTracker",
+    "JsonlTracker",
+    "CsvTracker",
+    "MemoryTracker",
+    "CompositeTracker",
+    "tracker_from_spec",
+    "MetricTap",
+    "finalize_history",
+    "summary_metrics",
+    "assemble_async_history",
+]

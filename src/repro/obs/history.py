@@ -1,0 +1,82 @@
+"""One history schema for every engine (sync loop / scanned / async).
+
+Before this module, ``FedFogSimulator._finalize`` and
+``AsyncFedFogSimulator.run`` each hand-rolled their own summary block —
+two places deciding what ``final_accuracy`` means, drifting one key at a
+time. Both engines now call :func:`finalize_history`, so a history dict
+carries the same derived summary fields no matter which engine produced
+it, and downstream consumers (benchmarks, trackers, the examples'
+summary tables) read one schema:
+
+  * ``final_accuracy`` / ``peak_accuracy`` — last/best eval accuracy
+    (0.0 when the run produced no eval points, e.g. an async run whose
+    horizon expired before any flush).
+  * ``total_energy_j``      — Σ per-entry ``energy_j`` (Eq. 10 budget).
+  * ``total_cold_starts``   — Σ ``cold_starts`` when the key is present.
+  * ``mean_latency_ms``     — mean of ``round_latency_ms`` when present
+    (sync engines; the async engine's per-flush ``update_latency_ms`` is
+    a different quantity and is left to its own column).
+
+:func:`assemble_async_history` is the async engine's companion: it turns
+the fixed-capacity on-device metric arrays into the trimmed per-flush /
+per-dispatch lists (the inline dict assembly formerly in
+``AsyncFedFogSimulator.run``).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+
+def finalize_history(
+    history: dict[str, Any], *, rounds: int | None = None
+) -> dict[str, Any]:
+    """Append the shared derived-summary fields to ``history`` in place.
+
+    ``rounds`` overrides the latency divisor (the sync engines average
+    over the round count even if a caller sliced the history); default
+    is the length of the latency list itself.
+    """
+    acc = history.get("accuracy") or []
+    history["final_accuracy"] = acc[-1] if len(acc) else 0.0
+    history["peak_accuracy"] = max(acc) if len(acc) else 0.0
+    history["total_energy_j"] = sum(history.get("energy_j", []))
+    lat = history.get("round_latency_ms")
+    if lat is not None:
+        n = rounds if rounds else len(lat)
+        history["mean_latency_ms"] = sum(lat) / max(n, 1)
+    cold = history.get("cold_starts")
+    if cold is not None:
+        history["total_cold_starts"] = sum(cold)
+    return history
+
+
+def summary_metrics(history: Mapping[str, Any]) -> dict[str, Any]:
+    """The summary-field subset of a finalized history — the row a
+    ``Tracker.log_summary`` call should carry."""
+    keys = (
+        "final_accuracy", "peak_accuracy", "total_energy_j",
+        "mean_latency_ms", "total_cold_starts",
+        "num_dispatches", "num_flushes", "num_completions",
+        "lost_inflight", "virtual_time_ms",
+    )
+    return {k: history[k] for k in keys if k in history}
+
+
+def assemble_async_history(
+    m_flush: Mapping[str, Any],
+    m_dispatch: Mapping[str, Any],
+    n_flushes: int,
+    n_dispatches: int,
+) -> dict[str, Any]:
+    """Trim the async engine's fixed-capacity metric arrays to the
+    realized flush/dispatch counts and name the dispatch channels.
+
+    ``valid`` is the padding marker, not a metric — dropped here."""
+    history: dict[str, Any] = {
+        k: [float(x) for x in v[:n_flushes]]
+        for k, v in m_flush.items()
+        if k != "valid"
+    }
+    for k, v in m_dispatch.items():
+        history[f"dispatch_{k}"] = [float(x) for x in v[:n_dispatches]]
+    return history

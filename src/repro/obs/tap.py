@@ -1,0 +1,131 @@
+"""In-scan metric taps: stream decimated metrics out of compiled loops.
+
+``run_scanned()`` and the async event engine bought their throughput by
+giving up streaming — one device→host transfer at the end of the whole
+compiled program. A ``MetricTap`` restores visibility without giving the
+speed back:
+
+  * **structural gate** — the tap is threaded into the engine at
+    construction time; ``tap=None`` (or ``every=0``, via
+    ``core.types.static_on``) leaves the traced program byte-for-byte
+    identical to the untapped one, so the tracker-off path keeps today's
+    trace, compile cache keys stay structural, and flipping a tap on
+    never perturbs RNG streams or numerics.
+  * **decimation** — inside the loop a ``lax.cond`` on
+    ``step % every == 0`` guards the host transfer, so at decimation k
+    only every k-th round/flush pays a (tiny) device→host copy of the
+    scalar metrics row.
+  * **ordered io_callback** — the emitting branch runs
+    ``jax.experimental.io_callback(..., ordered=True)``: rows reach the
+    tracker in program order while the scan/while_loop is still
+    executing, and the callback is an explicit effect XLA may not elide
+    or reorder, preserving scan semantics.
+
+Taps hash by identity, so a per-instance jit (both engines jit per
+instance) re-traces only when the tap object itself changes — a second
+``run_scanned()`` on the same simulator is a jit cache hit
+(``n_compiles=0``; regression-tested).
+
+Taps are for the SINGLE-RUN paths (``FedFogSimulator.run_scanned`` /
+``AsyncFedFogSimulator.run``): the vmapped sweep paths batch many runs
+into one program where ordered host callbacks are unsupported (and rows
+from interleaved seeds would be meaningless) — the sweep layer instead
+logs per-group compile/execute *events* host-side (``run_sweep(tracker=)``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import io_callback
+
+from repro.core.types import static_on
+from repro.obs.trackers import Tracker
+
+
+class MetricTap:
+    """Bridge from a compiled loop to a host-side :class:`Tracker`.
+
+    Args:
+      tracker: the sink receiving decimated rows.
+      every: decimation interval k — steps with ``step % k == 0`` emit.
+        ``0`` disables the tap structurally (the traced program is then
+        identical to ``tap=None``; ``core.types.static_on`` is the gate
+        predicate, same as every other structural flag in the repo).
+      const: host-side constants merged into every emitted row (e.g.
+        ``{"policy": "fedfog"}``) — they never enter the trace.
+      channel: row label written as the ``event`` field, naming which
+        loop emitted it (``"round"`` for the sync scan, ``"flush"`` for
+        the async engine's server flushes).
+    """
+
+    def __init__(
+        self,
+        tracker: Tracker,
+        every: int = 10,
+        *,
+        const: Mapping[str, Any] | None = None,
+        channel: str = "round",
+    ):
+        if every < 0:
+            raise ValueError(f"decimation interval must be >= 0, got {every}")
+        self.tracker = tracker
+        self.every = int(every)
+        self.const = dict(const or {})
+        self.channel = channel
+        self.rows_emitted = 0  # host-side receive counter
+
+    @property
+    def enabled(self) -> bool:
+        """Structural on/off — False compiles the tap out entirely."""
+        return static_on(self.every)
+
+    # ------------------------------------------------------------------ #
+    def _receive(self, names: tuple[str, ...], step, *vals) -> None:
+        """Host-side receiver (the io_callback target)."""
+        self.rows_emitted += 1
+        row = {"event": self.channel, **self.const}
+        row.update({n: float(v) for n, v in zip(names, vals)})
+        self.tracker.log(row, step=int(step))
+
+    # ------------------------------------------------------------------ #
+    def emit(self, metrics: Mapping[str, Any], step) -> None:
+        """Emit one (decimated) metrics row from inside a traced loop.
+
+        Call unconditionally in the loop body — the decimation ``cond``
+        and the structural gate live here. ``metrics`` values must be
+        scalars (they are cast to f32 for the transfer); ``step`` is the
+        loop's monotone counter and drives the decimation.
+        """
+        if not self.enabled:
+            return
+        names = tuple(sorted(metrics))
+        step = jnp.asarray(step, jnp.int32)
+        vals = tuple(jnp.asarray(metrics[n], jnp.float32) for n in names)
+
+        receive = functools.partial(self._receive, names)
+
+        def _tap(args):
+            s, *vs = args
+            io_callback(receive, None, s, *vs, ordered=True)
+
+        jax.lax.cond(
+            (step % self.every) == 0,
+            _tap,
+            lambda args: None,
+            (step, *vals),
+        )
+
+    # ------------------------------------------------------------------ #
+    def host_log(self, metrics: Mapping[str, Any], step) -> None:
+        """Same row/decimation semantics from host-side (eager) loops —
+        the per-round ``run()`` engine streams through this so a tap
+        behaves identically on both sync engines."""
+        if not self.enabled or int(step) % self.every != 0:
+            return
+        self.rows_emitted += 1
+        row = {"event": self.channel, **self.const}
+        row.update({n: float(metrics[n]) for n in sorted(metrics)})
+        self.tracker.log(row, step=int(step))

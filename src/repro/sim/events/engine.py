@@ -47,6 +47,7 @@ strict generalization, not a parallel implementation.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, NamedTuple
 
 import jax
@@ -66,6 +67,11 @@ from repro.fl.fuse import (
 )
 from repro.fl.simulator import FedFogSimulator, SimulatorConfig
 from repro.kernels.delta_pipeline import delta_pipeline_apply
+from repro.obs.history import (
+    assemble_async_history,
+    finalize_history,
+    summary_metrics,
+)
 from repro.sim.events.churn import (
     ChurnConfig,
     available_mask,
@@ -187,9 +193,21 @@ class AsyncFedFogSimulator:
     ``RoundCostModel`` — the async engine adds only the event mechanics.
     """
 
-    def __init__(self, cfg: SimulatorConfig, async_cfg: AsyncConfig | None = None):
+    def __init__(
+        self,
+        cfg: SimulatorConfig,
+        async_cfg: AsyncConfig | None = None,
+        *,
+        tap=None,
+    ):
+        """``tap`` (``repro.obs.MetricTap``): stream every k-th server
+        flush's metrics out of the compiled event loop via an ordered
+        ``io_callback`` (decimated on the flush index). ``None`` keeps
+        the traced program bitwise identical to the untapped engine —
+        same structural-gate contract as ``FedFogSimulator``."""
         self.cfg = cfg
         self.acfg = async_cfg or AsyncConfig()
+        self.tap = tap if (tap is not None and tap.enabled) else None
         if self.acfg.dispatch_mode not in ("on_flush", "interval"):
             raise ValueError(f"unknown dispatch_mode {self.acfg.dispatch_mode!r}")
         self.sim = FedFogSimulator(cfg, defer_state=True)
@@ -437,6 +455,14 @@ class AsyncFedFogSimulator:
             k: v.at[f].set(jnp.asarray(vals[k], jnp.float32), mode="drop")
             for k, v in state.m_flush.items()
         }
+        if self.tap is not None:
+            # Per-flush streaming tap, decimated on the flush index —
+            # ordered io_callback, legal inside the cond/while_loop the
+            # flush runs under. Side effect only: flush values and the
+            # carried state are untouched.
+            self.tap.emit(
+                {k: v for k, v in vals.items() if k != "valid"}, f
+            )
         queue = state.queue
         if acfg.dispatch_mode == "on_flush":
             # Next cohort starts when this one is aggregated — unless a
@@ -815,6 +841,12 @@ class AsyncFedFogSimulator:
         Includes a ``queue_dropped`` scalar so the sweep layer can raise
         on queue overflow the same way ``run()`` does.
         """
+        if self.tap is not None:
+            raise RuntimeError(
+                "metric taps are not supported on the vmapped sweep path "
+                "(ordered io_callback cannot batch over seeds) — use "
+                "run(), or run_sweep(tracker=...) for per-group events"
+            )
         final = self._scan_events(self.init_state(seed))
         return {**final.m_flush, "queue_dropped": final.queue.dropped}
 
@@ -835,26 +867,54 @@ class AsyncFedFogSimulator:
         m_flush, m_disp, n_f, n_d, t_ms, n_c, n_lost, dropped = host
         n_f, n_d = int(n_f), int(n_d)
         if int(dropped):
-            raise RuntimeError(
+            # Overflow corrupts the flush history — still fatal, but
+            # surfaced through the tracker first so a streamed log of a
+            # crashed run ends with the reason.
+            msg = (
                 f"event queue overflowed ({int(dropped)} dropped); raise "
                 f"AsyncConfig.queue_capacity above {self.capacity}"
             )
-        history: dict[str, Any] = {
-            k: [float(x) for x in v[:n_f]] for k, v in m_flush.items()
-            if k != "valid"
-        }
-        for k, v in m_disp.items():
-            history[f"dispatch_{k}"] = [float(x) for x in v[:n_d]]
+            self._warn("queue_overflow", msg, queue_dropped=int(dropped))
+            raise RuntimeError(msg)
+        history = assemble_async_history(m_flush, m_disp, n_f, n_d)
         history["num_dispatches"] = n_d
         history["num_flushes"] = n_f
         history["num_completions"] = int(n_c)
         history["lost_inflight"] = int(n_lost)
         history["virtual_time_ms"] = float(t_ms)
-        acc = history["accuracy"]
-        history["final_accuracy"] = acc[-1] if acc else 0.0
-        history["peak_accuracy"] = max(acc) if acc else 0.0
-        history["total_energy_j"] = sum(history["energy_j"])
+        if int(n_lost) > 0:
+            # In-flight updates killed by churn are a modeled phenomenon,
+            # but losing them silently in a returned dict entry hid real
+            # misconfigurations (e.g. a straggler tail longer than the
+            # churn dwell time starves every flush). Explicit warning:
+            # through the tracker when one is attached, else a plain
+            # warnings.warn.
+            self._warn(
+                "lost_inflight",
+                f"{int(n_lost)} in-flight update(s) never reported "
+                f"(client churned out mid-flight) across {n_d} "
+                f"dispatches — check churn rates vs straggler tail",
+                lost_inflight=int(n_lost),
+                num_dispatches=n_d,
+            )
+        finalize_history(history)
+        if self.tap is not None:
+            self.tap.tracker.log_summary(
+                {**self.tap.const, **summary_metrics(history)}
+            )
         return history
+
+    def _warn(self, kind: str, message: str, **data) -> None:
+        """Engine-health warning: tracker event when one is attached
+        (so streamed logs carry it), plain ``warnings.warn`` fallback."""
+        if self.tap is not None:
+            self.tap.tracker.log(
+                {"event": "warning", "kind": kind, "message": message,
+                 **self.tap.const, **data}
+            )
+        else:
+            warnings.warn(f"[async engine] {message}", RuntimeWarning,
+                          stacklevel=3)
 
 
 def _smoke(argv=None) -> None:

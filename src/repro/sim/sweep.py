@@ -475,6 +475,7 @@ def run_sweep(
     group: bool = True,
     cache: bool = True,
     timings: dict | None = None,
+    tracker: Any | None = None,
 ) -> SweepResult:
     """Run a (config grid) × (seed batch) × (rounds) sweep.
 
@@ -524,6 +525,13 @@ def run_sweep(
         (via the AOT ``jit(...).lower(...).compile()`` split) and
         ``load_s`` (disk-cache deserialization), plus ``n_compiles``,
         ``cache_hits``, ``disk_hits`` and ``n_groups``.
+      tracker: optional ``repro.obs.Tracker``; each structural group
+        logs one ``event="sweep_group"`` row with its per-group
+        trace/compile/exec/load seconds and cache/disk-hit flags as it
+        finishes (so a long sweep streams progress), and the sweep ends
+        with a ``log_summary`` of the totals. The vmapped seed programs
+        themselves stay tap-free (ordered io_callbacks cannot batch);
+        this is host-side bookkeeping only and never affects the trace.
 
     Returns:
       SweepResult with ``(G, S, R)`` histories.
@@ -536,6 +544,8 @@ def run_sweep(
     if engine not in ("scan", "async"):
         raise ValueError(f"unknown engine {engine!r}")
     grid = _grid(axes, cases)
+    if tracker is not None and timings is None:
+        timings = {}  # local collection so the summary row has totals
     if timings is not None:
         for k in ("trace_s", "compile_s", "exec_s", "load_s"):
             timings.setdefault(k, 0.0)
@@ -620,7 +630,7 @@ def run_sweep(
             entry["points"].append(num)
             entry["members"].append(g)
 
-        for sig, entry in groups.items():
+        for gi, (sig, entry) in enumerate(groups.items()):
             struct_cfg, struct_acfg = entry["struct"]
             num_names = sig[2]
             num_stack = _stack_numeric(entry["points"])
@@ -630,8 +640,11 @@ def run_sweep(
             )
             cache_key = (sig, shapes_key, int(seeds_in.shape[0]), devices_key)
             disk_path = _disk_cache_path(cache_key) if cache else None
+            g_trace = g_compile = g_load = 0.0
+            cache_hit = disk_hit = False
             compiled = _PROGRAM_CACHE.get(cache_key) if cache else None
             if compiled is not None:
+                cache_hit = True
                 if timings is not None:
                     timings["cache_hits"] += 1
             else:
@@ -640,12 +653,15 @@ def run_sweep(
                     # signature — deserializing skips trace AND compile.
                     t0 = time.perf_counter()
                     compiled = _disk_load(disk_path)
-                    if compiled is not None and timings is not None:
-                        timings["load_s"] += time.perf_counter() - t0
-                        timings["cache_hits"] += 1
-                        timings["disk_hits"] += 1
-                    if compiled is not None and cache:
-                        _cache_put(cache_key, compiled)
+                    if compiled is not None:
+                        g_load = time.perf_counter() - t0
+                        cache_hit = disk_hit = True
+                        if timings is not None:
+                            timings["load_s"] += g_load
+                            timings["cache_hits"] += 1
+                            timings["disk_hits"] += 1
+                        if cache:
+                            _cache_put(cache_key, compiled)
             if compiled is None:
                 fn = _build_group_fn(
                     struct_cfg, struct_acfg, num_names, rounds, engine
@@ -660,9 +676,10 @@ def run_sweep(
                 t1 = time.perf_counter()
                 compiled = lowered.compile()
                 t2 = time.perf_counter()
+                g_trace, g_compile = t1 - t0, t2 - t1
                 if timings is not None:
-                    timings["trace_s"] += t1 - t0
-                    timings["compile_s"] += t2 - t1
+                    timings["trace_s"] += g_trace
+                    timings["compile_s"] += g_compile
                     timings["n_compiles"] += 1
                 if cache:
                     _cache_put(cache_key, compiled)
@@ -670,8 +687,26 @@ def run_sweep(
                     _disk_store(disk_path, compiled)
             t0 = time.perf_counter()
             stacked = jax.block_until_ready(compiled(num_stack, seeds_in))
+            g_exec = time.perf_counter() - t0
             if timings is not None:
-                timings["exec_s"] += time.perf_counter() - t0
+                timings["exec_s"] += g_exec
+            if tracker is not None:
+                tracker.log(
+                    {
+                        "event": "sweep_group",
+                        "engine": engine,
+                        "n_members": len(entry["members"]),
+                        "n_seeds": n_seeds,
+                        "rounds": rounds,
+                        "cache_hit": cache_hit,
+                        "disk_hit": disk_hit,
+                        "trace_s": g_trace,
+                        "compile_s": g_compile,
+                        "load_s": g_load,
+                        "exec_s": g_exec,
+                    },
+                    step=gi,
+                )
             if seeds_in.shape[0] != n_seeds:
                 stacked = jax.tree.map(lambda x: x[:, :n_seeds], stacked)
             host = jax.device_get(stacked)  # one transfer / group
@@ -709,7 +744,20 @@ def run_sweep(
                 if seed_sharding is not None
                 else jax.jit(fn)
             )
-            stacked = jitted(seeds_in)
+            t0 = time.perf_counter()
+            stacked = jax.block_until_ready(jitted(seeds_in))
+            if tracker is not None:
+                tracker.log(
+                    {
+                        "event": "sweep_point",
+                        "engine": engine,
+                        "overrides": repr(overrides),
+                        "n_seeds": n_seeds,
+                        "rounds": rounds,
+                        "wall_s": time.perf_counter() - t0,
+                    },
+                    step=g,
+                )
             if seeds_in.shape[0] != n_seeds:
                 stacked = jax.tree.map(lambda x: x[:n_seeds], stacked)
             stacked_per_g[g] = jax.device_get(stacked)  # one transfer / point
@@ -730,6 +778,18 @@ def run_sweep(
         name: np.stack([np.asarray(h[name], np.float64) for h in stacked_per_g])
         for name in stacked_per_g[0]
     }
+    if tracker is not None:
+        tracker.log_summary(
+            {
+                "event": "sweep",
+                "engine": engine,
+                "n_points": len(grid),
+                "n_seeds": n_seeds,
+                "rounds": rounds,
+                "grouped": group,
+                **{k: v for k, v in (timings or {}).items()},
+            }
+        )
     return SweepResult(
         configs=grid,
         seeds=np.asarray(seeds_arr),
