@@ -1,0 +1,143 @@
+"""Fault & recovery robustness: accuracy / §IV.F cost vs failure rate.
+
+Three experiments on the sweep API (compile-once per structural group —
+the fault gate is the ONLY structural bit, the rates are lifted
+numerics, so the whole crash grid shares one compiled program):
+
+  crash grid      : crash_rate ∈ {0, 0.2, 0.5} with a 2-retry backoff
+                    budget — how much accuracy survives a serverless
+                    crash storm, and what the retry chains cost in
+                    wall latency and repaid invocation energy.
+  deadline_vs_barrier : the same faulted cohort aggregated two ways —
+                    full barrier (server waits out every retry chain)
+                    vs a round deadline + quorum ≥ 25% (aggregate
+                    whatever arrived, Eq. 6 reweighted). The paper's
+                    straggler argument, restated for failures: the
+                    deadline trades a sliver of per-round cohort mass
+                    for a hard latency cap.
+  failover        : fog-tier outage (fog_nodes=2) with and without
+                    failover — recovered arrivals vs lost ones, and
+                    the detour latency failover pays.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, fmt, preset, timed_sweep
+from repro.fl.simulator import SimulatorConfig
+from repro.sim.faults import FaultConfig
+
+CRASH_RATES = (0.0, 0.2, 0.5)
+
+
+def _totals(res, g):
+    """Per-grid-point fault/latency/energy totals summed over seeds+rounds."""
+    lat = np.asarray(res.history["round_latency_ms"])[g].mean()
+    energy = np.asarray(res.history["energy_j"])[g].sum()
+    retries = np.asarray(res.history["fault_retries"])[g].sum()
+    lost = np.asarray(res.history["fault_lost"])[g].sum()
+    skipped = np.asarray(res.history["round_skipped"])[g].sum()
+    return lat, energy, retries, lost, skipped
+
+
+def run() -> list[Row]:
+    p = preset()
+    base = SimulatorConfig(
+        task="emnist", num_clients=p["clients"], rounds=p["rounds"],
+        top_k=p["topk"],
+    )
+    rows: list[Row] = []
+
+    # --- crash-rate grid (one compiled program: rates are lifted) ------ #
+    cases = [
+        {"faults": FaultConfig(crash_rate=r, max_retries=2)}
+        for r in CRASH_RATES
+    ]
+    res, uspc = timed_sweep(base, seeds=[0, 1], cases=cases)
+    finals = {}
+    for g, r in enumerate(CRASH_RATES):
+        acc = float(res.final("accuracy")[g].mean())
+        lat, energy, retries, lost, skipped = _totals(res, g)
+        finals[r] = (acc, lat, energy)
+        rows.append(
+            Row(
+                f"robustness_faults/crash_{r:g}",
+                uspc,
+                fmt(
+                    final_acc=acc, mean_latency_ms=lat, energy_j=energy,
+                    retries=int(retries), lost=int(lost),
+                    skipped=int(skipped),
+                ),
+            )
+        )
+
+    # --- deadline+quorum vs full barrier under the same crash storm --- #
+    storm = dict(crash_rate=0.5, max_retries=2, backoff_base_ms=500.0)
+    cases = [
+        {"faults": FaultConfig(**storm)},  # barrier: wait out all retries
+        {"faults": FaultConfig(**storm, deadline_ms=4000.0,
+                               quorum_frac=0.25)},
+    ]
+    res_d, uspc_d = timed_sweep(base, seeds=[0, 1], cases=cases)
+    lat_b, _, _, _, _ = _totals(res_d, 0)
+    lat_d, _, _, lost_d, skip_d = _totals(res_d, 1)
+    acc_b = float(res_d.final("accuracy")[0].mean())
+    acc_d = float(res_d.final("accuracy")[1].mean())
+    rows.append(
+        Row(
+            "robustness_faults/deadline_vs_barrier",
+            uspc_d,
+            fmt(
+                barrier_latency_ms=lat_b, deadline_latency_ms=lat_d,
+                latency_saved=1.0 - lat_d / max(lat_b, 1e-9),
+                barrier_acc=acc_b, deadline_acc=acc_d,
+                deadline_lost=int(lost_d), rounds_skipped=int(skip_d),
+            ),
+        )
+    )
+
+    # --- fog outage: failover reroutes, no-failover loses -------------- #
+    outage = dict(fog_outage_rate=0.3)
+    res_f, uspc_f = timed_sweep(
+        base, seeds=[0, 1],
+        cases=[
+            {"fog_nodes": 2, "faults": FaultConfig(**outage)},
+            {"fog_nodes": 2,
+             "faults": FaultConfig(**outage, fog_failover=True)},
+        ],
+    )
+    lost_no = float(np.asarray(res_f.history["fault_lost"])[0].sum())
+    saved = float(np.asarray(res_f.history["fault_failed_over"])[1].sum())
+    lat_no = float(np.asarray(res_f.history["round_latency_ms"])[0].mean())
+    lat_fo = float(np.asarray(res_f.history["round_latency_ms"])[1].mean())
+    rows.append(
+        Row(
+            "robustness_faults/failover",
+            uspc_f,
+            fmt(
+                lost_without_failover=int(lost_no),
+                rerouted_with_failover=int(saved),
+                latency_ms_no_failover=lat_no,
+                latency_ms_failover=lat_fo,
+                acc_no_failover=float(res_f.final("accuracy")[0].mean()),
+                acc_failover=float(res_f.final("accuracy")[1].mean()),
+            ),
+        )
+    )
+
+    # --- summary: the fault tax relative to the clean grid point ------- #
+    acc0, lat0, e0 = finals[0.0]
+    accw, latw, ew = finals[max(CRASH_RATES)]
+    rows.append(
+        Row(
+            "robustness_faults/summary",
+            0.0,
+            fmt(
+                acc_drop_at_worst=acc0 - accw,
+                latency_tax=latw / max(lat0, 1e-9),
+                energy_tax=ew / max(e0, 1e-9),
+                deadline_latency_saved=1.0 - lat_d / max(lat_b, 1e-9),
+            ),
+        )
+    )
+    return rows

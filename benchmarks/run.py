@@ -34,6 +34,7 @@ SUITES = [
     "hyperparam_sensitivity",  # Fig 10
     "sim_vs_real",  # Tables VII/VIII
     "async_vs_sync",  # event-driven engine: async rules vs round barrier
+    "robustness_faults",  # fault & recovery: crash grid, deadline, failover
     "simulator_engine",  # scanned/sweep/async vs looped engine throughput
     "dryrun_sharding",  # dist layer: compile time + collective census
     "kernels_bench",

@@ -158,6 +158,25 @@ def _cold_and_warm_rows(
     )
     t_sweep = time.time() - t0
 
+    # --- fault tax: the same grid through the ACTIVE fault gate -------- #
+    # Rates are lifted numerics, so the faulted grid still compiles ONCE;
+    # the row prices what the gated program (retry chains, counters,
+    # quorum select) adds per sim-round over the fault-free sweep row.
+    from repro.sim.faults import FaultConfig
+
+    tm_f: dict = {}
+    t0 = time.time()
+    res_fault = run_sweep(
+        base, seeds=range(n_seeds),
+        cases=[
+            {"lr": lr, "faults": FaultConfig(crash_rate=0.25, max_retries=1)}
+            for lr in lrs
+        ],
+        rounds=rounds, timings=tm_f,
+    )
+    t_fault = time.time() - t0
+    fault_retries = int(np.asarray(res_fault.history["fault_retries"]).sum())
+
     # --- event-driven engine, sync-equivalent cohort config ------------ #
     from repro.sim.events import AsyncConfig
 
@@ -226,6 +245,16 @@ def _cold_and_warm_rows(
             f"n_compiles={tm.get('n_compiles', 0)};"
             f"cache_hits={tm.get('cache_hits', 0)};"
             f"max_acc_dev={dev_sweep:.2g};{shape}",
+        ),
+        Row(
+            "simulator_engine/sweep_faulted",
+            t_fault / grid_rounds * 1e6,
+            f"wall_s={t_fault:.2f};"
+            f"compile_s={tm_f.get('compile_s', 0.0):.2f};"
+            f"exec_s={tm_f.get('exec_s', 0.0):.2f};"
+            f"n_compiles={tm_f.get('n_compiles', 0)};"
+            f"fault_tax={t_fault / max(t_sweep, 1e-9):.3f};"
+            f"total_retries={fault_retries};{shape}",
         ),
         Row(
             "simulator_engine/async_events",

@@ -30,6 +30,47 @@ import argparse
 
 from repro.fl.simulator import FedFogSimulator, SimulatorConfig
 from repro.obs import MetricTap, NoopTracker, tracker_from_spec
+from repro.sim.faults import FaultConfig
+
+# Short spec keys for --faults (comma-separated k=v pairs; bare
+# "failover" sets the flag): crash=0.2,retries=2,deadline=4000,quorum=0.5
+_FAULT_KEYS = {
+    "timeout": "timeout_rate",
+    "crash": "crash_rate",
+    "drop": "drop_rate",
+    "corrupt": "corrupt_rate",
+    "partition": "partition_rate",
+    "outage": "fog_outage_rate",
+    "failover": "fog_failover",
+    "retries": "max_retries",
+    "backoff": "backoff_base_ms",
+    "deadline": "deadline_ms",
+    "quorum": "quorum_frac",
+}
+
+
+def parse_faults(spec: str) -> FaultConfig | None:
+    """``--faults`` spec → FaultConfig ('' → None → verbatim engines)."""
+    if not spec:
+        return None
+    kw = {}
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if "=" not in item:
+            if item != "failover":
+                raise SystemExit(f"--faults: bad item {item!r} "
+                                 f"(known: {', '.join(_FAULT_KEYS)})")
+            kw["fog_failover"] = True
+            continue
+        k, v = item.split("=", 1)
+        if k not in _FAULT_KEYS:
+            raise SystemExit(f"--faults: unknown key {k!r} "
+                             f"(known: {', '.join(_FAULT_KEYS)})")
+        field = _FAULT_KEYS[k]
+        kw[field] = int(v) if field == "max_retries" else float(v)
+    return FaultConfig(**kw)
 
 
 def _make_tap(tracker, args, channel: str, **const):
@@ -55,6 +96,7 @@ def sweep_demo(args, tracker) -> None:
         attack_fraction=0.1,
         population=args.population,
         fog_nodes=args.fog_nodes,
+        faults=parse_faults(args.faults),
     )
     res = run_sweep(
         cfg,
@@ -77,6 +119,7 @@ def async_demo(args, tracker) -> None:
             task="emnist", num_clients=args.clients, rounds=args.rounds,
             top_k=args.topk, policy="fedfog", seed=0,
             population=args.population, fog_nodes=args.fog_nodes,
+            faults=parse_faults(args.faults),
         ),
         AsyncConfig.fedbuff(
             max(2, args.topk // 2),
@@ -103,6 +146,15 @@ def async_demo(args, tracker) -> None:
         f"final_acc={h['final_accuracy']:.3f} "
         f"virtual_time={h['virtual_time_ms'] / 1e3:.1f}s"
     )
+    if args.faults:
+        print(
+            f"faults: failures={h['fault_failures']} "
+            f"retries={h['fault_retries']} "
+            f"terminal={h['fault_terminal']} "
+            f"deadline_lost={h['fault_lost_deadline']} "
+            f"corrupt={h['fault_corrupt']} "
+            f"rounds_skipped={h['fault_skipped']}"
+        )
 
 
 def main():
@@ -126,6 +178,12 @@ def main():
                          "reduction; F must divide --clients and needs "
                          "the fedavg aggregator (default 1 = flat, "
                          "bitwise identical to the pre-fog path)")
+    ap.add_argument("--faults", default="",
+                    help="fault-injection spec, e.g. "
+                         "'crash=0.2,retries=2,deadline=8000,quorum=0.5' "
+                         "(keys: timeout/crash/drop/corrupt/partition/"
+                         "outage/failover/retries/backoff/deadline/"
+                         "quorum; empty = faults off, engines verbatim)")
     ap.add_argument("--track", default="",
                     help="stream metrics to 'jsonl:PATH' / 'csv:PATH' "
                          "(comma-separate for multiple sinks); rounds "
@@ -162,6 +220,7 @@ def _run(args, tracker):
                 seed=0,
                 population=args.population,
                 fog_nodes=args.fog_nodes,
+                faults=parse_faults(args.faults),
             ),
             tap=_make_tap(tracker, args, "round", policy=policy),
         )
@@ -173,6 +232,21 @@ def _run(args, tracker):
             print(
                 f"{r:5d} | {h['accuracy'][r]:8.3f} | {h['round_latency_ms'][r]:11.0f}"
                 f" | {h['energy_j'][r]:9.2f} | {int(h['cold_starts'][r]):4d}"
+            )
+
+    if args.faults:
+        print("\n=== fault & recovery totals (per policy) ===")
+        print(f"{'policy':10s} {'dispatched':>10s} {'completed':>9s} "
+              f"{'terminal':>8s} {'lost':>5s} {'retries':>7s} "
+              f"{'skipped':>7s}")
+        for policy, h in results.items():
+            print(
+                f"{policy:10s} {int(sum(h['fault_dispatched'])):10d} "
+                f"{int(sum(h['fault_completed'])):9d} "
+                f"{int(sum(h['fault_terminal'])):8d} "
+                f"{int(sum(h['fault_lost'])):5d} "
+                f"{int(sum(h['fault_retries'])):7d} "
+                f"{int(sum(h['round_skipped'])):7d}"
             )
 
     print("\n=== summary (paper Fig. 5 analogue) ===")

@@ -22,6 +22,39 @@ echo "=== async event engine smoke (2 virtual seconds) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.sim.events.engine --horizon-ms 2000
 
+echo "=== chaos smoke (fault injection: crash storm with retries) ==="
+# A faulted edge_sim run must realize failures (nonzero retry totals in
+# the per-policy fault table), and an all-inert FaultConfig must leave
+# the scanned engine BITWISE identical to faults=None — the fault
+# layer's gate-off contract, asserted end-to-end.
+CHAOS_LOG="$(mktemp)"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python examples/edge_sim.py --rounds 6 --clients 12 --topk 6 \
+    --faults "crash=0.5,retries=2" | tee "$CHAOS_LOG" > /dev/null
+python - "$CHAOS_LOG" <<'PY'
+import sys
+rows = [l.split() for l in open(sys.argv[1])
+        if l.split() and l.split()[0] in ("fedfog", "fogfaas", "rcs")
+        and len(l.split()) == 7]
+assert rows, "chaos smoke: fault table missing from edge_sim output"
+retries = sum(int(r[5]) for r in rows)
+assert retries > 0, f"chaos smoke: crash storm produced no retries: {rows}"
+print(f"chaos smoke: {retries} retries across {len(rows)} policies")
+PY
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import numpy as np
+from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.sim.faults import FaultConfig
+
+cfg = dict(task="emnist", num_clients=12, rounds=4, top_k=6, hidden=(16,))
+h0 = FedFogSimulator(SimulatorConfig(**cfg, faults=None)).run_scanned()
+h1 = FedFogSimulator(SimulatorConfig(**cfg, faults=FaultConfig())).run_scanned()
+assert set(h0) == set(h1)
+for k in h0:
+    assert np.array_equal(np.asarray(h0[k]), np.asarray(h1[k])), k
+print("chaos smoke: faults-off bitwise identity holds")
+PY
+
 echo "=== sharded delta-pipeline selftest (8 fake devices, gate matrix) ==="
 # shard_map kernel == single-device kernel == jnp oracle, with exactly
 # ONE client-crossing all-reduce per compiled case (exit 1 on any miss).

@@ -39,6 +39,15 @@ def static_zero(x) -> bool:
     return bool(x == 0)
 
 
+def static_any(*xs) -> bool:
+    """``static_on`` over several gate scalars: True iff ANY gate is
+    active. Used by composite subsystems (e.g. the fault layer) whose
+    single structural gate is the OR of many rate fields — a tracer in
+    any position means that field was lifted with its gate registered,
+    so the composite gate must answer True."""
+    return any(static_on(x) for x in xs)
+
+
 def _pytree_dataclass(cls):
     """Register a frozen dataclass as a JAX pytree node."""
     cls = dataclasses.dataclass(frozen=True)(cls)

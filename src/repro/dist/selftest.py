@@ -46,6 +46,7 @@ def run_selftest(
     gates: str = "legacy",
     fog_nodes: int = 1,
     population: int | None = None,
+    faults_check: bool = False,
 ) -> dict:
     """Compile (and optionally execute + cross-check) one sharded round.
 
@@ -254,6 +255,88 @@ def run_selftest(
             result["equivalence_ok"] and ref_diff < 1e-4
         )
     result["ok"] = bool(result["ok"] and result["equivalence_ok"])
+
+    if faults_check:
+        # Fault-layer contract on the shard_map path (repro.sim.faults):
+        # (a) an all-off FaultConfig leaves the sharded round BITWISE
+        # identical to a build without the fault field, and (b) a
+        # faulted sharded round matches the faulted single-device round
+        # to the same tolerance as the clean equivalence check (the
+        # fault plan is drawn at global level — only the aggregation it
+        # feeds is shard_map'd).
+        from repro.sim.faults import FaultConfig
+
+        def sharded_round(flc):
+            fn = make_round_fn(
+                model, flc,
+                Runtime(mesh=rules.mesh, batch_axes=rules.batch_axes),
+                flops_per_client_round=flops, rules=rules,
+            )
+            return jax.jit(
+                fn, in_shardings=(state_shardings, batch_shardings)
+            )
+
+        s_a, m_a = jitted(state, batch)
+        s_b, m_b = sharded_round(
+            dataclasses.replace(fl_cfg, faults=FaultConfig())
+        )(state, batch)
+        bit_diff = _max_diff(s_a, s_b)
+        shared = set(m_a) & set(m_b)
+        metrics_bit_ok = all(
+            float(m_a[k]) == float(m_b[k]) for k in shared
+        )
+        fl_f = dataclasses.replace(
+            fl_cfg,
+            faults=FaultConfig(
+                crash_rate=0.3, max_retries=2, corrupt_rate=0.2,
+                quorum_frac=0.25,
+            ),
+        )
+        # The main selftest batch deliberately fails the Eq. 3 gate
+        # (nobody admitted — participation is irrelevant to the HLO and
+        # equivalence checks above). The fault contract needs admitted
+        # clients, so this leg feeds healthy, energy-rich telemetry.
+        batch_f = dict(batch)
+        batch_f.update(
+            telemetry_cpu=jnp.full((n,), 0.9, jnp.float32),
+            telemetry_mem=jnp.full((n,), 0.9, jnp.float32),
+            telemetry_batt=jnp.full((n,), 0.95, jnp.float32),
+            telemetry_energy=jnp.full((n,), 0.9, jnp.float32),
+        )
+        round_fs = sharded_round(fl_f)
+        round_fp = jax.jit(
+            make_round_fn(
+                model, fl_f, Runtime(), flops_per_client_round=flops
+            )
+        )
+        counter_keys = (
+            "fault_dispatched", "fault_completed", "fault_terminal",
+            "fault_lost", "fault_retries",
+        )
+        s_fs = s_fp = state
+        counters = dict.fromkeys(counter_keys, 0)
+        for _ in range(2):
+            s_fs, m_fs = round_fs(s_fs, batch_f)
+            s_fp, m_fp = round_fp(s_fp, batch_f)
+            for k in counter_keys:
+                counters[k] += int(m_fs[k])
+        result.update(
+            faults_bitwise_ok=bool(bit_diff == 0.0 and metrics_bit_ok),
+            faults_equiv_diff=_max_diff(s_fs, s_fp),
+            faults_conserved=bool(
+                counters["fault_dispatched"]
+                == counters["fault_completed"]
+                + counters["fault_terminal"]
+                + counters["fault_lost"]
+            ),
+            faults_counters=counters,
+        )
+        result["ok"] = bool(
+            result["ok"]
+            and result["faults_bitwise_ok"]
+            and result["faults_conserved"]
+            and result["faults_equiv_diff"] < 1e-4
+        )
     return result
 
 
@@ -274,6 +357,10 @@ def main(argv=None):
                     help="fog-tier width (multi-pod plan; pod axis = fog)")
     ap.add_argument("--population", type=int, default=None,
                     help="virtual client registry size (cohort sampling)")
+    ap.add_argument("--faults-check", action="store_true",
+                    help="also verify the fault layer on the sharded "
+                         "round: faults-off bitwise identity + faulted "
+                         "sharded == faulted single-device")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
     res = run_selftest(
@@ -281,6 +368,7 @@ def main(argv=None):
         seq_len=args.seq_len, zero=args.zero,
         pallas_agg=args.pallas_agg, gates=args.gates,
         fog_nodes=args.fog_nodes, population=args.population,
+        faults_check=args.faults_check,
     )
     if args.json:
         print(json.dumps(res))

@@ -46,6 +46,8 @@ from repro.kernels.delta_pipeline import (
 from repro.models.transformer import Runtime
 from repro.optim import adamw, apply_updates, clip_by_global_norm, sgdm
 from repro.sim.des import RoundCostModel
+from repro.sim.faults import config as faults_config
+from repro.sim.faults import inject as faults_inject
 
 Array = jax.Array
 
@@ -142,6 +144,10 @@ def make_round_fn(
         fl_cfg.population is not None
         and fl_cfg.population != fl_cfg.num_clients
     )
+    # Fault layer (repro.sim.faults): Python-level gate — with the plan
+    # off, every line below is the verbatim pre-fault round (bitwise
+    # contract, same as the paper-scale simulator's gate).
+    faults_on = faults_config.active(fl_cfg.faults)
 
     # Pod-scale sharding constraints: pin the slot-stacked replicas to the
     # client axis (and moments to the ZeRO axis) instead of trusting GSPMD
@@ -380,6 +386,59 @@ def make_round_fn(
                 slot_mask, malicious, attack.kind
             )
 
+        # ---- 3b. fault plan: who actually arrives (repro.sim.faults) --- #
+        # Slot-level serverless failure plan: retries with backoff, fog
+        # outages, deadline losses and the quorum decision, drawn from a
+        # key chain disjoint from the round's 5-way split (fold_in 11) so
+        # faulted runs replay deterministically per seed. The arrival
+        # mask replaces ``slot_mask`` BEFORE aggregation, so Eq. 6
+        # reweights over the arrivals only, on every aggregation path
+        # (reference, fog tier, fused kernel, sharded kernel).
+        fault_counters = faults_inject.zero_counters()
+        fault_skip = None
+        fault_round_ms = None
+        if faults_on:
+            fc = fl_cfg.faults
+            k_fplan, k_fnoise = jax.random.split(
+                jax.random.fold_in(state.rng, 11)
+            )
+            # Under mesh rules the plan must run as a replicated island:
+            # its (slots,) pred chains mix gathers from client-sharded
+            # arrays, and letting the SPMD partitioner reshard those mid-
+            # chain has been observed to MISCOMPILE (spmd_partitioner
+            # "involuntary full rematerialization" + wrong fail masks),
+            # breaking sharded-vs-plain fault replay. The arrays are
+            # tiny, so replication is free.
+            _rep = (
+                (lambda t: jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, NamedSharding(rules.mesh, P())
+                    ), t))
+                if rules is not None else (lambda t: t)
+            )
+            plan = faults_inject.plan_round(
+                fc, k_fplan, _rep(slot_mask),
+                _rep(~sched_view.warm[slot_ids]),
+                _rep(decision.delays_ms[slot_ids]),
+                fog_nodes=fl_cfg.fog_nodes,
+            )
+            plan = _rep(plan)
+            # Partitionable threefry for the payload noise: legacy
+            # (non-partitionable) threefry draws DIFFERENT bits under a
+            # multi-device lowering depending on the leaf's sharding
+            # spec, which would make a faulted sharded round diverge
+            # from its single-host replay by O(corrupt_scale). The
+            # context only rebinds the bit generator for these draws.
+            with jax.threefry_partitionable(True):
+                deltas = attacks_mod.corrupt_deltas(
+                    deltas, plan.corrupt, "noise", k_fnoise,
+                    noise_scale=fc.corrupt_scale,
+                )
+            slot_mask = plan.arrived
+            fault_counters = plan.counters
+            fault_skip = plan.skip
+            fault_round_ms = plan.round_ms
+
         # ---- 4+5. aggregate (Eq. 6) + server update -------------------- #
         if use_kernel:
             # Fused delta-pipeline kernel: clip, compression emulation,
@@ -488,6 +547,19 @@ def make_round_fn(
                 fl_cfg, params0, agg, state.server_mu, state.server_count
             )
 
+        if fault_skip is not None:
+            # Below-quorum round: the model (and server optimizer state)
+            # carries over bitwise — the attempted aggregate is discarded.
+            new_params = jax.tree.map(
+                lambda p, q: jnp.where(fault_skip, p, q), params0, new_params
+            )
+            if state.server_mu is not None:
+                new_mu = jax.tree.map(
+                    lambda p, q: jnp.where(fault_skip, p, q),
+                    state.server_mu, new_mu,
+                )
+            new_count = jnp.where(fault_skip, state.server_count, new_count)
+
         # ---- 6. energy / cold-start / drift bookkeeping ---------------- #
         # Per-LOGICAL-client energy: compute ∝ FLOPs for selected clients,
         # uplink ∝ compressed delta bytes (§IV.F) — via the shared DES
@@ -498,6 +570,15 @@ def make_round_fn(
         round_energy_j = cost_model.energy_j(
             decision.selection.mask, sched_view.warm, flops_round, tx_bytes
         )
+        if faults_on:
+            # Every launched attempt repays the slot's full per-round
+            # energy (a crashed function restarts from the global model);
+            # non-slot selected clients keep the 1× baseline.
+            round_energy_j = round_energy_j * (
+                jnp.ones_like(round_energy_j)
+                .at[slot_ids]
+                .set(jnp.maximum(plan.attempts, 1.0))
+            )
         advanced = account_energy(
             decision.new_state, round_energy_j, fl_cfg.scheduler
         )
@@ -523,13 +604,22 @@ def make_round_fn(
             "num_selected": decision.selection.num_selected,
             "slot_participation": jnp.sum(slot_mask.astype(jnp.int32)),
             "cold_starts": decision.cold_starts,
-            # Synchronous round latency = slowest selected client (§III.H).
-            "round_latency_ms": jnp.max(
-                jnp.where(slot_mask, decision.delays_ms[slot_ids], 0.0)
+            # Synchronous round latency = slowest selected client (§III.H);
+            # under faults the retry/backoff chain (deadline-capped).
+            "round_latency_ms": (
+                fault_round_ms
+                if fault_round_ms is not None
+                else jnp.max(
+                    jnp.where(slot_mask, decision.delays_ms[slot_ids], 0.0)
+                )
             ),
             "energy_j": jnp.sum(round_energy_j),
             "mean_utility": jnp.mean(decision.selection.utility),
             "mean_drift": jnp.mean(decision.selection.drift),
+            # Fault/recovery counters — structurally always present
+            # (zeros when the plan is off) so history schemas are stable
+            # across faulted and clean runs.
+            **fault_counters,
         }
         return new_state, metrics
 

@@ -64,6 +64,9 @@ from repro.fl.fuse import (
 from repro.obs.history import finalize_history
 from repro.optim import clip_by_global_norm
 from repro.sim.des import FaasSimConfig, RoundCostModel
+from repro.sim.faults import config as faults_config
+from repro.sim.faults import inject as faults_inject
+from repro.sim.faults.config import FaultConfig
 
 Array = jax.Array
 
@@ -148,6 +151,13 @@ class SimulatorConfig:
     # the cloud combines the F partials (fl/fog.py). 1 = flat (bitwise
     # identical to the pre-fog path); > 1 requires aggregator="fedavg".
     fog_nodes: int = 1
+    # Fault-injection + recovery plan (repro.sim.faults). None or an
+    # all-inert FaultConfig leaves every code path VERBATIM — the fault
+    # layer's single structural gate (`faults.active`) is off and the
+    # traced program is bitwise identical to a no-faults build. Rates /
+    # scales are numeric for the sweep layer; the retry cap, failover
+    # flag and deadline None-ness are structural.
+    faults: FaultConfig | None = None
     hidden: tuple[int, ...] = (128, 64)
     seed: int = 0
 
@@ -199,6 +209,11 @@ class FedFogSimulator:
         fog_mod.validate_fog_config(
             cfg.fog_nodes, cfg.num_clients, cfg.aggregator
         )
+        # ONE structural gate for the whole fault layer (lifted rates
+        # answer True via static_any — the sweep registers the gate).
+        self._faults_on = faults_config.active(cfg.faults)
+        if cfg.faults is not None:
+            faults_config.validate(cfg.faults)
         self.tel_cfg = cfg.telemetry or TelemetryConfig(
             num_clients=self.population, seed=cfg.seed
         )
@@ -520,6 +535,27 @@ class FedFogSimulator:
         return new_params
 
     # ------------------------------------------------------------------ #
+    def _plan_faults(self, key, mask, warm, deltas, costs):
+        """Realize one round's faults (sync emulation, sim/faults) off a
+        dedicated sub-key: ``fold_in(key, 8)`` — disjoint from the 6-way
+        round split and the population cohort fold (7), so faulted runs
+        replay exactly from the seed and fault draws never perturb any
+        other stream. Returns ``(plan, deltas)`` with corrupted-payload
+        noise already applied (the `fl/attacks.py` machinery, accounted
+        as a fault)."""
+        fc = self.cfg.faults
+        k_plan, k_noise = jax.random.split(jax.random.fold_in(key, 8))
+        plan = faults_inject.plan_round(
+            fc, k_plan, mask, ~warm, costs.per_client_ms,
+            fog_nodes=self.cfg.fog_nodes,
+        )
+        deltas = attacks_mod.corrupt_deltas(
+            deltas, plan.corrupt, "noise", k_noise,
+            noise_scale=fc.corrupt_scale,
+        )
+        return plan, deltas
+
+    # ------------------------------------------------------------------ #
     def _round(self, env, params, sched_state, telemetry, round_idx, key):
         """One synchronous FL round — pure function of its arguments, so it
         is equally valid as a jitted step, a ``lax.scan`` body, and a
@@ -542,11 +578,9 @@ class FedFogSimulator:
             data_cfg, params, round_idx, mask, malicious, k_data, k_attack
         )
 
-        new_params = self._apply_deltas(
-            params, deltas, mask, env["data_sizes"], k_dp
-        )
-
         # --- DES: latency + energy (§IV.F, shared RoundCostModel) ----- #
+        # Computed BEFORE aggregation (pure, value-identical reordering)
+        # so the fault layer can price retry chains off per_client_ms.
         workload, up_bytes, down_bytes = self._round_workload()
         warm = sched_state.warm
         if cfg.policy in ("fogfaas",):
@@ -556,9 +590,29 @@ class FedFogSimulator:
             policy="fedfog" if cfg.policy in ("fedfog", "rcs", "vanilla") else "fogfaas",
         )
 
-        new_sched = account_energy(decision.new_state, costs.energy_j, cfg.scheduler)
+        counters = faults_inject.zero_counters()
+        agg_mask, energy_j, round_ms = mask, costs.energy_j, costs.round_ms
+        skip = None
+        if self._faults_on:
+            plan, deltas = self._plan_faults(key, mask, warm, deltas, costs)
+            agg_mask = plan.arrived  # Eq. 6 reweights over arrivals only
+            energy_j = costs.energy_j * plan.attempts  # retries repay
+            round_ms = plan.round_ms
+            skip, counters = plan.skip, plan.counters
+
+        new_params = self._apply_deltas(
+            params, deltas, agg_mask, env["data_sizes"], k_dp
+        )
+        if skip is not None:
+            # Below quorum: the round is skipped and the model carries
+            # over bitwise (the discarded aggregate is never selected).
+            new_params = jax.tree.map(
+                lambda p, q: jnp.where(skip, p, q), params, new_params
+            )
+
+        new_sched = account_energy(decision.new_state, energy_j, cfg.scheduler)
         new_tel = step_telemetry(
-            self.tel_cfg, telemetry, mask, costs.energy_j, env["profiles"], k_tel
+            self.tel_cfg, telemetry, mask, energy_j, env["profiles"], k_tel
         )
 
         acc = self._eval_accuracy(data_cfg, new_params, k_eval)
@@ -566,13 +620,14 @@ class FedFogSimulator:
         metrics = {
             "accuracy": acc,
             "num_selected": jnp.sum(mask.astype(jnp.int32)),
-            "round_latency_ms": costs.round_ms,
+            "round_latency_ms": round_ms,
             "orchestration_ms": costs.orchestration_ms,
-            "energy_j": jnp.sum(costs.energy_j),
+            "energy_j": jnp.sum(energy_j),
             "cold_starts": costs.cold_starts,
             "mean_drift": jnp.mean(decision.selection.drift),
             "mean_utility": jnp.mean(decision.selection.utility),
             "mean_battery": jnp.mean(new_tel.batt),
+            **counters,
         }
         return new_params, new_sched, new_tel, metrics
 
@@ -623,9 +678,8 @@ class FedFogSimulator:
             cids=ids,
         )
 
-        new_params = self._apply_deltas(params, deltas, mask, sizes_c, k_dp)
-
         # --- DES: latency + energy (§IV.F, shared RoundCostModel) ----- #
+        # Before aggregation, as in the dense round, for the fault layer.
         workload, up_bytes, down_bytes = self._round_workload()
         warm = sched_c.warm
         if cfg.policy in ("fogfaas",):
@@ -635,14 +689,32 @@ class FedFogSimulator:
             policy="fedfog" if cfg.policy in ("fedfog", "rcs", "vanilla") else "fogfaas",
         )
 
+        counters = faults_inject.zero_counters()
+        agg_mask, energy_j, round_ms = mask, costs.energy_j, costs.round_ms
+        skip = None
+        if self._faults_on:
+            plan, deltas = self._plan_faults(key, mask, warm, deltas, costs)
+            agg_mask = plan.arrived
+            energy_j = costs.energy_j * plan.attempts
+            round_ms = plan.round_ms
+            skip, counters = plan.skip, plan.counters
+
+        new_params = self._apply_deltas(
+            params, deltas, agg_mask, sizes_c, k_dp
+        )
+        if skip is not None:
+            new_params = jax.tree.map(
+                lambda p, q: jnp.where(skip, p, q), params, new_params
+            )
+
         sched_rows = account_energy(
-            decision.new_state, costs.energy_j, cfg.scheduler
+            decision.new_state, energy_j, cfg.scheduler
         )
         new_sched = fog_mod.scatter_cohort_sched(
             pop_sched, ids, sched_rows, round_idx
         )
         tel_rows = step_telemetry(
-            self._tel_cfg_cohort, tel_c, mask, costs.energy_j, prof_c, k_tel
+            self._tel_cfg_cohort, tel_c, mask, energy_j, prof_c, k_tel
         )
         new_tel = fog_mod.scatter_rows(telemetry, ids, tel_rows)
 
@@ -651,13 +723,14 @@ class FedFogSimulator:
         metrics = {
             "accuracy": acc,
             "num_selected": jnp.sum(mask.astype(jnp.int32)),
-            "round_latency_ms": costs.round_ms,
+            "round_latency_ms": round_ms,
             "orchestration_ms": costs.orchestration_ms,
-            "energy_j": jnp.sum(costs.energy_j),
+            "energy_j": jnp.sum(energy_j),
             "cold_starts": costs.cold_starts,
             "mean_drift": jnp.mean(decision.selection.drift),
             "mean_utility": jnp.mean(decision.selection.utility),
             "mean_battery": jnp.mean(new_tel.batt),
+            **counters,
         }
         return new_params, new_sched, new_tel, metrics
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.scheduler import SchedulerConfig
 from repro.core.types import SchedulerState, _pytree_dataclass
+from repro.sim.faults.config import FaultConfig
 
 
 @_pytree_dataclass
@@ -90,6 +91,11 @@ class FLConfig:
     # Baseline switches (§IV.B): "fedfog" | "rcs" | "fogfaas" | "vanilla"
     policy: str = "fedfog"
 
+    # Fault-injection + recovery plan (repro.sim.faults). None or an
+    # all-off plan leaves the round VERBATIM (Python-level gate) — the
+    # faults-off bitwise contract holds on the pod-scale path too.
+    faults: FaultConfig | None = None
+
     def __post_init__(self):
         assert self.slots >= 1 and self.num_clients >= self.slots
         if self.population is not None and self.population < self.num_clients:
@@ -100,6 +106,10 @@ class FLConfig:
         from repro.fl.fog import validate_fog_config
 
         validate_fog_config(self.fog_nodes, self.slots, self.aggregator)
+        if self.faults is not None:
+            from repro.sim.faults.config import validate as _validate_faults
+
+            _validate_faults(self.faults)
 
 
 def init_fl_state(model, fl_cfg: FLConfig, key: jax.Array,

@@ -64,6 +64,27 @@ def parse_args(argv=None):
                     help="fuse the server delta pipeline into the Pallas "
                          "kernel (sharded shard_map entry under --scale "
                          "full; single-HBM-pass kernel on one host)")
+    ap.add_argument("--fault-timeout-rate", type=float, default=0.0,
+                    help="cold-start timeout probability (attempt 0)")
+    ap.add_argument("--fault-crash-rate", type=float, default=0.0,
+                    help="per-attempt function-crash probability")
+    ap.add_argument("--fault-drop-rate", type=float, default=0.0,
+                    help="per-attempt payload-drop probability")
+    ap.add_argument("--fault-corrupt-rate", type=float, default=0.0,
+                    help="arrived-payload corruption probability")
+    ap.add_argument("--fault-partition-rate", type=float, default=0.0,
+                    help="per-round transient network-partition probability")
+    ap.add_argument("--fault-fog-outage-rate", type=float, default=0.0,
+                    help="per-round per-fog-node outage probability")
+    ap.add_argument("--fault-failover", action="store_true",
+                    help="reassign a dead fog's clients to survivors")
+    ap.add_argument("--fault-retries", type=int, default=0,
+                    help="per-client retry cap (exponential backoff)")
+    ap.add_argument("--fault-deadline-ms", type=float, default=None,
+                    help="server round deadline (None = barrier)")
+    ap.add_argument("--fault-quorum", type=float, default=0.0,
+                    help="min arrived/admitted fraction to aggregate; "
+                         "below quorum the round is skipped")
     ap.add_argument("--reduced", action="store_true",
                     help="with --scale full: reduced config on the real "
                          "mesh plan (CPU-executable sharded rounds)")
@@ -71,6 +92,31 @@ def parse_args(argv=None):
                     help="with --scale full: lower+compile the sharded "
                          "round, report collectives, skip execution")
     return ap.parse_args(argv)
+
+
+def fault_config_from_args(args):
+    """Build the round's ``FaultConfig`` from ``--fault-*`` flags; None
+    when every knob is at its faults-off default (the round then takes
+    its verbatim pre-fault path)."""
+    rates = dict(
+        timeout_rate=args.fault_timeout_rate,
+        crash_rate=args.fault_crash_rate,
+        drop_rate=args.fault_drop_rate,
+        corrupt_rate=args.fault_corrupt_rate,
+        partition_rate=args.fault_partition_rate,
+        fog_outage_rate=args.fault_fog_outage_rate,
+    )
+    if not any(rates.values()) and args.fault_deadline_ms is None:
+        return None
+    from repro.sim.faults import FaultConfig
+
+    return FaultConfig(
+        **rates,
+        fog_failover=args.fault_failover,
+        max_retries=args.fault_retries,
+        deadline_ms=args.fault_deadline_ms,
+        quorum_frac=args.fault_quorum,
+    )
 
 
 def main(argv=None):
@@ -137,6 +183,7 @@ def main(argv=None):
         use_pallas_agg=args.pallas_agg,
         fog_nodes=args.fog_nodes,
         population=args.population,
+        faults=fault_config_from_args(args),
     )
     data_cfg = FedDataConfig(
         vocab_size=cfg.vocab_size, drift_period=10, seed=args.seed
@@ -248,7 +295,14 @@ def _train_loop(args, fl_cfg, data_cfg, tel_cfg, round_fn, state, telemetry,
             f"selected={int(sel)} cold={int(metrics['cold_starts'])} "
             f"latency={float(metrics['round_latency_ms']):.0f}ms "
             f"energy={float(metrics['energy_j']):.1f}J "
-            f"({time.time() - t0:.2f}s)",
+            + (
+                f"retries={int(metrics['fault_retries'])} "
+                f"lost={int(metrics['fault_lost'])} "
+                f"skipped={int(metrics['round_skipped'])} "
+                if fl_cfg.faults is not None
+                else ""
+            )
+            + f"({time.time() - t0:.2f}s)",
             flush=True,
         )
         if checkpointer and (r + 1) % args.ckpt_every == 0:

@@ -47,6 +47,21 @@ def finalize_history(
     cold = history.get("cold_starts")
     if cold is not None:
         history["total_cold_starts"] = sum(cold)
+    # Fault/recovery totals (repro.sim.faults). The sync engines carry
+    # per-round counter lists; the async engine already reports run
+    # totals as scalars — hence the ``sum`` vs passthrough split. Only
+    # emitted when the engine produced the counters at all, so
+    # pre-fault histories keep their exact schema.
+    for key, total in (
+        ("fault_retries", "total_fault_retries"),
+        ("fault_terminal", "total_fault_terminal"),
+        ("fault_corrupt", "total_fault_corrupt"),
+        ("round_skipped", "total_rounds_skipped"),
+        ("fault_skipped", "total_rounds_skipped"),
+    ):
+        v = history.get(key)
+        if v is not None:
+            history[total] = sum(v) if isinstance(v, (list, tuple)) else v
     return history
 
 
@@ -58,6 +73,9 @@ def summary_metrics(history: Mapping[str, Any]) -> dict[str, Any]:
         "mean_latency_ms", "total_cold_starts",
         "num_dispatches", "num_flushes", "num_completions",
         "lost_inflight", "virtual_time_ms",
+        "total_fault_retries", "total_fault_terminal",
+        "total_fault_corrupt", "total_rounds_skipped",
+        "fault_lost_deadline", "queue_dropped",
     )
     return {k: history[k] for k in keys if k in history}
 

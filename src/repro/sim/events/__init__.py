@@ -21,8 +21,11 @@ from repro.sim.events.churn import ChurnConfig, available_mask, step_churn
 from repro.sim.events.engine import AsyncConfig, AsyncFedFogSimulator
 from repro.sim.events.queue import (
     KIND_COMPLETE,
+    KIND_DEADLINE,
     KIND_DISPATCH,
+    KIND_RETRY,
     EventQueue,
+    cancel_events,
     make_queue,
     pop_batch,
     pop_event,
@@ -42,9 +45,12 @@ __all__ = [
     "ChurnConfig",
     "EventQueue",
     "KIND_COMPLETE",
+    "KIND_DEADLINE",
     "KIND_DISPATCH",
+    "KIND_RETRY",
     "async_aggregate",
     "available_mask",
+    "cancel_events",
     "make_queue",
     "pop_batch",
     "pop_event",

@@ -80,7 +80,9 @@ from repro.sim.events.churn import (
 )
 from repro.sim.events.queue import (
     KIND_COMPLETE,
+    KIND_DEADLINE,
     KIND_DISPATCH,
+    KIND_RETRY,
     cancel_events,
     make_queue,
     pop_batch,
@@ -90,6 +92,7 @@ from repro.sim.events.queue import (
     push_events,
 )
 from repro.sim.events.staleness import async_aggregate
+from repro.sim.faults import config as faults_config
 
 Array = jax.Array
 
@@ -182,6 +185,19 @@ class AsyncState(NamedTuple):
     # dense mode both are inert (owner = arange, sizes = registry rows).
     owner: Array  # (N,) int32 population id leasing each slot
     pend_sizes: Array  # (N,) f32 |D| of the slot's in-flight update
+    # Fault layer (repro.sim.faults) — inert zeros when the fault gate
+    # is off; the event mechanics below only touch them under the gate.
+    pend_ms: Array  # (N,) f32 one attempt's latency (retries repay it)
+    pend_fkey: Array  # (N, 2) u32 per-client fault key chain
+    pend_attempts: Array  # (N,) f32 attempts launched (energy multiplier)
+    last_admitted: Array  # () f32 admitted count of the latest dispatch
+    fault_failures: Array  # () i32 failed invocation attempts
+    fault_retries: Array  # () i32 retry relaunches
+    fault_terminal: Array  # () i32 clients that exhausted the retry cap
+    fault_lost_deadline: Array  # () i32 in-flight work shed by a deadline
+    fault_corrupt: Array  # () i32 corrupted-but-arrived payloads
+    fault_skipped: Array  # () i32 below-quorum rounds skipped
+    fog_outages: Array  # () i32 fog-node dark windows
 
 
 class AsyncFedFogSimulator:
@@ -213,12 +229,34 @@ class AsyncFedFogSimulator:
         self.sim = FedFogSimulator(cfg, defer_state=True)
         n = cfg.num_clients
         self.max_dispatches = int(self.acfg.max_dispatches or cfg.rounds)
-        self.capacity = int(self.acfg.queue_capacity or n + 8)
-        # One dispatch pops 1 event and enqueues ≤ N completions; flushes
-        # are inline (not events). So D·(N+1)+2 pops always drain the run.
-        self.max_events = int(
-            self.acfg.max_events or self.max_dispatches * (n + 1) + 2
+        # Fault layer gate — shared with the embedded sync simulator so
+        # the two engines agree on when the plan is live. The async
+        # engine realizes faults event-by-event (KIND_RETRY relaunches
+        # with backoff, KIND_DEADLINE sheds overdue work); the sync
+        # emulation in sim/faults/inject.py never runs here.
+        self._faults_on = self.sim._faults_on
+        deadline_on = (
+            self._faults_on and cfg.faults.deadline_ms is not None
         )
+        if self._faults_on:
+            retries = int(cfg.faults.max_retries)
+            # Outstanding events: ≤ 1 per client (its next COMPLETE or
+            # RETRY) + 1 DISPATCH + a backlog of ≤ D un-fired deadline
+            # events (stale ones linger until their time comes up).
+            default_cap = n + 8 + (self.max_dispatches if deadline_on else 0)
+            # Pops per dispatch: 1 dispatch + ≤ N·(retries+1) attempt
+            # events + 1 deadline (+ slack).
+            default_events = (
+                self.max_dispatches * (n * (retries + 2) + 2) + 2
+            )
+        else:
+            default_cap = n + 8
+            # One dispatch pops 1 event and enqueues ≤ N completions;
+            # flushes are inline (not events). So D·(N+1)+2 pops always
+            # drain the run.
+            default_events = self.max_dispatches * (n + 1) + 2
+        self.capacity = int(self.acfg.queue_capacity or default_cap)
+        self.max_events = int(self.acfg.max_events or default_events)
         self.max_flushes = self.max_events  # flushes ≤ dispatches+completions
         # The AsyncState argument IS the event loop's scan carry — donate
         # it so the runtime reuses its buffers for the result instead of
@@ -285,6 +323,17 @@ class AsyncFedFogSimulator:
             },
             owner=jnp.arange(n, dtype=jnp.int32),
             pend_sizes=env["data_sizes"][jnp.arange(n)].astype(jnp.float32),
+            pend_ms=jnp.zeros((n,), jnp.float32),
+            pend_fkey=jnp.zeros((n, 2), jnp.uint32),
+            pend_attempts=jnp.zeros((n,), jnp.float32),
+            last_admitted=zero,
+            fault_failures=zi,
+            fault_retries=zi,
+            fault_terminal=zi,
+            fault_lost_deadline=zi,
+            fault_corrupt=zi,
+            fault_skipped=zi,
+            fog_outages=zi,
         )
 
     # ------------------------------------------------------------------ #
@@ -390,6 +439,13 @@ class AsyncFedFogSimulator:
             new_flat = base_flat + cfg.server_lr * agg
         params = unfuse_vec(new_flat)
         energy = state.pend_energy * buf
+        if self._faults_on:
+            # Every launched attempt repays the invocation's energy (the
+            # crashed/timed-out function restarts from scratch). Energy
+            # lands when the update flushes — terminal/churned clients'
+            # attempts follow the engine's existing convention of not
+            # being accounted (their updates never reach a flush).
+            energy = energy * state.pend_attempts
         if pop_mode:
             # Gather the owners' registry rows, advance only the flushed
             # slots' rows, scatter back. Duplicate owners across slots
@@ -553,6 +609,9 @@ class AsyncFedFogSimulator:
         avail = available_mask(acfg.churn, online, tel_view.batt)
         lost = state.busy & ~avail  # stragglers that will never report
         queue = cancel_events(state.queue, lost, KIND_COMPLETE)
+        if self._faults_on:
+            # A churned client's pending retry chain dies with it.
+            queue = cancel_events(queue, lost, KIND_RETRY)
         busy = state.busy & ~lost
 
         # --- scheduler gating + policy participation (shared code) ----- #
@@ -589,18 +648,135 @@ class AsyncFedFogSimulator:
             per_client_ms = per_client_ms * jnp.exp(
                 acfg.straggler_sigma * jax.random.normal(k_strag, (n,))
             )
+
+        # --- fault plan: attempt-0 outcomes + per-client retry chains -- #
+        # Engine-only key fold_in(k, 104) — disjoint from the shared
+        # 6-way split and the 101/102/103 engine keys, so a faulted run
+        # replays exactly from the seed and fault draws never perturb
+        # the sync-shared streams.
+        fail0 = jnp.zeros((n,), bool)
+        corrupt0 = jnp.zeros((n,), bool)
+        fkeys = state.pend_fkey
+        if self._faults_on:
+            fc = cfg.faults
+            k_fault = jax.random.fold_in(k, 104)
+            (
+                k_draw, k_part, k_pfrac, k_cmask, k_cnoise, k_fog, k_client,
+            ) = jax.random.split(k_fault, 7)
+            part_on = jax.random.uniform(k_part, ()) < jnp.asarray(
+                fc.partition_rate, jnp.float32
+            )
+            part_cut = part_on & (
+                jax.random.uniform(k_pfrac, (n,))
+                < jnp.asarray(fc.partition_frac, jnp.float32)
+            )
+            from repro.sim.faults.inject import attempt_failures
+
+            fail0 = attempt_failures(
+                fc, k_draw, admitted, ~warm, part_cut, 0
+            )
+            # Fog outage window for this dispatch: a dark fog loses its
+            # edge clients' uplinks. With failover the survivors absorb
+            # them at a latency detour; without it the attempt fails
+            # (the retry lands in the next, possibly healed, window).
+            if cfg.fog_nodes > 1:
+                outage = jax.random.uniform(
+                    k_fog, (cfg.fog_nodes,)
+                ) < jnp.asarray(fc.fog_outage_rate, jnp.float32)
+                dark = outage[fog_mod.fog_assignment(n, cfg.fog_nodes)]
+                if bool(fc.fog_failover):
+                    per_client_ms = per_client_ms + jnp.where(
+                        dark & admitted,
+                        jnp.asarray(fc.failover_latency_ms, jnp.float32),
+                        0.0,
+                    )
+                else:
+                    fail0 = fail0 | (admitted & dark)
+                state = state._replace(
+                    fog_outages=state.fog_outages
+                    + jnp.sum(outage).astype(jnp.int32)
+                )
+            corrupt0 = (
+                admitted
+                & ~fail0
+                & (
+                    jax.random.uniform(k_cmask, (n,))
+                    < jnp.asarray(fc.corrupt_rate, jnp.float32)
+                )
+            )
+            fkeys = jnp.where(
+                admitted[:, None],
+                jax.vmap(lambda i: jax.random.fold_in(k_client, i))(
+                    jnp.arange(n)
+                ),
+                state.pend_fkey,
+            )
+            # Failed attempts re-enqueue as KIND_RETRY carrying the next
+            # attempt index; the retry cap is enforced when that event
+            # pops (attempt > cap → terminal), so cap=0 failures travel
+            # the same path with zero backoff.
+            delay1 = (
+                faults_config.backoff_ms(fc, 1.0)
+                if int(fc.max_retries) >= 1
+                else jnp.zeros((), jnp.float32)
+            )
+            ev_kinds = jnp.where(fail0, KIND_RETRY, KIND_COMPLETE)
+            ev_times = (
+                state.t_ms
+                + per_client_ms
+                + jnp.where(fail0, delay1, 0.0)
+            )
+            ev_payloads = jnp.where(
+                fail0, 1.0, jnp.full((n,), state.t_ms)
+            )
+            state = state._replace(
+                fault_failures=state.fault_failures
+                + jnp.sum(fail0).astype(jnp.int32),
+                fault_corrupt=state.fault_corrupt
+                + jnp.sum(corrupt0).astype(jnp.int32),
+            )
+        else:
+            ev_kinds = jnp.full((n,), KIND_COMPLETE)
+            ev_times = state.t_ms + per_client_ms
+            ev_payloads = jnp.full((n,), state.t_ms)
         queue = push_events(
             queue,
-            state.t_ms + per_client_ms,
+            ev_times,
             jnp.arange(n),
-            jnp.full((n,), KIND_COMPLETE),
-            jnp.full((n,), state.t_ms),
+            ev_kinds,
+            ev_payloads,
             admitted,
         )
+        if self._faults_on and cfg.faults.deadline_ms is not None:
+            # One deadline event per dispatch. on_flush mode tags it with
+            # the dispatch index (stale once a newer cohort started);
+            # interval mode tags the dispatch time (it sheds only work
+            # dispatched at or before it).
+            tag = (
+                d.astype(jnp.float32)
+                if acfg.dispatch_mode == "on_flush"
+                else state.t_ms
+            )
+            queue = push_event(
+                queue,
+                state.t_ms + jnp.asarray(cfg.faults.deadline_ms, jnp.float32),
+                -1,
+                KIND_DEADLINE,
+                tag,
+                enable=jnp.any(admitted),
+            )
 
         # --- stash in-flight work (fused (N, P) buffer, one `where`) --- #
         deltas_cat, _ = fuse_clients(deltas)
         pending = jnp.where(admitted[:, None], deltas_cat, state.pending)
+        if self._faults_on:
+            # Attempt-0 payload corruption lands in the stash now; a
+            # corrupted RETRY arrival adds its noise in _retry_core.
+            noise0 = (
+                jax.random.normal(k_cnoise, pending.shape)
+                * jnp.asarray(cfg.faults.corrupt_scale, jnp.float32)
+            )
+            pending = pending + jnp.where(corrupt0[:, None], noise0, 0.0)
         if pop_mode:
             # Scatter the advanced cohort rows back into the (M,)
             # registry: warm/LRU from the cold-start cache update,
@@ -642,6 +818,10 @@ class AsyncFedFogSimulator:
             pend_version=jnp.where(admitted, state.version, state.pend_version),
             pend_energy=jnp.where(admitted, costs.energy_j, state.pend_energy),
             pend_t=jnp.where(admitted, state.t_ms, state.pend_t),
+            pend_ms=jnp.where(admitted, per_client_ms, state.pend_ms),
+            pend_fkey=fkeys,
+            pend_attempts=jnp.where(admitted, 1.0, state.pend_attempts),
+            last_admitted=jnp.sum(admitted.astype(jnp.float32)),
             lost_inflight=state.lost_inflight
             + jnp.sum(lost.astype(jnp.int32)),
             last_disp_t=state.t_ms,
@@ -716,6 +896,163 @@ class AsyncFedFogSimulator:
         )
 
     # ------------------------------------------------------------------ #
+    def _retry_core(self, state: AsyncState, ev):
+        """KIND_RETRY: relaunch one client's failed invocation.
+
+        ``ev.payload`` carries the (1-based) attempt index. Past the
+        retry cap the failure is terminal — the slot frees and the
+        client never reports (conservation: admitted = completions +
+        terminal + churn-lost + deadline-lost). Otherwise the attempt's
+        outcome is drawn from the client's fault-key chain
+        (``fold_in(pend_fkey[c], attempt)`` — deterministic in the seed,
+        independent of event interleaving): success pushes the COMPLETE
+        at ``t + pend_ms`` (the restarted function repays the full
+        attempt latency; the container is warm now, so no timeout),
+        failure re-enqueues the next retry after exponential backoff.
+
+        A terminal failure participates in the flush decision exactly
+        like an arrival (``_flush_rule``): freeing the last in-flight
+        slot must fire the idle trigger, and a cohort that resolved
+        ENTIRELY in terminal failures (empty buffer) still flushes so
+        the server round advances — the empty-mask server step, same as
+        an empty-cohort dispatch. Otherwise the engine would stall with
+        an empty queue and the scan would no-op to the horizon.
+        """
+        fc = self.cfg.faults
+        n = self.cfg.num_clients
+        c = jnp.clip(ev.client, 0, n - 1)
+        is_c = jnp.arange(n) == c
+        attempt = jnp.maximum(ev.payload.astype(jnp.int32), 1)
+        cap = jnp.asarray(int(fc.max_retries), jnp.int32)
+        active = state.busy[c]  # churn/deadline-cancelled chains no-op
+        terminal = active & (attempt > cap)
+        relaunch = active & (attempt <= cap)
+
+        k_a = jax.random.fold_in(state.pend_fkey[c], attempt)
+        k_out, k_noise = jax.random.split(k_a)
+        u = jax.random.uniform(k_out, (3,))
+        draw_fail = (u[0] < jnp.asarray(fc.crash_rate, jnp.float32)) | (
+            u[1] < jnp.asarray(fc.drop_rate, jnp.float32)
+        )
+        fail = relaunch & draw_fail
+        succeed = relaunch & ~draw_fail
+        corrupt = succeed & (
+            u[2] < jnp.asarray(fc.corrupt_rate, jnp.float32)
+        )
+
+        t_arrive = ev.time + state.pend_ms[c]
+        next_attempt = attempt + 1
+        delay = jnp.where(
+            next_attempt <= cap,
+            faults_config.backoff_ms(fc, next_attempt),
+            0.0,
+        )
+        queue = push_event(
+            state.queue,
+            jnp.where(fail, t_arrive + delay, t_arrive),
+            c,
+            jnp.where(fail, KIND_RETRY, KIND_COMPLETE),
+            jnp.where(fail, next_attempt.astype(jnp.float32), state.pend_t[c]),
+            enable=relaunch,
+        )
+        noise = jax.random.normal(
+            k_noise, (state.pending.shape[1],)
+        ) * jnp.asarray(fc.corrupt_scale, jnp.float32)
+        pending = state.pending.at[c].add(jnp.where(corrupt, noise, 0.0))
+        i32 = jnp.int32
+        busy = state.busy & ~(is_c & terminal)
+        state = state._replace(
+            queue=queue,
+            pending=pending,
+            busy=busy,
+            pend_attempts=state.pend_attempts
+            + jnp.where(is_c & relaunch, 1.0, 0.0),
+            fault_retries=state.fault_retries + relaunch.astype(i32),
+            fault_failures=state.fault_failures + fail.astype(i32),
+            fault_terminal=state.fault_terminal + terminal.astype(i32),
+            fault_corrupt=state.fault_corrupt + corrupt.astype(i32),
+        )
+        idle = ~jnp.any(busy)
+        all_terminal = idle & (jnp.sum(state.buf.astype(i32)) == 0)
+        want_flush = terminal & (
+            self._flush_rule(busy, state.buf) | all_terminal
+        )
+        return state, want_flush
+
+    def _on_retry(self, state: AsyncState, ev) -> AsyncState:
+        state, want_flush = self._retry_core(state, ev)
+        return jax.lax.cond(want_flush, self._flush, lambda s: s, state)
+
+    # ------------------------------------------------------------------ #
+    def _deadline_core(self, state: AsyncState, ev):
+        """KIND_DEADLINE: shed overdue in-flight work, then decide.
+
+        on_flush mode (sequential cohorts): the event is stale once a
+        newer cohort started (``dispatch_idx != tag+1``) or the cohort
+        already fully resolved. A live deadline cancels the cohort's
+        remaining COMPLETE/RETRY events, counts them lost, and applies
+        the quorum rule: enough arrivals → flush the partial buffer
+        (Eq. 6 reweights over it); below quorum → the round is SKIPPED
+        (buffer cleared, model untouched) and the next dispatch is
+        scheduled as a flush would have.
+
+        interval mode (overlapping cohorts): sheds only work dispatched
+        at or before the tag time, then lets the shared flush rule
+        decide — quorum is a per-cohort notion and does not apply.
+        """
+        n = self.cfg.num_clients
+        fc = self.cfg.faults
+        on_flush = self.acfg.dispatch_mode == "on_flush"
+        if on_flush:
+            live = (
+                (state.dispatch_idx == ev.payload.astype(jnp.int32) + 1)
+                & (jnp.any(state.busy) | jnp.any(state.buf))
+            )
+            overdue = state.busy & live
+        else:
+            live = jnp.ones((), bool)
+            overdue = state.busy & (state.pend_t <= ev.payload)
+        queue = cancel_events(state.queue, overdue, KIND_COMPLETE)
+        queue = cancel_events(queue, overdue, KIND_RETRY)
+        n_shed = jnp.sum(overdue.astype(jnp.int32))
+        state = state._replace(
+            queue=queue,
+            busy=state.busy & ~overdue,
+            fault_lost_deadline=state.fault_lost_deadline + n_shed,
+        )
+        if not on_flush:
+            return state, self._flush_rule(state.busy, state.buf)
+
+        count = jnp.sum(state.buf.astype(jnp.float32))
+        meets = (count > 0) & (
+            count
+            >= jnp.asarray(fc.quorum_frac, jnp.float32) * state.last_admitted
+        )
+        want_flush = live & meets
+
+        def skip(s):
+            queued = jnp.any(
+                s.queue.valid & (s.queue.kind == KIND_DISPATCH)
+            )
+            q2 = push_event(
+                s.queue, s.t_ms, -1, KIND_DISPATCH,
+                enable=self._more_dispatches(s, s.t_ms) & ~queued,
+            )
+            return s._replace(
+                queue=q2,
+                buf=jnp.zeros_like(s.buf),
+                last_cold=jnp.zeros_like(s.last_cold),
+                fault_skipped=s.fault_skipped + 1,
+            )
+
+        state = jax.lax.cond(live & ~meets, skip, lambda s: s, state)
+        return state, want_flush
+
+    def _on_deadline(self, state: AsyncState, ev) -> AsyncState:
+        state, want_flush = self._deadline_core(state, ev)
+        return jax.lax.cond(want_flush, self._flush, lambda s: s, state)
+
+    # ------------------------------------------------------------------ #
     def _coalesced_step(self, state: AsyncState) -> AsyncState:
         """One batched event step — exactly equivalent to a run of
         single pops (see module docstring for the bit-for-bit argument).
@@ -733,9 +1070,17 @@ class AsyncFedFogSimulator:
         rank = pop_order_rank(q)
         has = jnp.any(q.valid)
         first_slot = jnp.argmin(rank)
-        first_is_dispatch = q.kind[first_slot] == KIND_DISPATCH
-        # COMPLETEs preceding the first queued DISPATCH in pop order.
-        is_d = q.valid & (q.kind == KIND_DISPATCH)
+        first_kind = q.kind[first_slot]
+        first_is_dispatch = first_kind == KIND_DISPATCH
+        # COMPLETEs preceding the first queued barrier event in pop
+        # order. Without faults the only barrier kind is DISPATCH (the
+        # original engine verbatim); with faults, RETRY and DEADLINE
+        # events are barriers too — they mutate busy/pending, so a
+        # COMPLETE run may not absorb past them.
+        if self._faults_on:
+            is_d = q.valid & (q.kind != KIND_COMPLETE)
+        else:
+            is_d = q.valid & (q.kind == KIND_DISPATCH)
         n_before = jnp.min(jnp.where(is_d, rank, q.capacity))
         if acfg.buffer_k is not None:
             # Count-flush boundary: the single-pop engine flushes as soon
@@ -775,16 +1120,51 @@ class AsyncFedFogSimulator:
         def noop(state):
             return state, jnp.zeros((), bool)
 
-        branch = jnp.where(has, jnp.where(first_is_dispatch, 1, 2), 0)
         # ONE shared flush conditional after the switch: the branches
         # only compute *whether* to flush, so the flush graph (staleness
         # aggregation + server step + telemetry + eval — the bulk of the
         # loop body's jaxpr) is traced once per step instead of once per
         # branch. Values are identical to flushing inside each branch,
         # since nothing runs between the branch tail and the cond.
-        state, want_flush = jax.lax.switch(
-            branch, [noop, do_dispatch, do_completes], state
-        )
+        if self._faults_on:
+
+            def do_retry(state):
+                ev, q2 = pop_event(state.queue)
+                state = state._replace(
+                    queue=q2, t_ms=jnp.maximum(ev.time, state.t_ms)
+                )
+                return self._retry_core(state, ev)
+
+            def do_deadline(state):
+                ev, q2 = pop_event(state.queue)
+                state = state._replace(
+                    queue=q2, t_ms=jnp.maximum(ev.time, state.t_ms)
+                )
+                return self._deadline_core(state, ev)
+
+            branch = jnp.where(
+                has,
+                jnp.where(
+                    first_is_dispatch,
+                    1,
+                    jnp.where(
+                        first_kind == KIND_COMPLETE,
+                        2,
+                        jnp.where(first_kind == KIND_RETRY, 3, 4),
+                    ),
+                ),
+                0,
+            )
+            state, want_flush = jax.lax.switch(
+                branch,
+                [noop, do_dispatch, do_completes, do_retry, do_deadline],
+                state,
+            )
+        else:
+            branch = jnp.where(has, jnp.where(first_is_dispatch, 1, 2), 0)
+            state, want_flush = jax.lax.switch(
+                branch, [noop, do_dispatch, do_completes], state
+            )
         return jax.lax.cond(want_flush, self._flush, lambda s: s, state)
 
     def _scan_events(self, state: AsyncState) -> AsyncState:
@@ -819,17 +1199,28 @@ class AsyncFedFogSimulator:
                     ev.valid, jnp.maximum(ev.time, state.t_ms), state.t_ms
                 ),
             )
-            branch = jnp.where(
-                ev.valid,
-                jnp.where(ev.kind == KIND_DISPATCH, 1, 2),
-                0,
-            )
-            state = jax.lax.switch(
-                branch,
-                [lambda s, e: s, self._on_dispatch, self._on_complete],
-                state,
-                ev,
-            )
+            if self._faults_on:
+                # kinds are 0..3 → branch 1..4; invalid pops take 0.
+                branch = jnp.where(
+                    ev.valid, 1 + jnp.clip(ev.kind, 0, 3), 0
+                )
+                handlers = [
+                    lambda s, e: s,
+                    self._on_dispatch,
+                    self._on_complete,
+                    self._on_retry,
+                    self._on_deadline,
+                ]
+            else:
+                branch = jnp.where(
+                    ev.valid,
+                    jnp.where(ev.kind == KIND_DISPATCH, 1, 2),
+                    0,
+                )
+                handlers = [
+                    lambda s, e: s, self._on_dispatch, self._on_complete
+                ]
+            state = jax.lax.switch(branch, handlers, state, ev)
             return state, None
 
         state, _ = jax.lax.scan(step, state, None, length=self.max_events)
@@ -838,8 +1229,12 @@ class AsyncFedFogSimulator:
     def metrics_for_seed(self, seed):
         """Traceable seed → stacked flush-metric arrays (the sweep hook).
 
-        Includes a ``queue_dropped`` scalar so the sweep layer can raise
-        on queue overflow the same way ``run()`` does.
+        Alongside the per-flush arrays, every engine-health and fault
+        counter rides along as a first-class scalar channel — sweeps and
+        tests assert on ``lost_inflight`` / ``queue_dropped`` / fault
+        conservation straight off the history, no tracker required.
+        (``run_sweep`` still raises on overflow, reading
+        ``queue_dropped`` from the same channel.)
         """
         if self.tap is not None:
             raise RuntimeError(
@@ -848,7 +1243,28 @@ class AsyncFedFogSimulator:
                 "run(), or run_sweep(tracker=...) for per-group events"
             )
         final = self._scan_events(self.init_state(seed))
-        return {**final.m_flush, "queue_dropped": final.queue.dropped}
+        return {
+            **final.m_flush,
+            "queue_dropped": final.queue.dropped,
+            "lost_inflight": final.lost_inflight,
+            "completions": final.completions,
+            "dispatched_total": jnp.sum(final.m_dispatch["num_admitted"]),
+            **self._fault_counters(final),
+        }
+
+    @staticmethod
+    def _fault_counters(state: AsyncState) -> dict[str, Array]:
+        """The fault-layer counter channels (zeros when faults are off) —
+        one schema for ``run()`` histories and sweep channels."""
+        return {
+            "fault_failures": state.fault_failures,
+            "fault_retries": state.fault_retries,
+            "fault_terminal": state.fault_terminal,
+            "fault_lost_deadline": state.fault_lost_deadline,
+            "fault_corrupt": state.fault_corrupt,
+            "fault_skipped": state.fault_skipped,
+            "fog_outages": state.fog_outages,
+        }
 
     # ------------------------------------------------------------------ #
     def run(self, seed: int | None = None) -> dict[str, Any]:
@@ -882,6 +1298,8 @@ class AsyncFedFogSimulator:
         history["num_completions"] = int(n_c)
         history["lost_inflight"] = int(n_lost)
         history["virtual_time_ms"] = float(t_ms)
+        for k, v in jax.device_get(self._fault_counters(final)).items():
+            history[k] = int(v)
         if int(n_lost) > 0:
             # In-flight updates killed by churn are a modeled phenomenon,
             # but losing them silently in a returned dict entry hid real

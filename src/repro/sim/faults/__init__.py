@@ -1,0 +1,32 @@
+"""Fault-injection & recovery layer (serverless failure modes, retry/
+backoff, round deadlines, quorum degradation) — see config.py for the
+fault plan and inject.py for the sync-engine realization; the async
+engine realizes the same plan event-by-event in
+``repro.sim.events.engine``."""
+from repro.sim.faults.config import (
+    FaultConfig,
+    RATE_FIELDS,
+    SCALE_FIELDS,
+    active,
+    backoff_ms,
+    validate,
+)
+from repro.sim.faults.inject import (
+    COUNTER_KEYS,
+    RoundFaultPlan,
+    plan_round,
+    zero_counters,
+)
+
+__all__ = [
+    "FaultConfig",
+    "RATE_FIELDS",
+    "SCALE_FIELDS",
+    "active",
+    "backoff_ms",
+    "validate",
+    "COUNTER_KEYS",
+    "RoundFaultPlan",
+    "plan_round",
+    "zero_counters",
+]

@@ -1,0 +1,143 @@
+"""Declarative fault plan for both simulation engines.
+
+``FaultConfig`` describes serverless failure modes (cold-start timeout,
+mid-update crash, dropped/corrupted payload, transient partitions, fog
+outages) and the recovery policies that answer them (per-client retry
+with exponential backoff, server round deadline with quorum-degraded
+aggregation, fog failover). The split mirrors the sweep layer's
+structural/numeric discipline (`repro.sim.sweep`):
+
+  * **rates and scales are numeric** — a fault-rate grid is pure data
+    and shares one compiled program per structural signature;
+  * **the composite gate, retry cap, deadline None-ness and failover
+    flag are structural** — they pick which program is traced. With the
+    gate off (`active(fc)` False) the engines take their original code
+    paths verbatim, so faults-off is *bitwise* identical to a build
+    without this module.
+
+Failure draws use ``uniform(key) < rate`` so a lifted rate of exactly
+0.0 with the gate on is value-identical to the gate-off program (a
+uniform draw in [0, 1) is never < 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.types import static_any, static_on
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Fault-injection + recovery knobs. All rates are per-invocation
+    (or per-fog / per-dispatch where noted) probabilities in [0, 1].
+
+    Failure classes
+    ---------------
+    timeout_rate:   cold-start timeout — only a COLD invocation (Eq. 4
+                    warm=False) can time out, and only on attempt 0
+                    (retries hit a now-provisioned container).
+    crash_rate:     function crash mid-update; every attempt is exposed.
+    drop_rate:      payload lost in transit; every attempt is exposed.
+    corrupt_rate:   payload arrives but bit-rotted — the update lands
+                    with additive noise of scale ``corrupt_scale``
+                    (reuses the `fl/attacks.py` noise machinery but is
+                    accounted as a *fault*, not an attack).
+    partition_rate: per-dispatch probability of a transient network
+                    partition cutting off a random ``partition_frac`` of
+                    the admitted cohort (their attempt 0 fails; retries
+                    land after the partition heals).
+    fog_outage_rate: per-round/per-dispatch probability that each fog
+                    node goes dark. Without failover the dark fog's
+                    partial Eq. 6 sum is lost (its clients count as
+                    fault_lost); with ``fog_failover`` its clients are
+                    reassigned to the surviving fogs at a
+                    ``failover_latency_ms`` detour cost.
+
+    Recovery policies
+    -----------------
+    max_retries:     per-client retry cap (structural int — it sets the
+                     unrolled attempt count in the sync engine and the
+                     event-chain depth in the async engine). 0 = no
+                     retries: a failed invocation is terminal.
+    backoff_base_ms / backoff_mult: exponential backoff — the wait
+                     before retry attempt a (1-based) is
+                     ``base * mult**(a-1)``.
+    deadline_ms:     server round deadline (None = barrier semantics,
+                     wait for everyone — None-ness is structural).
+                     Updates arriving after the deadline are lost.
+    quorum_frac:     minimum arrived/admitted fraction for the round to
+                     aggregate. Below quorum the round is SKIPPED and
+                     the model carries over bitwise; at/above quorum the
+                     partial cohort aggregates with Eq. 6 reweighting
+                     over the arrivals only.
+    """
+
+    timeout_rate: float = 0.0
+    crash_rate: float = 0.0
+    drop_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    corrupt_scale: float = 0.05
+    partition_rate: float = 0.0
+    partition_frac: float = 0.25
+    fog_outage_rate: float = 0.0
+    fog_failover: bool = False
+    failover_latency_ms: float = 250.0
+    max_retries: int = 0
+    backoff_base_ms: float = 100.0
+    backoff_mult: float = 2.0
+    deadline_ms: float | None = None
+    quorum_frac: float = 0.0
+
+
+# Rate fields whose positivity participates in the composite gate. The
+# sweep layer lifts these to data only when the gate is already active
+# (see repro.sim.sweep._GATED_POSITIVE semantics for "faults." fields).
+RATE_FIELDS = (
+    "timeout_rate", "crash_rate", "drop_rate", "corrupt_rate",
+    "partition_rate", "fog_outage_rate",
+)
+# Numeric-but-not-gating knobs: pure data whenever the gate is active.
+SCALE_FIELDS = (
+    "corrupt_scale", "partition_frac", "failover_latency_ms",
+    "backoff_base_ms", "backoff_mult", "quorum_frac",
+)
+
+
+def active(fc: FaultConfig | None) -> bool:
+    """The ONE structural gate of the fault layer: True iff any failure
+    class can fire or a deadline is set. Tracer-valued rates (lifted by
+    the sweep layer) answer True via ``static_any``."""
+    if fc is None:
+        return False
+    if fc.deadline_ms is not None:
+        return True
+    return static_any(*(getattr(fc, f) for f in RATE_FIELDS))
+
+
+def validate(fc: FaultConfig) -> None:
+    """Host-side sanity check. Tracer-valued numeric fields (a sweep
+    lifted them to data) are skipped — only the structural fields
+    (retry cap, failover flag, deadline None-ness) and concrete values
+    are checkable at trace time."""
+    for f in RATE_FIELDS + ("partition_frac", "quorum_frac"):
+        v = getattr(fc, f)
+        if isinstance(v, (int, float)) and not 0.0 <= float(v) <= 1.0:
+            raise ValueError(f"FaultConfig.{f} must be in [0, 1], got {v}")
+    if int(fc.max_retries) < 0:
+        raise ValueError("FaultConfig.max_retries must be >= 0")
+    d = fc.deadline_ms
+    if d is not None and isinstance(d, (int, float)) and float(d) <= 0:
+        raise ValueError("FaultConfig.deadline_ms must be positive")
+    if not static_on(fc.backoff_mult):
+        raise ValueError("FaultConfig.backoff_mult must be > 0")
+
+
+def backoff_ms(fc: FaultConfig, attempt):
+    """Backoff delay before (1-based) retry ``attempt``:
+    ``base * mult**(attempt-1)``. ``attempt`` may be traced."""
+    import jax.numpy as jnp
+
+    a = jnp.asarray(attempt, jnp.float32)
+    return jnp.asarray(fc.backoff_base_ms, jnp.float32) * jnp.power(
+        jnp.asarray(fc.backoff_mult, jnp.float32), a - 1.0
+    )

@@ -1,0 +1,218 @@
+"""jit/scan-safe fault realization for the SYNC (scanned) engine.
+
+The async engine realizes faults event-by-event (retry events with
+backoff delays, a deadline event that cancels overdue completions —
+see ``repro.sim.events.engine``); the sync engine has no event clock,
+so a round's whole failure/retry history is emulated here as a chain
+of masked attempts whose latency, energy and counters fold into the
+§IV.F totals:
+
+  * attempt a of an admitted client fails on cold-start timeout
+    (attempt 0 + cold container only), crash, drop, or the round's
+    transient partition (attempt 0 only — retries land after the
+    partition heals);
+  * a failed attempt below the retry cap re-runs after exponential
+    backoff; the retried invocation repays the full per-client §IV.F
+    latency and energy (the crashed/timed-out function restarts from
+    scratch — the deliberate, documented approximation);
+  * a fog outage takes its edge clients' arrivals with it (Eq. 6 loses
+    that partial sum) unless failover reroutes them to surviving fogs
+    at a latency detour;
+  * arrivals after the server deadline are lost; below-quorum rounds
+    are skipped (the caller carries the model over bitwise).
+
+Everything is drawn from ONE fault key, so a faulted run is exactly
+reproducible from its seed (the engines derive the key from the same
+per-round chain the other draws use).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim.faults.config import FaultConfig, backoff_ms
+
+Array = jax.Array
+
+# Counter channels every faulted round emits (and every fault-capable
+# engine emits as zeros when the gate is off, so sweep histories keep
+# one schema across fault-on/off grid points).
+COUNTER_KEYS = (
+    "fault_dispatched", "fault_completed", "fault_terminal", "fault_lost",
+    "fault_retries", "fault_corrupt", "fog_outages", "fault_failed_over",
+    "round_skipped",
+)
+
+
+def zero_counters() -> dict[str, Array]:
+    return {k: jnp.zeros((), jnp.int32) for k in COUNTER_KEYS}
+
+
+class RoundFaultPlan(NamedTuple):
+    """Realized faults of one sync round.
+
+    arrived:  (N,) bool — admitted clients whose update reached the
+              server (post outage / deadline, pre quorum).
+    chain_ms: (N,) f32 — per-client wall latency of the whole attempt
+              chain: every attempt's §IV.F latency + backoff waits +
+              failover detour. Zero outside ``admitted``.
+    attempts: (N,) f32 — invocation attempts launched (energy multiplier
+              for the §IV.F energy totals). Zero outside ``admitted``.
+    corrupt:  (N,) bool — arrived but bit-rotted (additive-noise payload).
+    skip:     () bool — below quorum: the caller must carry the model
+              over bitwise and mark the round skipped.
+    round_ms: () f32 — server-side round latency: max attempt chain over
+              the admitted cohort, clamped to the deadline when set.
+    counters: dict of () int32 — the ``COUNTER_KEYS`` channels.
+              Conservation: dispatched = completed + terminal + lost.
+    """
+
+    arrived: Array
+    chain_ms: Array
+    attempts: Array
+    corrupt: Array
+    skip: Array
+    round_ms: Array
+    counters: dict
+
+
+def attempt_failures(
+    fc: FaultConfig, key: Array, alive: Array, cold: Array,
+    part_cut: Array, attempt: int,
+) -> Array:
+    """(N,) bool — which still-alive invocations fail on this attempt."""
+    k_t, k_c, k_d = jax.random.split(key, 3)
+    n = alive.shape[0]
+    u_t = jax.random.uniform(k_t, (n,))
+    u_c = jax.random.uniform(k_c, (n,))
+    u_d = jax.random.uniform(k_d, (n,))
+    fail = (u_c < jnp.asarray(fc.crash_rate, jnp.float32)) | (
+        u_d < jnp.asarray(fc.drop_rate, jnp.float32)
+    )
+    if attempt == 0:
+        fail = fail | (
+            cold & (u_t < jnp.asarray(fc.timeout_rate, jnp.float32))
+        )
+        fail = fail | part_cut
+    return alive & fail
+
+
+def plan_round(
+    fc: FaultConfig,
+    key: Array,
+    admitted: Array,  # (N,) bool — post-scheduler cohort
+    cold: Array,  # (N,) bool — invocation hits a cold container
+    per_client_ms: Array,  # (N,) f32 — one attempt's §IV.F latency
+    fog_nodes: int = 1,
+) -> RoundFaultPlan:
+    """Realize one round's faults + recovery for the sync engine."""
+    n = admitted.shape[0]
+    i32 = jnp.int32
+    k_att, k_part, k_pfrac, k_fog, k_corrupt = jax.random.split(key, 5)
+
+    # Transient partition: one scalar gate per round × a random subset.
+    part_on = jax.random.uniform(k_part, ()) < jnp.asarray(
+        fc.partition_rate, jnp.float32
+    )
+    part_cut = part_on & (
+        jax.random.uniform(k_pfrac, (n,))
+        < jnp.asarray(fc.partition_frac, jnp.float32)
+    )
+
+    # Statically-unrolled retry chain: attempt 0 + max_retries retries.
+    retries_cap = int(fc.max_retries)
+    att_keys = jax.random.split(k_att, retries_cap + 1)
+    alive = admitted
+    arrived = jnp.zeros((n,), bool)
+    chain = jnp.zeros((n,), jnp.float32)
+    attempts = jnp.zeros((n,), jnp.float32)
+    n_retries = jnp.zeros((), i32)
+    terminal = jnp.zeros((n,), bool)
+    for a in range(retries_cap + 1):
+        fail = attempt_failures(fc, att_keys[a], alive, cold, part_cut, a)
+        chain = chain + jnp.where(alive, per_client_ms, 0.0)
+        attempts = attempts + alive.astype(jnp.float32)
+        arrived = arrived | (alive & ~fail)
+        if a < retries_cap:
+            chain = chain + jnp.where(fail, backoff_ms(fc, a + 1), 0.0)
+            n_retries = n_retries + jnp.sum(fail).astype(i32)
+            alive = fail
+        else:
+            terminal = fail
+            alive = jnp.zeros((n,), bool)
+
+    # Fog outage: each fog node goes dark independently; its edge block
+    # (fl.fog.fog_assignment's contiguous slices) loses or reroutes.
+    n_outages = jnp.zeros((), i32)
+    n_failed_over = jnp.zeros((), i32)
+    n_lost = jnp.zeros((), i32)
+    fogs = max(int(fog_nodes), 1)
+    outage = jax.random.uniform(k_fog, (fogs,)) < jnp.asarray(
+        fc.fog_outage_rate, jnp.float32
+    )
+    if fogs > 1:
+        from repro.fl.fog import fog_assignment  # lazy: avoids fl<->sim cycle
+
+        owner = fog_assignment(n, fogs)
+    else:
+        outage = jnp.zeros((1,), bool)  # a single tier IS the cloud uplink
+        owner = jnp.zeros((n,), i32)
+    n_outages = jnp.sum(outage).astype(i32)
+    dark = outage[owner] & arrived
+    if bool(fc.fog_failover):
+        # Survivors absorb the dark fog's clients at a latency detour.
+        chain = chain + jnp.where(
+            dark, jnp.asarray(fc.failover_latency_ms, jnp.float32), 0.0
+        )
+        n_failed_over = jnp.sum(dark).astype(i32)
+    else:
+        arrived = arrived & ~dark
+        n_lost = n_lost + jnp.sum(dark).astype(i32)
+
+    # Server deadline: arrivals after it are lost; the round itself can
+    # never run longer than the deadline.
+    round_ms = jnp.max(jnp.where(admitted, chain, 0.0))
+    if fc.deadline_ms is not None:
+        deadline = jnp.asarray(fc.deadline_ms, jnp.float32)
+        late = arrived & (chain > deadline)
+        arrived = arrived & ~late
+        n_lost = n_lost + jnp.sum(late).astype(i32)
+        round_ms = jnp.minimum(round_ms, deadline)
+
+    # Corrupted-but-arrived payloads (noise applied by the caller).
+    corrupt = arrived & (
+        jax.random.uniform(k_corrupt, (n,))
+        < jnp.asarray(fc.corrupt_rate, jnp.float32)
+    )
+
+    # Quorum: aggregate the partial cohort iff enough of it arrived.
+    # An empty arrival set always skips — Eq. 6 has no denominator.
+    n_adm = jnp.sum(admitted).astype(i32)
+    n_arr = jnp.sum(arrived).astype(i32)
+    quorum = jnp.asarray(fc.quorum_frac, jnp.float32) * n_adm.astype(
+        jnp.float32
+    )
+    skip = (n_arr.astype(jnp.float32) < quorum) | ((n_arr == 0) & (n_adm > 0))
+
+    counters = {
+        "fault_dispatched": n_adm,
+        "fault_completed": n_arr,
+        "fault_terminal": jnp.sum(terminal).astype(i32),
+        "fault_lost": n_lost,
+        "fault_retries": n_retries,
+        "fault_corrupt": jnp.sum(corrupt).astype(i32),
+        "fog_outages": n_outages,
+        "fault_failed_over": n_failed_over,
+        "round_skipped": skip.astype(i32),
+    }
+    return RoundFaultPlan(
+        arrived=arrived,
+        chain_ms=jnp.where(admitted, chain, 0.0),
+        attempts=attempts,
+        corrupt=corrupt,
+        skip=skip,
+        round_ms=round_ms,
+        counters=counters,
+    )

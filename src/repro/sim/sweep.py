@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.core.scheduler import SchedulerConfig
 from repro.fl.simulator import FedFogSimulator, SimulatorConfig
+from repro.sim.faults import config as faults_config
 
 
 def _grid(
@@ -146,6 +147,23 @@ def _factor_sim(cfg: SimulatorConfig):
     repl["scheduler"] = dataclasses.replace(
         sched, **{f: _LIFTED for f in _SCHED_NUMERIC}
     )
+    fc = cfg.faults
+    if fc is not None and faults_config.active(fc):
+        # Only an ACTIVE fault layer lifts: the composite gate itself is
+        # structural (a faults-off point keeps its verbatim program), but
+        # once the gate is on every rate/scale — including exact zeros —
+        # is pure data, so a fault-rate grid shares one program.
+        fc_repl: dict[str, Any] = {}
+        for f in faults_config.RATE_FIELDS + faults_config.SCALE_FIELDS:
+            v = getattr(fc, f)
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                num[f"faults.{f}"] = float(v)
+                fc_repl[f] = _LIFTED
+        d = fc.deadline_ms
+        if d is not None and isinstance(d, (int, float)):
+            num["faults.deadline_ms"] = float(d)  # None-ness is structural
+            fc_repl["deadline_ms"] = _LIFTED
+        repl["faults"] = dataclasses.replace(fc, **fc_repl)
     return dataclasses.replace(cfg, **repl), num
 
 
@@ -181,6 +199,12 @@ def _apply_numeric(cfg: SimulatorConfig, num: Mapping[str, Any]) -> SimulatorCon
     }
     if sched_over:
         plain["scheduler"] = dataclasses.replace(cfg.scheduler, **sched_over)
+    faults_over = {
+        k.split(".", 1)[1]: v for k, v in num.items()
+        if k.startswith("faults.")
+    }
+    if faults_over:
+        plain["faults"] = dataclasses.replace(cfg.faults, **faults_over)
     return dataclasses.replace(cfg, **plain)
 
 
@@ -764,9 +788,11 @@ def run_sweep(
 
     if engine == "async":
         # Surface queue overflow the same way AsyncFedFogSimulator.run()
-        # does — silent drops would corrupt the flush histories.
+        # does — silent drops would corrupt the flush histories. The
+        # channel stays IN the history (alongside lost_inflight and the
+        # fault counters) so engine health is a first-class sweep output.
         for overrides, h in zip(grid, stacked_per_g):
-            dropped = np.asarray(h.pop("queue_dropped"))
+            dropped = np.asarray(h["queue_dropped"])
             if dropped.any():
                 raise RuntimeError(
                     f"async event queue overflowed for grid point "

@@ -161,6 +161,67 @@ def test_queue_cancel_events():
     assert not bool(ev2.valid)
 
 
+def _check_cancel_then_pop(seed: int, kill_kind: int) -> None:
+    """Batch-push + cancel_events under jit vs a heapq oracle: a
+    cancel-then-drain sequence never pops a cancelled (client, kind)
+    event, and the survivors pop in exactly the oracle's order."""
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(1, 25))
+    times = rng.uniform(0, 100, n).astype(np.float32)
+    clients = rng.randint(0, 8, n).astype(np.int32)
+    kinds = rng.randint(0, 2, n).astype(np.int32)
+    kill = rng.rand(8) < 0.4
+
+    @jax.jit
+    def run(times, clients, kinds, kill):
+        q = make_queue(32)
+        q = push_events(
+            q, times, clients, kinds, jnp.zeros(n), jnp.ones(n, bool)
+        )
+        q = cancel_events(q, kill, kill_kind)
+
+        def body(q, _):
+            ev, q = pop_event(q)
+            return q, (ev.time, ev.client, ev.kind, ev.valid)
+
+        _, out = jax.lax.scan(body, q, None, length=32)
+        return out
+
+    t, c, k, v = jax.device_get(
+        run(
+            jnp.asarray(times), jnp.asarray(clients),
+            jnp.asarray(kinds), jnp.asarray(kill),
+        )
+    )
+    cancelled = kill[clients] & (kinds == kill_kind)
+    # oracle: surviving events in (time, push-order) heap order
+    heap = [
+        (times[i], i, clients[i], kinds[i])
+        for i in range(n)
+        if not cancelled[i]
+    ]
+    heapq.heapify(heap)
+    n_live = len(heap)
+    assert int(v.sum()) == n_live, "cancel freed the wrong slot count"
+    for j in range(n_live):
+        t_ref, _, c_ref, k_ref = heapq.heappop(heap)
+        assert v[j]
+        assert not (kill[c[j]] and k[j] == kill_kind), (
+            f"popped a cancelled event at pop {j}"
+        )
+        np.testing.assert_allclose(t[j], t_ref, rtol=1e-6)
+        assert (c[j], k[j]) == (c_ref, k_ref)
+    assert not v[n_live:].any()
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("kill_kind", (0, 1))
+def test_cancel_then_pop_matches_heapq_oracle(seed, kill_kind):
+    """Fixed-seed slice of the cancel/pop property — always runs; the
+    hypothesis variant below widens the search when the dep is present."""
+    _check_cancel_then_pop(seed, kill_kind)
+
+
 # --------------------------------------------------------------------- #
 # (b) sync recovery: cohort-mode async == scan-compiled sync engine
 # --------------------------------------------------------------------- #
@@ -490,6 +551,14 @@ if HAVE_HYPOTHESIS:
         w0, _ = staleness_weights(mask, sizes, stal, a)
         w1, _ = staleness_weights(mask, sizes, stal.at[i].add(5.0), a)
         assert float(w1[i]) <= float(w0[i]) + 1e-6
+
+    @given(
+        seed=st.integers(0, 2**16),
+        kill_kind=st.integers(0, 1),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_hyp_cancel_then_pop_never_yields_cancelled(seed, kill_kind):
+        _check_cancel_then_pop(seed, kill_kind)
 
 
 # --------------------------------------------------------------------- #
