@@ -36,6 +36,7 @@ SUITES = [
     "async_vs_sync",  # event-driven engine: async rules vs round barrier
     "robustness_faults",  # fault & recovery: crash grid, deadline, failover
     "simulator_engine",  # scanned/sweep/async vs looped engine throughput
+    "serving",  # continuous batching vs sequential per-request oracle
     "dryrun_sharding",  # dist layer: compile time + collective census
     "kernels_bench",
     "roofline",  # §Roofline (reads results/dryrun)

@@ -1,0 +1,129 @@
+"""Serving engines: continuous batching vs the sequential per-request oracle.
+
+One Poisson trace (offered load > 1 request per decode window, so slots
+stay saturated) served three ways on the same reduced model:
+
+  sequential      : the per-request oracle — prefill + batch-1 decode to
+                    completion, one request at a time (the static
+                    baseline every serving stack is measured against).
+  continuous      : the slot-scheduled engine, dense-gather attention —
+                    the token-for-token-exact path. The derived columns
+                    carry the acceptance gate: ``speedup`` (wall
+                    tokens/sec over sequential, expected >= 2x at quick
+                    scale) and ``exact`` (1 iff every request's tokens
+                    match the oracle bitwise).
+  continuous_paged: same engine through the Pallas paged flash-decode
+                    kernel (interpret mode off-TPU) — prices the
+                    kernel's dispatch overhead and checks greedy-token
+                    agreement with the oracle.
+
+``us_per_call`` is wall microseconds per generated token (lower is
+better); latency percentiles / goodput / energy-per-token ride in
+``derived`` (virtual-clock §IV.F accounting — see docs/EXPERIMENTS.md
+§Serving). Both engines keep tokens device-resident with ONE terminal
+sync, so the comparison measures scheduling, not host transfers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, SCALE
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve import (
+    ContinuousBatchingEngine,
+    EngineConfig,
+    SequentialOracle,
+    TraceConfig,
+    make_trace,
+)
+
+ARCH = "llama3.2-1b"
+SHAPES = {
+    "quick": dict(requests=24, slots=8, prompt_len=16, page_size=8,
+                  min_gen=6, max_gen=12, rate=200.0),
+    "default": dict(requests=48, slots=8, prompt_len=16, page_size=8,
+                    min_gen=8, max_gen=16, rate=200.0),
+    "full": dict(requests=96, slots=16, prompt_len=32, page_size=16,
+                 min_gen=8, max_gen=24, rate=400.0),
+}
+
+
+def _serve_timed(server, trace):
+    """Median-of-3 wall time (the loop is host-driven; first call per
+    engine warms numpy<->device conversion paths)."""
+    reps, walls = [], []
+    for _ in range(3):
+        t0 = time.time()
+        rep = server.serve(trace)
+        walls.append(time.time() - t0)
+        reps.append(rep)
+    return reps[int(np.argsort(walls)[1])], float(np.median(walls))
+
+
+def run() -> list[Row]:
+    shape = SHAPES[SCALE]
+    cfg = get_reduced(ARCH, loss_chunk=0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        slots=shape["slots"], page_size=shape["page_size"],
+        prompt_len=shape["prompt_len"], max_gen=shape["max_gen"],
+        max_requests=shape["requests"],
+    )
+    trace = make_trace(
+        jax.random.PRNGKey(1),
+        TraceConfig(
+            n_requests=shape["requests"], rate_per_s=shape["rate"],
+            prompt_len=shape["prompt_len"], min_gen=shape["min_gen"],
+            max_gen=shape["max_gen"], slo_ms=8000.0,
+        ),
+        cfg,
+    )
+
+    rows = []
+    oracle = SequentialOracle(model, params, ecfg)
+    ref, wall = _serve_timed(oracle, trace)
+    seq_tps = ref.tokens_generated / wall
+    rows.append(Row(
+        "serving/sequential",
+        wall / ref.tokens_generated * 1e6,
+        f"tok_per_s={seq_tps:.0f};p95_ms={ref.percentiles['p95']:.0f};"
+        f"energy_per_token_j={ref.energy_per_token_j:.3e};"
+        f"virtual_ms={ref.virtual_ms:.0f}",
+    ))
+
+    for attn in ("dense", "paged"):
+        import dataclasses
+
+        eng = ContinuousBatchingEngine(
+            model, params, dataclasses.replace(ecfg, attn=attn)
+        )
+        rep, wall = _serve_timed(eng, trace)
+        tps = rep.tokens_generated / wall
+        match = sum(
+            rep.tokens_for(r) == ref.tokens_for(r)
+            for r in range(trace.n_requests)
+        )
+        pct = rep.percentiles
+        name = "continuous" if attn == "dense" else "continuous_paged"
+        # Dense must match the oracle bitwise (exact=1 is the acceptance
+        # gate); the paged kernel recomputes the softmax online in fp32,
+        # so near-tie greedy picks can flip — report its match fraction.
+        exact = int(match == trace.n_requests)
+        rows.append(Row(
+            f"serving/{name}",
+            wall / rep.tokens_generated * 1e6,
+            f"speedup_vs_sequential={tps / seq_tps:.2f};exact={exact};"
+            f"req_match={match}/{trace.n_requests};"
+            f"tok_per_s={tps:.0f};p50_ms={pct['p50']:.0f};"
+            f"p95_ms={pct['p95']:.0f};p99_ms={pct['p99']:.0f};"
+            f"goodput_rps={rep.goodput_rps:.2f};"
+            f"energy_per_token_j={rep.energy_per_token_j:.3e};"
+            f"cold_starts={rep.cold_starts};"
+            f"n_compiles={sum(rep.n_compiles.values())}",
+        ))
+    return rows

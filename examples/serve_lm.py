@@ -1,7 +1,17 @@
-"""Serving example: batched prefill + decode with any assigned --arch.
+"""Serving example: static batch or continuous batching with any --arch.
 
     PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b
     PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b --gen 32
+
+    # Continuous batching: Poisson arrivals at 40 req/s into 8 slots,
+    # 2s latency SLO, slot-level eviction/refill on ONE decode executable.
+    PYTHONPATH=src python examples/serve_lm.py --arch llama3.2-1b \
+        --engine continuous --requests 32 --rate 40 --slots 8 --slo-ms 2000
+
+    # Same trace through the Pallas paged flash-decode kernel, streaming
+    # per-step metrics through the obs tracker stack.
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b \
+        --engine continuous --attn paged --track jsonl:/tmp/serve.jsonl
 
 Runs the reduced (smoke-scale) config on CPU; the same driver serves full
 configs on a TPU pod via launch/serve.py --scale full (sequence-sharded KV

@@ -69,7 +69,45 @@ echo "=== fog-tier sharded selftest (8 fake devices, pod x client x zero) ==="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m repro.kernels.delta_pipeline.fog_selftest --devices 8
 
-echo "=== simulator perf gate (looped/scanned/sweep/async vs BENCH_simulator.json) ==="
+echo "=== serving smoke (continuous batching: short trace, one decode executable) ==="
+# A short Poisson trace through the slot-scheduled engine must complete
+# every request, hold the slot-conservation invariant, and do it all on
+# exactly TWO AOT executables (admit, decode) — the one-executable
+# contract as slots churn mid-flight.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import jax
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve import (
+    ContinuousBatchingEngine, EngineConfig, TraceConfig, make_trace,
+)
+
+cfg = get_reduced("llama3.2-1b", loss_chunk=0)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+eng = ContinuousBatchingEngine(
+    model, params,
+    EngineConfig(slots=4, page_size=4, prompt_len=8, max_gen=6,
+                 max_requests=16),
+)
+trace = make_trace(
+    jax.random.PRNGKey(1),
+    TraceConfig(n_requests=12, rate_per_s=300.0, prompt_len=8,
+                min_gen=2, max_gen=6, slo_ms=8000.0),
+    cfg,
+)
+rep = eng.serve(trace)
+assert rep.completed == trace.n_requests, rep.counters
+assert rep.n_compiles == {"admit": 1, "decode": 1}, rep.n_compiles
+c = rep.counters  # conservation() already asserted inside serve()
+assert c["arrived"] == c["completed"] + c["rejected"]
+print(f"serving smoke: {rep.completed}/{rep.n_requests} completed, "
+      f"{rep.tokens_generated} tokens in {rep.decode_steps} decode steps "
+      f"on {sum(rep.n_compiles.values())} executables "
+      f"(p95={rep.percentiles['p95']:.0f}ms)")
+PY
+
+echo "=== simulator perf gate (engines + serving vs BENCH_simulator.json) ==="
 # Gate-only against the committed baseline (exit non-zero on a >25%
 # per-row regression). The baseline is NOT rewritten on ordinary runs —
 # re-basing every pass would let sub-threshold regressions compound
@@ -92,7 +130,7 @@ CACHE_DIR="${REPRO_COMPILE_CACHE_DIR:-$(mktemp -d)}"
 HIST_FILE="$(mktemp)"
 REPRO_BENCH_HISTORY="$HIST_FILE" REPRO_COMPILE_CACHE_DIR="$CACHE_DIR" \
   REPRO_BENCH_SCALE=quick PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python -m benchmarks.run simulator_engine $BENCH_ARGS
+  python -m benchmarks.run simulator_engine serving $BENCH_ARGS
 
 echo "=== warm-start pass (fresh process, persistent cache at $CACHE_DIR) ==="
 WARM_LOG="$(mktemp)"

@@ -1,0 +1,10 @@
+"""Paged flash-decode attention for the continuous-batching slot batch.
+
+``ops.paged_attention`` is the public entry point; ``ref.paged_attention_ref``
+is the dense-gather oracle (page-table gather + ``models.layers.
+attention_decode``) every kernel change is tested against.
+"""
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+__all__ = ["paged_attention", "paged_attention_ref"]

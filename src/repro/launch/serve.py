@@ -1,4 +1,4 @@
-"""Serving driver: prefill + batched decode with any --arch config.
+"""Serving driver: static batch or continuous batching with any --arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
         --scale tiny --batch 4 --prompt-len 32 --gen 16
@@ -13,6 +13,22 @@ production mesh; on CPU back it with fake devices:
 
     python -m repro.launch.serve --scale full --devices 8 --reduced \
         --batch 8 --prompt-len 32 --gen 8
+
+Engines:
+
+  * ``--engine static`` (default) — one fixed batch, prefill + N decode
+    steps. Greedy tokens accumulate in a device-resident buffer inside
+    the compiled step program; the host syncs ONCE at the end. This path
+    is the serving oracle.
+  * ``--engine continuous`` — the slot-scheduled continuous-batching
+    engine (``repro.serve``): Poisson/diurnal arrivals off the DES event
+    queue, mid-flight slot eviction/refill on two AOT executables,
+    §IV.F latency/energy/cold-start accounting, and optionally the
+    Pallas paged flash-decode kernel (``--attn paged``). Reproduces the
+    sequential per-request decode token-for-token (``--attn dense``).
+
+``--track jsonl:PATH --track-every K`` streams per-step serving metrics
+through the shared ``repro.obs`` tracker stack on either engine.
 """
 from __future__ import annotations
 
@@ -25,6 +41,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--scale", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--engine", default="static",
+                    choices=["static", "continuous"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -36,6 +54,24 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="with --scale full: reduced config on the real "
                          "mesh plan (CPU-executable sharded decode)")
+    # Continuous-batching knobs (--engine continuous).
+    ap.add_argument("--requests", type=int, default=16,
+                    help="trace length for --engine continuous")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean request arrival rate (per virtual second)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="slot count (default: --batch)")
+    ap.add_argument("--slo-ms", type=float, default=4000.0,
+                    help="per-request latency SLO (virtual ms)")
+    ap.add_argument("--attn", default="dense", choices=["dense", "paged"],
+                    help="slot attention: dense gather (oracle-exact) or "
+                         "the Pallas paged flash-decode kernel")
+    ap.add_argument("--policy", default="fifo", choices=["fifo", "edf"])
+    ap.add_argument("--page-size", type=int, default=16)
+    # Observability (either engine).
+    ap.add_argument("--track", default=None,
+                    help="tracker spec, e.g. jsonl:/tmp/serve.jsonl")
+    ap.add_argument("--track-every", type=int, default=1)
     args = ap.parse_args(argv)
 
     if args.scale == "full" and args.devices:
@@ -58,6 +94,15 @@ def main(argv=None):
     )
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
+
+    tap = None
+    if args.track:
+        from repro.obs import MetricTap, tracker_from_spec
+
+        tap = MetricTap(
+            tracker_from_spec(args.track), every=args.track_every,
+            const={"arch": cfg.name}, channel="serve",
+        )
 
     rules = None
     runtime = Runtime()
@@ -84,6 +129,16 @@ def main(argv=None):
         print(f"[serve] mesh plan: {dict(mesh_shape)}")
 
     params = model.init(key)
+    if rules is not None:
+        shapes, laxes = model.param_shapes(), model.param_axes()
+        # Decode-path weights: model-parallel only, no ZeRO sharding.
+        p_sh = rules.shardings(
+            rules.param_specs(shapes, laxes, stacked=False, fsdp=False)
+        )
+        params = jax.device_put(params, p_sh)
+
+    if args.engine == "continuous":
+        return _run_continuous(args, cfg, model, params, rules, runtime, tap)
 
     cache_len = args.prompt_len + args.gen
     batch = {
@@ -101,39 +156,39 @@ def main(argv=None):
             key, (args.batch, args.prompt_len, cfg.d_model)
         ).astype(cfg.compute_dtype)
 
+    def prefill_fn(p, b, buf):
+        logits, cache = model.prefill(p, b, cache_len=cache_len,
+                                      runtime=runtime)
+        toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, toks[:, None], buf.at[:, 0].set(toks)
+
+    def step_fn(p, cache, toks, buf, i):
+        """One decode step + greedy pick + device-buffer write: tokens
+        never leave the device until the single terminal sync."""
+        logits, cache = model.decode_step(p, cache, toks, runtime)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, nxt[:, None], buf.at[:, i].set(nxt)
+
+    gen_buf = jnp.zeros((args.batch, args.gen), jnp.int32)
     if rules is not None:
         from jax.sharding import NamedSharding
 
-        shapes, laxes = model.param_shapes(), model.param_axes()
-        # Decode-path weights: model-parallel only, no ZeRO sharding.
-        p_sh = rules.shardings(
-            rules.param_specs(shapes, laxes, stacked=False, fsdp=False)
-        )
-        params = jax.device_put(params, p_sh)
         b_sh = {
             k: NamedSharding(rules.mesh, v)
             for k, v in rules.serve_batch_specs(batch).items()
         }
         batch = {k: jax.device_put(v, b_sh[k]) for k, v in batch.items()}
-        prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, cache_len=cache_len,
-                                       runtime=runtime),
-            in_shardings=(p_sh, b_sh),
-        )
-        decode = jax.jit(
-            lambda p, c, t: model.decode_step(p, c, t, runtime),
-            donate_argnums=(1,),
-        )
+        prefill = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh, None))
+        decode = jax.jit(step_fn, donate_argnums=(1, 3))
     else:
-        prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
-        decode = jax.jit(model.decode_step)
+        prefill = jax.jit(prefill_fn)
+        decode = jax.jit(step_fn, donate_argnums=(1, 3))
 
     t0 = time.time()
-    logits, cache = prefill(params, batch)
-    logits.block_until_ready()
+    cache, toks, gen_buf = prefill(params, batch, gen_buf)
+    toks.block_until_ready()
     t_prefill = time.time() - t0
 
-    toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     if rules is not None:
         # Pin the cache to the rules' layout (batch- or sequence-parallel),
         # AOT-compile ONE decode program against it, and report its
@@ -143,25 +198,92 @@ def main(argv=None):
         cache = jax.device_put(
             cache, rules.shardings(rules.cache_specs(cache))
         )
-        decode = decode.lower(params, cache, toks).compile()
+        decode = decode.lower(
+            params, cache, toks, gen_buf,
+            jax.ShapeDtypeStruct((), jnp.int32),
+        ).compile()
         stats = analyze_hlo(decode.as_text()).collectives
         print(f"[serve] decode collectives: {stats.count_by_kind} "
               f"total={stats.total_bytes:.2e} B")
 
-    generated = [toks]
     t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params, cache, toks)
-        toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        generated.append(toks)
-    jax.block_until_ready(generated[-1])
+    for i in range(1, args.gen):
+        cache, toks, gen_buf = decode(params, cache, toks, gen_buf,
+                                      jnp.int32(i))
+        if tap is not None:
+            tap.host_log({"step": i, "batch": args.batch}, step=i)
+    out = jax.block_until_ready(gen_buf)  # the ONE device->host sync
     t_decode = time.time() - t0
 
-    out = jnp.concatenate(generated, axis=1)
     print(f"arch={cfg.name} prefill={t_prefill*1e3:.1f}ms "
           f"decode={t_decode / max(args.gen - 1, 1) * 1e3:.2f}ms/tok")
     print("generated token ids (first row):", out[0].tolist())
     return out
+
+
+def _run_continuous(args, cfg, model, params, rules, runtime, tap):
+    import jax
+
+    from repro.serve import (
+        ContinuousBatchingEngine,
+        EngineConfig,
+        TraceConfig,
+        make_trace,
+    )
+
+    slots = args.slots or args.batch
+    ecfg = EngineConfig(
+        slots=slots,
+        page_size=args.page_size,
+        prompt_len=args.prompt_len,
+        max_gen=args.gen,
+        max_requests=max(args.requests, 1),
+        attn=args.attn,
+        policy=args.policy,
+    )
+    engine = ContinuousBatchingEngine(
+        model, params, ecfg, runtime=runtime, tap=tap
+    )
+    if rules is not None:
+        from repro.dist import analyze_hlo
+
+        stats = analyze_hlo(engine.decode_hlo_text()).collectives
+        print(f"[serve] decode collectives: {stats.count_by_kind} "
+              f"total={stats.total_bytes:.2e} B")
+
+    trace = make_trace(
+        jax.random.PRNGKey(args.seed + 1),
+        TraceConfig(
+            n_requests=args.requests,
+            rate_per_s=args.rate,
+            slo_ms=args.slo_ms,
+            prompt_len=args.prompt_len,
+            min_gen=max(args.gen // 2, 1),
+            max_gen=args.gen,
+        ),
+        cfg,
+    )
+    rep = engine.serve(trace)
+    pct = rep.percentiles
+    print(
+        f"arch={cfg.name} engine=continuous slots={slots} attn={args.attn} "
+        f"requests={rep.n_requests} completed={rep.completed} "
+        f"rejected={rep.rejected}"
+    )
+    print(
+        f"[serve] latency p50={pct['p50']:.0f}ms p95={pct['p95']:.0f}ms "
+        f"p99={pct['p99']:.0f}ms slo_violations={rep.slo_violations} "
+        f"goodput={rep.goodput_rps:.2f} req/s"
+    )
+    print(
+        f"[serve] tokens={rep.tokens_generated} "
+        f"decode_steps={rep.decode_steps} cold_starts={rep.cold_starts} "
+        f"energy_per_token={rep.energy_per_token_j:.2e} J "
+        f"throughput={rep.tokens_per_wall_s:.0f} tok/s(wall) "
+        f"n_compiles={rep.n_compiles}"
+    )
+    print("generated token ids (first request):", rep.tokens_for(0))
+    return rep
 
 
 if __name__ == "__main__":

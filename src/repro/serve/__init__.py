@@ -1,0 +1,41 @@
+"""Continuous-batching serving engine over the paged decode state.
+
+Layering:
+
+    arrivals.py  — Poisson/diurnal request traces as KIND_ARRIVE events
+                   on the shared ``sim.events`` queue.
+    scheduler.py — host control plane: slot scheduler (fifo/edf, slot
+                   conservation counters) + physical page allocator.
+    paged.py     — device state & compiled programs: paged KV pool,
+                   admission (prefill -> page scatter), the ONE batched
+                   decode step (dense gather or Pallas paged kernel).
+    costs.py     — §IV.F virtual latency/energy on ``RoundCostModel``.
+    engine.py    — ``ContinuousBatchingEngine``: the prefill -> insert ->
+                   generate loop, two AOT executables per structure.
+    oracle.py    — ``SequentialOracle``: per-request reference the engine
+                   must reproduce token-for-token (dense path).
+    sweep.py     — arrival-rate grids under the compile-once discipline.
+"""
+from repro.serve.arrivals import RequestTrace, TraceConfig, make_trace
+from repro.serve.costs import ServeCostModel
+from repro.serve.engine import ContinuousBatchingEngine, EngineConfig, ServeReport
+from repro.serve.oracle import SequentialOracle
+from repro.serve.paged import PagePlan
+from repro.serve.scheduler import PageAllocator, SlotScheduler
+from repro.serve.sweep import SweepServeResult, sweep_rates
+
+__all__ = [
+    "ContinuousBatchingEngine",
+    "EngineConfig",
+    "PageAllocator",
+    "PagePlan",
+    "RequestTrace",
+    "SequentialOracle",
+    "ServeCostModel",
+    "ServeReport",
+    "SlotScheduler",
+    "SweepServeResult",
+    "TraceConfig",
+    "make_trace",
+    "sweep_rates",
+]

@@ -1,0 +1,118 @@
+"""Request arrival process for the serving engine, on the DES event queue.
+
+Arrivals are a (possibly diurnally-modulated) Poisson process: the
+inter-arrival gap after time ``t`` is Exp(rate(t)) with
+
+    rate(t) = rate_per_s * (1 + diurnal_amp * sin(2π t / period))
+
+— the same sinusoidal availability shape the population-scale cohort
+sampler uses for client churn, now driving inference traffic. Each
+request gets a prompt, a generation length and an SLO deadline, and is
+pushed into the shared ``sim.events`` queue as a ``KIND_ARRIVE`` event
+whose payload is the request id. The engine pops arrivals against its
+virtual clock exactly like the async FL engine pops completions — one
+queue implementation serves both training and serving traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.events.queue import KIND_ARRIVE, EventQueue, make_queue, push_events
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    n_requests: int = 32
+    rate_per_s: float = 20.0  # mean arrival rate (virtual seconds)
+    diurnal_amp: float = 0.0  # 0..1 sinusoidal rate modulation
+    diurnal_period_ms: float = 60_000.0
+    slo_ms: float = 4_000.0  # per-request completion deadline
+    prompt_len: int = 16
+    min_gen: int = 4
+    max_gen: int = 16  # inclusive; also sizes the slot span
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestTrace:
+    """One materialized arrival trace (host metadata + device prompts)."""
+
+    arrival_ms: np.ndarray  # (R,) f64, nondecreasing
+    gen_len: np.ndarray  # (R,) i64 in [min_gen, max_gen]
+    slo_ms: float
+    prompts: np.ndarray  # (R, prompt_len) i32, host-resident: per-request
+    # rows feed compiled admit/prefill calls, so slicing must be a cheap
+    # numpy view rather than an eager device gather in the serve loop
+    patch_embeds: np.ndarray | None  # (R, n_patches, d) for VLM archs
+    queue: EventQueue  # KIND_ARRIVE events, payload = request id
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.arrival_ms.shape[0])
+
+    def deadline_ms(self, req: int) -> float:
+        return float(self.arrival_ms[req]) + self.slo_ms
+
+
+def _arrival_times(u: np.ndarray, cfg: TraceConfig) -> np.ndarray:
+    """Inverse-CDF Poisson thinning with a time-varying rate."""
+    t = 0.0
+    out = np.empty(len(u), np.float64)
+    for i, ui in enumerate(u):
+        rate = cfg.rate_per_s * (
+            1.0
+            + cfg.diurnal_amp
+            * math.sin(2.0 * math.pi * t / cfg.diurnal_period_ms * 1e3)
+        )
+        rate = max(rate, 1e-6)
+        t += -math.log(max(1.0 - ui, 1e-12)) / rate * 1e3  # gap in ms
+        out[i] = t
+    return out
+
+
+def make_trace(
+    key: jax.Array, cfg: TraceConfig, model_cfg=None, n_patches: int = 8
+) -> RequestTrace:
+    """Sample a reproducible request trace for ``model_cfg`` (or a generic
+    256-vocab one when no model config is given)."""
+    k_arr, k_gen, k_tok, k_img = jax.random.split(key, 4)
+    r = cfg.n_requests
+    u = np.asarray(jax.random.uniform(k_arr, (r,)), np.float64)
+    arrival = _arrival_times(u, cfg)
+    gen = np.asarray(
+        jax.random.randint(k_gen, (r,), cfg.min_gen, cfg.max_gen + 1)
+    ).astype(np.int64)
+
+    vocab = int(model_cfg.vocab_size) if model_cfg is not None else 256
+    prompts = np.asarray(
+        jax.random.randint(k_tok, (r, cfg.prompt_len), 0, vocab, dtype=jnp.int32)
+    )
+    patch_embeds = None
+    if model_cfg is not None and getattr(model_cfg.family, "name", "") == "VLM":
+        patch_embeds = np.asarray(
+            jax.random.normal(k_img, (r, n_patches, model_cfg.d_model)).astype(
+                model_cfg.compute_dtype
+            )
+        )
+
+    q = make_queue(r)
+    q = push_events(
+        q,
+        times=jnp.asarray(arrival, jnp.float32),
+        clients=jnp.arange(r, dtype=jnp.int32),
+        kinds=jnp.full((r,), KIND_ARRIVE, jnp.int32),
+        payloads=jnp.arange(r, dtype=jnp.float32),
+        mask=jnp.ones((r,), bool),
+    )
+    return RequestTrace(
+        arrival_ms=arrival,
+        gen_len=gen,
+        slo_ms=float(cfg.slo_ms),
+        prompts=prompts,
+        patch_embeds=patch_embeds,
+        queue=q,
+    )

@@ -1,0 +1,62 @@
+"""Virtual-clock cost model for the serving engine (§IV.F constants).
+
+The continuous-batching loop is host-driven, so unlike the round engines
+these helpers return plain floats — but every §IV.F constant (cold/warm
+container delay, energy-per-flop, energy-per-byte, cold-start energy)
+comes from the SAME ``FaasSimConfig`` via ``RoundCostModel``, so the
+serving numbers cannot drift from the FL round accounting.
+
+Timing model (single accelerator, MaxText-offline style):
+
+  * a prefill is one serverless *invocation*: it pays the Eq. 4
+    container delay (cold when the engine sat idle past ``keep_alive_ms``,
+    warm otherwise) plus prompt compute, and preempts decode — the
+    engine serializes prefill between decode steps.
+  * a decode step costs a fixed weight-streaming overhead (decode is
+    memory-bound: the whole parameter set crosses HBM once per step
+    regardless of batch) plus the active slots' marginal flops. This is
+    what makes continuous batching pay off in *virtual* time as well as
+    wall time: S slots share one weight stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.sim.des import FaasSimConfig, RoundCostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCostModel:
+    """Virtual latency/energy for serving, on top of ``RoundCostModel``."""
+
+    cost: RoundCostModel = dataclasses.field(default_factory=RoundCostModel)
+    flops_per_s: float = 1e12  # accelerator throughput (sim units)
+    step_overhead_ms: float = 5.0  # per-decode-step weight streaming floor
+    keep_alive_ms: float = 500.0  # container cache window (Eq. 4 gate)
+    tx_bytes_per_token: float = 8.0  # tokens streamed back to the client
+
+    @classmethod
+    def from_faas(cls, cfg: FaasSimConfig, **kw) -> "ServeCostModel":
+        return cls(cost=RoundCostModel(cfg), **kw)
+
+    # -- latency ------------------------------------------------------- #
+    def prefill_ms(self, prompt_flops: float, warm: bool) -> float:
+        """One admission: container delay (Eq. 4) + prompt compute."""
+        return self.cost.invocation_delay_ms(warm) + (
+            prompt_flops / self.flops_per_s * 1e3
+        )
+
+    def decode_step_ms(self, active_flops: float) -> float:
+        """One batched decode step over however many slots are live."""
+        return self.step_overhead_ms + active_flops / self.flops_per_s * 1e3
+
+    # -- energy -------------------------------------------------------- #
+    def prefill_energy_j(self, prompt_flops: float, warm: bool) -> float:
+        e = self.cost.token_energy_j(prompt_flops)
+        return e if warm else e + self.cost.cold_start_energy_j()
+
+    def step_energy_j(self, active_flops: float, n_tokens: int) -> float:
+        """Compute + per-token egress for one decode step (§IV.F E_i)."""
+        return self.cost.token_energy_j(
+            active_flops, tx_bytes=self.tx_bytes_per_token * n_tokens
+        )

@@ -1,0 +1,182 @@
+"""Sequential per-request serving oracle.
+
+The slow reference for the continuous-batching engine (oracle
+discipline): serve the trace one request at a time — prefill, then
+single-slot greedy decode to the request's length — with the SAME
+§IV.F cost accounting. Two contracts hang off it:
+
+  * correctness: the engine's ``attn="dense"`` path must reproduce this
+    oracle's tokens exactly. The oracle's contiguous ``cache_len`` is
+    deliberately ``PagePlan.cache_len`` (= page-table width x page size),
+    so the engine's gathered attention reduces over identically-shaped
+    operands and the match is bitwise, not approximate;
+  * performance: ``benchmarks/serving.py`` measures the continuous
+    engine's wall-clock tokens/sec against this baseline (the >= 2x
+    acceptance gate) — the oracle keeps its tokens device-resident in
+    the same ``(R+1, max_gen)`` buffer with one terminal sync, so the
+    comparison isn't rigged by host transfers.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.models.config import Family
+from repro.models.transformer import Runtime
+from repro.serve.arrivals import RequestTrace
+from repro.serve.costs import ServeCostModel
+from repro.serve.engine import EngineConfig, ServeReport
+from repro.serve.paged import PagePlan, check_family
+
+
+class SequentialOracle:
+    """One-request-at-a-time reference server (batch = 1, no slots)."""
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        cfg: EngineConfig = EngineConfig(),
+        cost: ServeCostModel = ServeCostModel(),
+        runtime: Runtime = Runtime(),
+    ):
+        check_family(model.cfg)
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.cost = cost
+        self.plan = PagePlan.build(
+            model.cfg, cfg.prompt_len, cfg.max_gen,
+            page_size=cfg.page_size, n_patches=cfg.n_patches,
+        )
+        self.is_vlm = model.cfg.family is Family.VLM
+        plan = self.plan
+
+        def prefill(params, batch, out_buf, req):
+            logits, cache = model.prefill(
+                params, batch, cache_len=plan.cache_len, runtime=runtime
+            )
+            first = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+            out_buf = out_buf.at[req, 0].set(first)
+            return cache, first[None, None], out_buf
+
+        def step(params, cache, tok, out_buf, req, idx):
+            logits, cache = model.decode_step(params, cache, tok, runtime)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)  # (1,)
+            out_buf = out_buf.at[req, idx].set(nxt[0])
+            return cache, nxt[:, None], out_buf
+
+        buf_aval = jax.ShapeDtypeStruct(
+            (cfg.max_requests + 1, cfg.max_gen), jnp.int32
+        )
+        i32 = jnp.int32
+        batch_avals = {
+            "tokens": jax.ShapeDtypeStruct((1, plan.prompt_len), i32)
+        }
+        if self.is_vlm:
+            batch_avals["patch_embeds"] = jax.ShapeDtypeStruct(
+                (1, plan.n_patches, model.cfg.d_model),
+                jnp.dtype(model.cfg.compute_dtype),
+            )
+        self._prefill = (
+            jax.jit(prefill, donate_argnums=(2,))
+            .lower(params, batch_avals, buf_aval,
+                   jax.ShapeDtypeStruct((), i32))
+            .compile()
+        )
+        cache_avals = jax.eval_shape(
+            lambda: model.init_cache(1, plan.cache_len)
+        )
+        self._step = (
+            jax.jit(step, donate_argnums=(1, 3))
+            .lower(params, cache_avals,
+                   jax.ShapeDtypeStruct((1, 1), i32), buf_aval,
+                   jax.ShapeDtypeStruct((), i32),
+                   jax.ShapeDtypeStruct((), i32))
+            .compile()
+        )
+        self.n_compiles = {"prefill": 1, "decode": 1}
+
+    # ------------------------------------------------------------------ #
+    def serve(self, trace: RequestTrace) -> ServeReport:
+        cfg, plan, cost = self.cfg, self.plan, self.cost
+        r = trace.n_requests
+        if r > cfg.max_requests:
+            raise ValueError(f"trace of {r} > max_requests={cfg.max_requests}")
+        out_buf = jnp.zeros((cfg.max_requests + 1, cfg.max_gen), jnp.int32)
+        vclock = 0.0
+        last_busy = -math.inf
+        latency = np.full((r,), np.nan)
+        fpt = self.model.flops_per_token(train=False)
+        prompt_flops = fpt * plan.prompt_eff
+        energy = 0.0
+        cold_starts = decode_steps = tokens_generated = 0
+        slo_violations = 0
+
+        wall0 = time.perf_counter()
+        for req in range(r):  # trace arrival times are nondecreasing
+            arrival = float(trace.arrival_ms[req])
+            start = max(vclock, arrival)
+            warm = (start - last_busy) <= cost.keep_alive_ms
+            batch = {"tokens": trace.prompts[req][None]}
+            if self.is_vlm:
+                batch["patch_embeds"] = trace.patch_embeds[req][None]
+            cache, tok, out_buf = self._prefill(
+                self.params, batch, out_buf, np.int32(req)
+            )
+            vclock = start + cost.prefill_ms(prompt_flops, warm)
+            energy += cost.prefill_energy_j(prompt_flops, warm)
+            cold_starts += not warm
+            tokens_generated += 1
+            for i in range(1, int(trace.gen_len[req])):
+                cache, tok, out_buf = self._step(
+                    self.params, cache, tok, out_buf,
+                    np.int32(req), np.int32(i),
+                )
+                decode_steps += 1
+                tokens_generated += 1
+                vclock += cost.decode_step_ms(fpt)
+                energy += cost.step_energy_j(fpt, 1)
+            latency[req] = vclock - arrival
+            slo_violations += latency[req] > trace.slo_ms
+            last_busy = vclock
+
+        tokens_np = np.asarray(jax.block_until_ready(out_buf))[: r]
+        wall = time.perf_counter() - wall0
+        lat_done = latency[~np.isnan(latency)]
+        pct = {
+            f"p{p}": float(np.percentile(lat_done, p)) if lat_done.size else float("nan")
+            for p in (50, 95, 99)
+        }
+        in_slo = int(np.sum(lat_done <= trace.slo_ms))
+        vsec = max(vclock / 1e3, 1e-9)
+        return ServeReport(
+            n_requests=r,
+            completed=r,
+            rejected=0,
+            slo_violations=slo_violations,
+            tokens_generated=tokens_generated,
+            decode_steps=decode_steps,
+            prefills=r,
+            cold_starts=cold_starts,
+            virtual_ms=vclock,
+            wall_s=wall,
+            latency_ms=latency,
+            percentiles=pct,
+            goodput_rps=in_slo / vsec,
+            tokens_per_s=tokens_generated / vsec,
+            tokens_per_wall_s=tokens_generated / max(wall, 1e-9),
+            energy_j=energy,
+            energy_per_token_j=energy / max(tokens_generated, 1),
+            n_compiles=dict(self.n_compiles),
+            counters=dict(
+                arrived=r, completed=r, rejected=0, in_flight=0, waiting=0
+            ),
+            tokens=tokens_np,
+            gen_len=trace.gen_len.copy(),
+        )

@@ -1,0 +1,57 @@
+"""Arrival-rate sweeps over the serving engine (compile-once discipline).
+
+Mirrors ``sim/sweep.py``'s contract at the serving layer: the swept
+quantity (offered load) is trace DATA, never program structure, so one
+``ContinuousBatchingEngine`` — two AOT executables — serves the entire
+grid. ``sweep_rates`` asserts ``n_compiles`` is unchanged afterwards,
+which is the same "grid rides one executable" property the round-sweep
+subsystem enforces for lifted scheduler/cost numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.serve.arrivals import TraceConfig, make_trace
+from repro.serve.engine import ContinuousBatchingEngine, ServeReport
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepServeResult:
+    rates_per_s: np.ndarray  # (G,)
+    reports: list[ServeReport]
+
+    def column(self, name: str) -> np.ndarray:
+        """(G,) array of one scalar report field (e.g. 'goodput_rps')."""
+        vals = []
+        for rep in self.reports:
+            v = getattr(rep, name)
+            vals.append(v["p95"] if name == "percentiles" else v)
+        return np.asarray(vals, np.float64)
+
+
+def sweep_rates(
+    engine: ContinuousBatchingEngine,
+    trace_cfg: TraceConfig,
+    rates_per_s,
+    seed: int = 0,
+) -> SweepServeResult:
+    """Serve one trace per offered load; one compile for the whole grid."""
+    before = dict(engine.n_compiles)
+    reports = []
+    for g, rate in enumerate(rates_per_s):
+        cfg = dataclasses.replace(trace_cfg, rate_per_s=float(rate))
+        trace = make_trace(
+            jax.random.PRNGKey(seed + g), cfg, engine.model.cfg,
+            n_patches=engine.plan.n_patches or 8,
+        )
+        reports.append(engine.serve(trace))
+    assert engine.n_compiles == before, (
+        f"arrival-rate sweep recompiled: {before} -> {engine.n_compiles}"
+    )
+    return SweepServeResult(
+        rates_per_s=np.asarray(list(rates_per_s), np.float64),
+        reports=reports,
+    )

@@ -153,6 +153,30 @@ class RoundCostModel:
         )
         return e * selected
 
+    # ------------------------------------------------------------------ #
+    # Serving accounting (§IV.F applied to inference traffic).
+    #
+    # The continuous-batching engine (repro.serve) drives its virtual
+    # clock host-side, so these return plain floats from the SAME §IV.F
+    # constants the round accounting above consumes — energy-per-token
+    # and cold-start numbers cannot drift between the FL engines and the
+    # serving engine because both read one FaasSimConfig.
+    # ------------------------------------------------------------------ #
+    def invocation_delay_ms(self, warm: bool) -> float:
+        """Eq. 4 container delay for ONE serving invocation (a prefill)."""
+        cs = self.cfg.cold_start
+        return float(cs.delta_warm_ms if warm else cs.delta_cold_ms)
+
+    def token_energy_j(self, flops: float, tx_bytes: float = 0.0) -> float:
+        """§IV.F energy for ``flops`` of decode compute + ``tx_bytes``
+        streamed out (the E_i = C_cpu·CPU + C_tx·TX formula, per token)."""
+        e = self.cfg.energy
+        return float(e.c_cpu * flops + e.c_tx * tx_bytes)
+
+    def cold_start_energy_j(self) -> float:
+        """e_c in §IV.F — paid by each cold serving prefill."""
+        return float(self.cfg.energy.cold_start_energy_j)
+
     def round_costs(
         self,
         profiles,

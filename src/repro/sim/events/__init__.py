@@ -20,6 +20,7 @@ does not become circular.
 from repro.sim.events.churn import ChurnConfig, available_mask, step_churn
 from repro.sim.events.engine import AsyncConfig, AsyncFedFogSimulator
 from repro.sim.events.queue import (
+    KIND_ARRIVE,
     KIND_COMPLETE,
     KIND_DEADLINE,
     KIND_DISPATCH,
@@ -44,6 +45,7 @@ __all__ = [
     "AsyncFedFogSimulator",
     "ChurnConfig",
     "EventQueue",
+    "KIND_ARRIVE",
     "KIND_COMPLETE",
     "KIND_DEADLINE",
     "KIND_DISPATCH",

@@ -32,6 +32,7 @@ KIND_DISPATCH = 0  # server admits a cohort through the scheduler gate
 KIND_COMPLETE = 1  # one client's update arrives at the server
 KIND_RETRY = 2  # a failed invocation relaunches after backoff (faults)
 KIND_DEADLINE = 3  # server round deadline fires; overdue work is shed
+KIND_ARRIVE = 4  # a serving request arrives (repro.serve arrival process)
 
 
 class EventQueue(NamedTuple):
